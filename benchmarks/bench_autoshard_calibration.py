@@ -1,0 +1,55 @@
+"""Calibration of the analytic roofline model (`core/autoshard`) against
+the measured dry-run artifacts — the credibility check for using the
+analytic model as the paper-Eq.-4 duration source in the continuum
+scheduler.
+
+For each single-pod baseline cell: compare analytic compute_s (which
+excludes remat/dispatch overheads by design) against measured
+useful-compute time MODEL_FLOPS/(chips·peak), and analytic vs measured
+bottleneck class. Reported as CSV rows; mismatches are informative, not
+failures (the analytic model is a *scheduling* estimate)."""
+
+from __future__ import annotations
+
+import json
+
+from benchmarks.bench_roofline import RESULTS, analyze_record
+from repro.configs.shapes import SHAPES
+from repro.core.autoshard import Layout, estimate
+from repro.models.registry import get_model
+
+PEAK = 197e12
+
+
+def run() -> list[tuple]:
+    rows = []
+    agree = 0
+    total = 0
+    for f in sorted(RESULTS.glob("*__single.json")):
+        if not f.stem.endswith("__single"):
+            continue
+        rec = json.loads(f.read_text())
+        a = analyze_record(rec)
+        if a is None:
+            continue
+        cfg = get_model(rec["arch"]).config
+        suite = SHAPES[rec["shape"]]
+        est = estimate(cfg, suite, Layout(dp=16, tp=16))
+        measured_useful = rec["model_flops_total"] / (256 * PEAK)
+        ratio = est.compute_s / max(measured_useful, 1e-12)
+        same_bound = est.bottleneck == a["bottleneck"]
+        agree += same_bound
+        total += 1
+        rows.append((
+            f"calib_{rec['arch']}_{rec['shape']}",
+            est.step_s * 1e6,
+            f"analytic_bound={est.bottleneck};measured_bound={a['bottleneck']};"
+            f"compute_ratio={ratio:.2f};agree={same_bound}",
+        ))
+    rows.append(("calib_bottleneck_agreement", 0.0, f"{agree}/{total}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,116 @@
+"""§Roofline generator: derive the three roofline terms per (arch × shape ×
+mesh) from the dry-run artifacts in results/dryrun/.
+
+    compute_s    = HLO_FLOPs(total)        / (chips · 197 TFLOP/s)
+    memory_s     = HLO_bytes(total)        / (chips · 819 GB/s)
+    collective_s = collective_bytes(total) / (chips · 50 GB/s/link)
+
+``cost_analysis()`` reports per-device numbers for the SPMD-partitioned
+module (verified in the probe), so total = per_device × chips and every
+term reduces to per-device / per-chip-rate.  Collective bytes are the
+result-operand sizes of all-gather/all-reduce/reduce-scatter/all-to-all/
+collective-permute ops in the partitioned HLO (per-device shard sizes).
+
+Also reports MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (serve) and
+the useful-compute ratio MODEL_FLOPS / HLO_FLOPs — remat/dispatch waste
+shows up here.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+PEAK = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = 1
+    for v in rec["mesh_shape"].values():
+        chips *= v
+    if "hlo_costs" in rec:  # trip-count-aware parse (see launch/hlo_costs.py)
+        flops_dev = rec["hlo_costs"]["flops"]
+        bytes_dev = rec["hlo_costs"]["bytes"]
+        coll_dev = rec["hlo_costs"]["collective_total_bytes"]
+    else:  # legacy records: raw cost_analysis (while bodies counted once)
+        flops_dev = rec["cost"]["flops_per_device"]
+        bytes_dev = rec["cost"]["bytes_accessed_per_device"]
+        coll_dev = rec["collectives"]["total_bytes"]
+    compute_s = flops_dev / PEAK
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    hlo_total = flops_dev * chips
+    ratio = rec["model_flops_total"] / hlo_total if hlo_total else float("nan")
+    step_s = max(terms.values())
+    # roofline fraction: useful model FLOP/s achieved at the bound vs peak
+    mfu_bound = rec["model_flops_total"] / (step_s * chips * PEAK) if step_s else 0.0
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": bottleneck,
+        "model_flops": rec["model_flops_total"],
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": ratio,
+        "roofline_fraction": mfu_bound,
+        "peak_bytes_per_device": rec["memory"].get("peak_bytes"),
+        "arg_bytes_per_device": rec["memory"].get("argument_bytes"),
+        "collective_counts": rec["collectives"]["counts"],
+    }
+
+
+def load_all(mesh: str = "single", tag: str = "") -> list[dict]:
+    rows = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}{tag}.json")):
+        if tag == "" and not f.stem.endswith(f"__{mesh}"):
+            continue  # don't mix tagged (hillclimb) records into the baseline
+        rec = json.loads(f.read_text())
+        a = analyze_record(rec)
+        if a:
+            rows.append(a)
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | chips | compute_s | memory_s | collective_s | "
+           "bottleneck | useful ratio | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['chips']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+            f"| {r['bottleneck']} | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.1%} |"
+        )
+    return "\n".join(lines)
+
+
+def run() -> list[tuple]:
+    rows = load_all("single")
+    out = []
+    for r in rows:
+        out.append((
+            f"roofline_{r['arch']}_{r['shape']}",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            f"bottleneck={r['bottleneck']};useful={r['useful_ratio']:.2f};"
+            f"frac={r['roofline_fraction']:.3f}",
+        ))
+    return out
+
+
+if __name__ == "__main__":
+    rows = load_all("single")
+    print(markdown_table(rows))

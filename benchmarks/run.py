@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure plus the roofline
+reader and kernel microbenches.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run            # bounded default set
+    PYTHONPATH=src python -m benchmarks.run --full     # + 5000x5000 scale row
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    from benchmarks import (
+        bench_autoshard_calibration,
+        bench_fig11_quality,
+        bench_kernels,
+        bench_roofline,
+        bench_table6_mri,
+        bench_table9_scale,
+    )
+
+    suites = [
+        ("table6", lambda: bench_table6_mri.run()),
+        ("fig11", lambda: bench_fig11_quality.run(full=full)),
+        ("table9", lambda: bench_table9_scale.run(full=full)),
+        ("kernels", lambda: bench_kernels.run()),
+        ("roofline", lambda: bench_roofline.run()),
+        ("autoshard_calibration", lambda: bench_autoshard_calibration.run()),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        t0 = time.perf_counter()
+        try:
+            for row in fn():
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            failures += 1
+            print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)
+        print(f"{name}_suite_total,{(time.perf_counter() - t0) * 1e6:.0f},", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

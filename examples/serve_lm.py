@@ -1,0 +1,64 @@
+"""Serving example: continuous-batching engine over a reduced model, with
+request placement across replicas chosen by the paper's scheduler.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch qwen2.5-3b]
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core.continuum import Job, schedule_jobs
+from repro.models.registry import get_model
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    api = get_model(args.arch)
+    cfg = api.reduced
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(api, cfg, params, EngineConfig(max_slots=4, max_len=128))
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=int(rng.integers(4, 12))).astype(np.int32),
+                max_new_tokens=args.new_tokens)
+        for i in range(args.requests)
+    ]
+    for r in reqs:
+        engine.submit(r)
+
+    t0 = time.perf_counter()
+    engine.run_until_done()
+    dt = time.perf_counter() - t0
+    total = sum(len(r.output) for r in reqs)
+    print(f"served {len(reqs)} requests / {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s, continuous batching over 4 slots)")
+    for r in reqs[:3]:
+        print(f"  req {r.rid}: prompt={r.prompt.tolist()} -> {r.output}")
+
+    print("\n=== replica placement via the paper's scheduler ===")
+    jobs = tuple(
+        Job(f"serve-shard-{i}", args.arch, "decode_32k", steps=100 + 50 * i)
+        for i in range(6)
+    )
+    report, system = schedule_jobs(jobs, num_pods=2, slices_per_pod=2, technique="heft")
+    names = [n.name for n in system.nodes]
+    for j, job in enumerate(jobs):
+        a = int(report.schedule.assignment[j])
+        print(f"  {job.name:16s} -> {names[a]:12s} "
+              f"[{report.schedule.start[j]:8.2f}s, {report.schedule.finish[j]:8.2f}s]")
+    print(f"  fleet makespan: {report.schedule.makespan:.2f}s "
+          f"(technique={report.schedule.technique})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""The paper's primary contribution: system & workload modeling plus
+optimization-driven mapping/scheduling for the compute continuum."""
+
+from repro.core.evaluator import ObjectiveWeights, Schedule, evaluate_assignment
+from repro.core.solver import ALL_TECHNIQUES, SolveReport, compare_techniques, solve, solve_problem
+from repro.core.system_model import (
+    Cluster,
+    DataCenter,
+    Node,
+    System,
+    make_system,
+    mri_system,
+    synthetic_system,
+    system_from_json,
+    system_to_json,
+    tpu_fleet,
+)
+from repro.core.validate import verify_schedule
+from repro.core.workload_model import (
+    ScheduleProblem,
+    Task,
+    Workflow,
+    Workload,
+    build_problem,
+    mri_w1,
+    mri_w2,
+    mri_workload,
+    random_layered_workflow,
+    synthetic_workload,
+    testcase1_workloads,
+    workload_from_json,
+    workload_to_json,
+)
+
+__all__ = [
+    "ALL_TECHNIQUES",
+    "Cluster",
+    "DataCenter",
+    "Node",
+    "ObjectiveWeights",
+    "Schedule",
+    "ScheduleProblem",
+    "SolveReport",
+    "System",
+    "Task",
+    "Workflow",
+    "Workload",
+    "build_problem",
+    "compare_techniques",
+    "evaluate_assignment",
+    "make_system",
+    "mri_system",
+    "mri_w1",
+    "mri_w2",
+    "mri_workload",
+    "random_layered_workflow",
+    "solve",
+    "solve_problem",
+    "synthetic_system",
+    "synthetic_workload",
+    "system_from_json",
+    "system_to_json",
+    "testcase1_workloads",
+    "tpu_fleet",
+    "verify_schedule",
+    "workload_from_json",
+    "workload_to_json",
+]

@@ -1,0 +1,153 @@
+"""Heuristic ("H") techniques from the paper's Table VII: HEFT and OLB.
+
+Both emit an *assignment* (task → node); the canonical timing is always
+recomputed by the shared oracle (:func:`repro.core.evaluator.evaluate_assignment`)
+so that every technique is scored under identical semantics.
+
+Vectorized over nodes per task step — a 5000×5000 instance finishes in
+seconds (the paper's serial implementation reports 560 s; see EXPERIMENTS.md
+§Perf for the side-by-side).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.evaluator import ObjectiveWeights, Schedule, evaluate_assignment
+from repro.core.workload_model import ScheduleProblem
+
+_INF = 1e30
+
+
+def _mean_durations(problem: ScheduleProblem) -> np.ndarray:
+    """Mean duration per task over feasible nodes (HEFT's w̄_j)."""
+    d = np.where(problem.feasible, problem.durations, np.nan)
+    with np.errstate(invalid="ignore"):
+        m = np.nanmean(d, axis=1)
+    return np.where(np.isnan(m), problem.durations.mean(axis=1), m)
+
+
+def upward_ranks(problem: ScheduleProblem) -> np.ndarray:
+    """HEFT upward rank: rank(j) = w̄_j + max_{succ s} (c̄_js + rank(s))."""
+    T = problem.num_tasks
+    wbar = _mean_durations(problem)
+    off = problem.dtr[np.isfinite(problem.dtr)]
+    mean_rate = float(off.mean()) if off.size else _INF
+    cbar = problem.data / max(mean_rate, 1e-30)  # mean comm cost of task j's output
+    rank = wbar.copy()
+    succs: list[list[int]] = [[] for _ in range(T)]
+    for s, d in problem.edges:
+        succs[int(s)].append(int(d))
+    for j in range(T - 1, -1, -1):  # reverse topo order
+        if succs[j]:
+            rank[j] = wbar[j] + max(cbar[j] + rank[s] for s in succs[j])
+    return rank
+
+
+class _CoreState:
+    """Vectorized per-node core-free-time state ([N, Cmax], +inf padding)."""
+
+    def __init__(self, problem: ScheduleProblem):
+        caps = problem.node_cores.astype(np.int64)
+        self.caps = caps
+        cmax = int(max(min(caps.max(initial=1), 512), problem.cores.max(initial=1), 1))
+        self.cmax = cmax
+        self.free = np.full((problem.num_nodes, cmax), _INF, dtype=np.float64)
+        for i, c in enumerate(caps):
+            self.free[i, : min(int(c), cmax)] = 0.0
+
+    def kth_free(self, c: np.ndarray) -> np.ndarray:
+        """Earliest time each node has ``c_i`` cores free. c: [N] ints >= 1."""
+        srt = np.sort(self.free, axis=1)
+        idx = np.clip(c - 1, 0, self.cmax - 1)
+        return srt[np.arange(srt.shape[0]), idx]
+
+    def commit(self, i: int, c: int, finish: float) -> None:
+        row = self.free[i]
+        idx = np.argsort(row, kind="stable")[: max(1, c)]
+        row[idx] = finish
+
+
+def _ready_times(
+    problem: ScheduleProblem,
+    j: int,
+    assignment: np.ndarray,
+    finish: np.ndarray,
+) -> np.ndarray:
+    """Ready time of task j on every node ([N]), Eq. (12) with Eq. (5)."""
+    N = problem.num_nodes
+    ready = np.full(N, problem.release[j], dtype=np.float64)
+    for p in problem.pred_matrix[j]:
+        if p < 0:
+            continue
+        ip = int(assignment[p])
+        rate = problem.dtr[ip]  # [N] rates from node ip to every node
+        transfer = np.where(np.isfinite(rate), problem.data[p] / np.maximum(rate, 1e-30), _INF)
+        transfer[ip] = 0.0
+        ready = np.maximum(ready, finish[p] + transfer)
+    return ready
+
+
+def heft(
+    problem: ScheduleProblem,
+    weights: ObjectiveWeights = ObjectiveWeights(),
+) -> Schedule:
+    """Heterogeneous Earliest Finish Time [36] under core-granular capacity."""
+    t0 = time.perf_counter()
+    T = problem.num_tasks
+    rank = upward_ranks(problem)
+    # decreasing rank is a valid topological order for positive durations;
+    # stable tie-break by topo index keeps it valid in general
+    order = np.lexsort((np.arange(T), -rank))
+    assignment = np.zeros(T, dtype=np.int64)
+    finish = np.zeros(T)
+    state = _CoreState(problem)
+    c_need = np.maximum(problem.cores.astype(np.int64), 1)
+
+    for j in order:
+        ready = _ready_times(problem, j, assignment, finish)
+        c = np.minimum(c_need[j], np.maximum(state.caps, 1))
+        kth = state.kth_free(c)
+        start = np.maximum(ready, kth)
+        eft = start + problem.durations[j]
+        eft = np.where(problem.feasible[j], eft, _INF)
+        i = int(np.argmin(eft))
+        assignment[j] = i
+        finish[j] = eft[i]
+        state.commit(i, int(c[i]), float(eft[i]))
+
+    sched = evaluate_assignment(problem, assignment, weights, technique="heft")
+    sched.solve_time = time.perf_counter() - t0
+    return sched
+
+
+def olb(
+    problem: ScheduleProblem,
+    weights: ObjectiveWeights = ObjectiveWeights(),
+) -> Schedule:
+    """Opportunistic Load Balancing [38]: next task goes to the node that is
+    available soonest, ignoring execution time."""
+    t0 = time.perf_counter()
+    T = problem.num_tasks
+    assignment = np.zeros(T, dtype=np.int64)
+    finish = np.zeros(T)
+    state = _CoreState(problem)
+    c_need = np.maximum(problem.cores.astype(np.int64), 1)
+
+    for j in range(T):  # topo order
+        ready = _ready_times(problem, j, assignment, finish)
+        c = np.minimum(c_need[j], np.maximum(state.caps, 1))
+        kth = state.kth_free(c)
+        avail = np.maximum(ready, kth)
+        avail = np.where(problem.feasible[j], avail, _INF)
+        i = int(np.argmin(avail))
+        assignment[j] = i
+        f = avail[i] + problem.durations[j, i]
+        finish[j] = f
+        state.commit(i, int(c[i]), float(f))
+
+    sched = evaluate_assignment(problem, assignment, weights, technique="olb")
+    sched.solve_time = time.perf_counter() - t0
+    return sched

@@ -1,0 +1,136 @@
+"""Unified solver API over every technique of the paper's Table VII.
+
+``solve(system, workload, technique=...)`` builds the dense
+:class:`ScheduleProblem` and dispatches; ``technique="auto"`` implements the
+paper's recommended hybrid (conclusion §VII): exact MILP under a size/time
+threshold, meta-heuristic in the mid range, heuristic at scale — "balancing
+optimality and computational efficiency".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core import heuristics, metaheuristics
+from repro.core.evaluator import ObjectiveWeights, Schedule
+from repro.core.milp import MilpSizeError, solve_milp
+from repro.core.workload_model import ScheduleProblem, Workload, build_problem
+from repro.core.system_model import System
+
+
+@dataclasses.dataclass
+class SolveReport:
+    schedule: Schedule
+    problem: ScheduleProblem
+    history: np.ndarray | None = None
+    fallbacks: tuple[str, ...] = ()
+
+
+def _run_heuristic(name: str, problem, weights, **kw) -> SolveReport:
+    fn = {"heft": heuristics.heft, "olb": heuristics.olb}[name]
+    return SolveReport(schedule=fn(problem, weights), problem=problem)
+
+
+def _run_mh(name: str, problem, weights, **kw) -> SolveReport:
+    res = metaheuristics.TECHNIQUES[name](problem, weights, **kw)
+    return SolveReport(schedule=res.schedule, problem=problem, history=res.history)
+
+
+def _run_milp(name: str, problem, weights, **kw) -> SolveReport:
+    capacity_mode = "static" if name == "milp-static" else "event"
+    sched = solve_milp(problem, weights, capacity_mode=capacity_mode, **kw)
+    return SolveReport(schedule=sched, problem=problem)
+
+
+_DISPATCH: dict[str, Callable[..., SolveReport]] = {
+    "milp": _run_milp,
+    "milp-static": _run_milp,
+    "heft": _run_heuristic,
+    "olb": _run_heuristic,
+    "ga": _run_mh,
+    "pso": _run_mh,
+    "sa": _run_mh,
+    "aco": _run_mh,
+}
+
+ALL_TECHNIQUES = tuple(_DISPATCH)
+
+
+def solve_problem(
+    problem: ScheduleProblem,
+    technique: str = "auto",
+    weights: ObjectiveWeights = ObjectiveWeights(),
+    *,
+    milp_task_threshold: int = 25,
+    mh_task_threshold: int = 600,
+    milp_time_limit: float = 30.0,
+    **kwargs: Any,
+) -> SolveReport:
+    if technique != "auto":
+        if technique not in _DISPATCH:
+            raise KeyError(f"unknown technique {technique!r}; options {sorted(_DISPATCH)}")
+        return _DISPATCH[technique](technique, problem, weights, **kwargs)
+
+    # paper-style hybrid: exact when small, approximate when large
+    fallbacks: list[str] = []
+    if problem.num_tasks <= milp_task_threshold:
+        try:
+            rep = _run_milp("milp", problem, weights, time_limit=milp_time_limit)
+            if rep.schedule.status.startswith(("optimal", "feasible")):
+                return rep
+            fallbacks.append(f"milp:{rep.schedule.status}")
+        except (MilpSizeError, ValueError) as e:  # pragma: no cover - defensive
+            fallbacks.append(f"milp:{e}")
+    if problem.num_tasks <= mh_task_threshold:
+        rep = _run_mh("ga", problem, weights, **kwargs)
+        if rep.schedule.violations == 0:
+            rep.fallbacks = tuple(fallbacks)
+            return rep
+        fallbacks.append("ga:violations")
+    rep = _run_heuristic("heft", problem, weights)
+    rep.fallbacks = tuple(fallbacks)
+    return rep
+
+
+def solve(
+    system: System,
+    workload: Workload,
+    technique: str = "auto",
+    weights: ObjectiveWeights = ObjectiveWeights(),
+    **kwargs: Any,
+) -> SolveReport:
+    problem = build_problem(system, workload)
+    return solve_problem(problem, technique, weights, **kwargs)
+
+
+def compare_techniques(
+    system: System,
+    workload: Workload,
+    techniques: tuple[str, ...] = ("milp", "heft", "olb", "ga", "pso", "sa", "aco"),
+    weights: ObjectiveWeights = ObjectiveWeights(),
+    **kwargs: Any,
+) -> dict[str, Schedule]:
+    """Run several techniques on one problem — the engine behind the
+    Fig. 11 / Table IX benchmarks."""
+    problem = build_problem(system, workload)
+    out: dict[str, Schedule] = {}
+    for t in techniques:
+        try:
+            out[t] = solve_problem(problem, t, weights, **kwargs).schedule
+        except MilpSizeError:
+            out[t] = Schedule(
+                assignment=np.zeros(problem.num_tasks, dtype=np.int64),
+                start=np.zeros(problem.num_tasks),
+                finish=np.zeros(problem.num_tasks),
+                makespan=float("nan"),
+                usage=float("nan"),
+                objective=float("nan"),
+                violations=-1,
+                technique=t,
+                status="skipped(size)",
+            )
+    return out

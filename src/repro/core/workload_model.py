@@ -1,0 +1,449 @@
+"""Workload model (paper §IV-B2).
+
+Workloads ``L = {W_1..W_w}``; a workflow ``W = ({T_1..T_|T|}, s)`` is a DAG of
+tasks; a task ``T = {R, F, U, δ}`` carries requested resources, required
+features, resource usage and dependencies (Table II).
+
+The solver-facing view is :class:`ScheduleProblem`, a dense array bundle
+(durations ``d_ij`` per Eq. 4, transfer sizes for Eq. 5, feasibility per
+Eq. 1/2) consumed by every technique in ``repro.core.solver``.
+
+JSON I/O follows the paper's Fig. 8 workflow format.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.system_model import System
+
+BIG_PENALTY = 1e9  # fitness penalty per constraint violation (metaheuristics)
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """``T = {R, F, U, δ}`` (Table II row 3).
+
+    ``work`` is the requested compute ``R_j`` in Eq. (4): duration on node i
+    is ``work / P_i^2`` unless ``durations`` pins explicit per-node values
+    (the paper's Table V lists explicit ``d_ij`` columns).
+    ``data`` is the produced output size ``R^3_j`` driving Eq. (5) transfers.
+    """
+
+    name: str
+    cores: float = 1.0  # R1
+    memory: float = 0.0  # R2
+    data: float = 0.0  # R3 (output size, transfer numerator in Eq. 5)
+    features: frozenset[str] = frozenset()
+    work: float = 1.0
+    durations: Mapping[str, float] | None = None  # node-name -> duration override
+    deps: tuple[str, ...] = ()  # predecessor task names (δ)
+
+
+@dataclasses.dataclass(frozen=True)
+class Workflow:
+    """``W = ({T}, s)`` (Table II row 2)."""
+
+    name: str
+    tasks: tuple[Task, ...]
+    submission: float = 0.0  # s
+
+    def __post_init__(self) -> None:
+        names = [t.name for t in self.tasks]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate task names in workflow {self.name}")
+        known = set(names)
+        for t in self.tasks:
+            missing = set(t.deps) - known
+            if missing:
+                raise ValueError(f"{self.name}/{t.name}: unknown deps {missing}")
+        if _has_cycle(self.tasks):
+            raise ValueError(f"workflow {self.name} is not a DAG")
+
+    @property
+    def num_tasks(self) -> int:
+        return len(self.tasks)
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """``L`` — a set of workflows (Table II row 1)."""
+
+    workflows: tuple[Workflow, ...]
+
+    @property
+    def num_tasks(self) -> int:
+        return sum(w.num_tasks for w in self.workflows)
+
+
+def _has_cycle(tasks: Sequence[Task]) -> bool:
+    order = topological_order(tasks)
+    return order is None
+
+
+def topological_order(tasks: Sequence[Task]) -> list[int] | None:
+    """Kahn's algorithm over intra-workflow dependency names.
+
+    Returns indices in a valid topological order, or None on a cycle.
+    Deterministic: ties broken by original index.
+    """
+    index = {t.name: i for i, t in enumerate(tasks)}
+    indeg = [0] * len(tasks)
+    succs: list[list[int]] = [[] for _ in tasks]
+    for i, t in enumerate(tasks):
+        for d in t.deps:
+            succs[index[d]].append(i)
+            indeg[i] += 1
+    ready = sorted(i for i, d in enumerate(indeg) if d == 0)
+    order: list[int] = []
+    import heapq
+
+    heap = list(ready)
+    heapq.heapify(heap)
+    while heap:
+        i = heapq.heappop(heap)
+        order.append(i)
+        for s in succs[i]:
+            indeg[s] -= 1
+            if indeg[s] == 0:
+                heapq.heappush(heap, s)
+    return order if len(order) == len(tasks) else None
+
+
+# -----------------------------------------------------------------------------
+# Solver-facing dense problem
+# -----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ScheduleProblem:
+    """Dense array view over (System, Workload) for all solver techniques.
+
+    Tasks from all workflows are concatenated in a global topological order
+    (workflow submission times become per-task release times).
+    """
+
+    # static system
+    node_cores: np.ndarray  # [N]
+    dtr: np.ndarray  # [N, N], +inf diagonal
+    # tasks (topologically ordered!)
+    durations: np.ndarray  # [T, N] — d_ij (Eq. 4 / Table V)
+    cores: np.ndarray  # [T]
+    data: np.ndarray  # [T] — output size (Eq. 5 numerator)
+    feasible: np.ndarray  # [T, N] bool — Eq. (1) features ∧ Eq. (2) capacity
+    release: np.ndarray  # [T] — workflow submission times
+    pred_matrix: np.ndarray  # [T, maxP] int32, -1 padded, indices into topo order
+    edges: np.ndarray  # [E, 2] (src, dst) in topo indices
+    # bookkeeping
+    task_names: list[str]
+    workflow_of: np.ndarray  # [T] int
+    workflow_names: list[str]
+
+    @property
+    def num_tasks(self) -> int:
+        return int(self.durations.shape[0])
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.durations.shape[1])
+
+    @property
+    def usage(self) -> np.ndarray:
+        """U_j in the fixed-resource case (paper §IV-C3: U_j = R_j)."""
+        return self.cores
+
+    def weighted_usage(self) -> np.ndarray:
+        """U_ij per Eq. (3): R_j * (R_i / Σ_i' R_i') — heterogeneous mode.
+
+        Returns [T, N].
+        """
+        share = self.node_cores / float(self.node_cores.sum())
+        return np.outer(self.cores, share)
+
+
+def build_problem(system: System, workload: Workload) -> ScheduleProblem:
+    speeds = system.speed()
+    node_names = [n.name for n in system.nodes]
+    node_cores = system.cores()
+    n = system.num_nodes
+
+    tasks: list[Task] = []
+    wf_of: list[int] = []
+    release: list[float] = []
+    name_of: list[str] = []
+    # global topo order = concat of per-workflow topo orders (workflows are
+    # independent DAGs, so any interleaving is valid; we keep them contiguous)
+    offset = 0
+    global_index: dict[tuple[int, str], int] = {}
+    for w_idx, wf in enumerate(workload.workflows):
+        order = topological_order(wf.tasks)
+        assert order is not None
+        for local in order:
+            t = wf.tasks[local]
+            global_index[(w_idx, t.name)] = offset
+            tasks.append(t)
+            wf_of.append(w_idx)
+            release.append(wf.submission)
+            name_of.append(f"{wf.name}/{t.name}")
+            offset += 1
+
+    t_count = len(tasks)
+    durations = np.zeros((t_count, n), dtype=np.float64)
+    cores = np.zeros(t_count, dtype=np.float64)
+    data = np.zeros(t_count, dtype=np.float64)
+    feasible = np.zeros((t_count, n), dtype=bool)
+    preds: list[list[int]] = [[] for _ in range(t_count)]
+    edges: list[tuple[int, int]] = []
+
+    for gi, (t, w_idx) in enumerate(zip(tasks, wf_of)):
+        cores[gi] = t.cores
+        data[gi] = t.data
+        for i in range(n):
+            if t.durations is not None:
+                # explicit durations are work measured at speed 1.0 (Eq. 4:
+                # d_ij = R_j / P_i) — so monitor-refreshed speeds apply
+                durations[gi, i] = float(
+                    t.durations.get(node_names[i], math.inf)
+                ) / max(speeds[i], 1e-30)
+            else:
+                durations[gi, i] = t.work / max(speeds[i], 1e-30)
+            ok_feat = system.nodes[i].provides(t.features)
+            ok_cap = t.cores <= node_cores[i]
+            ok_dur = math.isfinite(durations[gi, i])
+            feasible[gi, i] = ok_feat and ok_cap and ok_dur
+        for d in t.deps:
+            p = global_index[(w_idx, d)]
+            preds[gi].append(p)
+            edges.append((p, gi))
+
+    maxp = max((len(p) for p in preds), default=1) or 1
+    pred_matrix = -np.ones((t_count, maxp), dtype=np.int32)
+    for gi, ps in enumerate(preds):
+        pred_matrix[gi, : len(ps)] = ps
+
+    return ScheduleProblem(
+        node_cores=node_cores,
+        dtr=system.dtr,
+        durations=durations,
+        cores=cores,
+        data=data,
+        feasible=feasible,
+        release=np.asarray(release, dtype=np.float64),
+        pred_matrix=pred_matrix,
+        edges=np.asarray(edges, dtype=np.int32).reshape(-1, 2),
+        task_names=name_of,
+        workflow_of=np.asarray(wf_of, dtype=np.int32),
+        workflow_names=[w.name for w in workload.workflows],
+    )
+
+
+# -----------------------------------------------------------------------------
+# JSON I/O — paper Fig. 8 format
+# -----------------------------------------------------------------------------
+
+def _unwrap(v: Any) -> Any:
+    if isinstance(v, list) and len(v) == 1:
+        return v[0]
+    return v
+
+
+def workflow_from_json(name: str, spec: Mapping[str, Any], submission: float = 0.0) -> Workflow:
+    tasks = []
+    for tname, tspec in spec["tasks"].items():
+        durations = None
+        dur = tspec.get("duration")
+        work = 1.0
+        if isinstance(dur, Mapping):
+            durations = {k: float(v) for k, v in dur.items()}
+        elif dur is not None:
+            work = float(_unwrap(dur))
+        tasks.append(
+            Task(
+                name=tname,
+                cores=float(_unwrap(tspec.get("cores", 1))),
+                memory=float(_unwrap(tspec.get("memory_required", 0))),
+                data=float(_unwrap(tspec.get("data", 0))),
+                features=frozenset(tspec.get("features", [])),
+                work=work,
+                durations=durations,
+                deps=tuple(tspec.get("dependencies", [])),
+            )
+        )
+    return Workflow(name=name, tasks=tuple(tasks), submission=submission)
+
+
+def workload_from_json(obj: Mapping[str, Any] | str) -> Workload:
+    if isinstance(obj, str):
+        obj = json.loads(obj)
+    wfs = []
+    for name, spec in obj.items():
+        wfs.append(workflow_from_json(name, spec, float(_unwrap(spec.get("submission", 0.0)))))
+    return Workload(workflows=tuple(wfs))
+
+
+def workload_to_json(workload: Workload) -> dict:
+    out: dict[str, Any] = {}
+    for wf in workload.workflows:
+        tasks: dict[str, Any] = {}
+        for t in wf.tasks:
+            tasks[t.name] = {
+                "cores": [t.cores],
+                "memory_required": [t.memory],
+                "features": sorted(t.features),
+                "data": t.data,
+                "duration": dict(t.durations) if t.durations is not None else [t.work],
+                "dependencies": list(t.deps),
+            }
+        out[wf.name] = {"submission": wf.submission, "tasks": tasks}
+    return out
+
+
+# -----------------------------------------------------------------------------
+# Reference workloads — Table V (MRI) and STGS-style / random generators
+# -----------------------------------------------------------------------------
+
+def mri_w1() -> Workflow:
+    """W1 — MRI serial workflow (Table V / Fig. 2b): T1 -> T2 -> T3."""
+    d3 = lambda v: {"N1": v, "N2": v, "N3": v}
+    return Workflow(
+        "W1",
+        (
+            Task("T1", cores=8, data=2, features=frozenset({"F1"}), durations=d3(3.0)),
+            Task("T2", cores=12, data=5, features=frozenset({"F1", "F2"}), durations=d3(5.0), deps=("T1",)),
+            Task("T3", cores=12, data=8, features=frozenset({"F1", "F2"}), durations=d3(2.0), deps=("T2",)),
+        ),
+    )
+
+
+def mri_w2() -> Workflow:
+    """W2 — MRI parallel workflow (Table V): diamond T1 -> {T2, T3} -> T4."""
+    d3 = lambda v: {"N1": v, "N2": v, "N3": v}
+    return Workflow(
+        "W2",
+        (
+            Task("T1", cores=8, data=2, features=frozenset({"F1"}), durations=d3(3.0)),
+            Task("T2", cores=12, data=5, features=frozenset({"F1", "F2"}), durations=d3(5.0), deps=("T1",)),
+            Task("T3", cores=32, data=5, features=frozenset({"F1", "F2"}), durations=d3(2.0), deps=("T1",)),
+            Task("T4", cores=12, data=10, features=frozenset({"F1", "F2"}), durations=d3(2.0), deps=("T2", "T3")),
+        ),
+    )
+
+
+def mri_workload() -> Workload:
+    return Workload((mri_w1(), mri_w2()))
+
+
+def random_layered_workflow(
+    num_tasks: int,
+    *,
+    name: str = "Wr",
+    seed: int = 0,
+    max_width: int = 4,
+    density: float = 0.35,
+    comm: bool = True,
+    feature_pool: Sequence[str] = ("F1", "F2"),
+    max_cores: int = 16,
+) -> Workflow:
+    """Layered random DAG à la the paper's random workflows W3/W4.
+
+    Each task may depend on tasks from the previous 1–2 layers with
+    probability ``density`` (at least one predecessor for non-root layers,
+    guaranteeing a connected-ish DAG).
+    """
+    rng = np.random.default_rng(seed)
+    layers: list[list[int]] = []
+    remaining = num_tasks
+    idx = 0
+    while remaining > 0:
+        width = int(min(remaining, rng.integers(1, max_width + 1)))
+        layers.append(list(range(idx, idx + width)))
+        idx += width
+        remaining -= width
+    tasks: list[Task] = []
+    for li, layer in enumerate(layers):
+        for t in layer:
+            deps: list[str] = []
+            if li > 0:
+                cands = layers[li - 1] + (layers[li - 2] if li > 1 else [])
+                for c in cands:
+                    if rng.random() < density:
+                        deps.append(f"T{c}")
+                if not deps:
+                    deps.append(f"T{rng.choice(layers[li - 1])}")
+            tasks.append(
+                Task(
+                    name=f"T{t}",
+                    cores=float(rng.integers(1, max_cores + 1)),
+                    data=float(rng.integers(1, 9)) if comm else 0.0,
+                    features=frozenset(
+                        rng.choice(list(feature_pool), size=rng.integers(1, len(feature_pool) + 1), replace=False)
+                    ) if feature_pool else frozenset(),
+                    work=float(rng.integers(1, 9)),
+                    deps=tuple(deps),
+                )
+            )
+    return Workflow(name=name, tasks=tuple(tasks))
+
+
+def stgs_workflows() -> dict[str, Workflow]:
+    """Stand-ins for the paper's Standard Task Graph Set workflows (Fig. 10).
+
+    The real STGS graphs are not redistributable offline; we synthesize
+    workflows with the paper's reported sizes and properties:
+
+    * W5_STGS1 (11 tasks) — no data-transfer times (comm-free)
+    * W6_STGS2 (12 tasks) — with data-transfer times
+    * W7_STGS3 (11 tasks) — dense connections, default transfer cost
+    """
+    w5 = random_layered_workflow(11, name="W5_STGS1", seed=5, comm=False, density=0.3)
+    w6 = random_layered_workflow(12, name="W6_STGS2", seed=6, comm=True, density=0.3)
+    w7 = random_layered_workflow(11, name="W7_STGS3", seed=7, comm=True, density=0.9)
+    return {"W5_STGS1": w5, "W6_STGS2": w6, "W7_STGS3": w7}
+
+
+def testcase1_workloads() -> dict[str, Workflow]:
+    """The seven workflows of the paper's Test Case I (Table VIII)."""
+    out = {
+        "W1_Se_(3Nx3T)": mri_w1(),
+        "W2_Pa_(3Nx4T)": mri_w2(),
+        "W3_Ra_(3Nx5T)": random_layered_workflow(5, name="W3_Ra", seed=3),
+        "W4_Ra_(3Nx10T)": random_layered_workflow(10, name="W4_Ra", seed=4),
+    }
+    stgs = stgs_workflows()
+    out["W5_STGS1_(3Nx11T)"] = stgs["W5_STGS1"]
+    out["W6_STGS2_(3Nx12T)"] = stgs["W6_STGS2"]
+    out["W7_STGS3_(3Nx11T)"] = stgs["W7_STGS3"]
+    return out
+
+
+def synthetic_workload(
+    num_tasks: int,
+    *,
+    seed: int = 0,
+    num_workflows: int = 1,
+    comm: bool = True,
+    max_cores: int = 16,
+) -> Workload:
+    """Synthetic workload for the Table IX scale tests."""
+    rng = np.random.default_rng(seed)
+    per = [num_tasks // num_workflows] * num_workflows
+    per[-1] += num_tasks - sum(per)
+    wfs = []
+    for w, cnt in enumerate(per):
+        wfs.append(
+            random_layered_workflow(
+                cnt,
+                name=f"W{w}",
+                seed=int(rng.integers(0, 2**31)),
+                comm=comm,
+                max_width=max(2, cnt // 8),
+                max_cores=max_cores,
+                feature_pool=("F1",),  # keep scale tests feasibility-trivial
+            )
+        )
+    return Workload(tuple(wfs))

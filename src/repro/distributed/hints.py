@@ -1,0 +1,64 @@
+"""Activation-sharding hints consulted by model forwards.
+
+Model code stays mesh-agnostic; the launcher installs a PartitionSpec for
+the residual stream (e.g. sequence parallelism: ``P(dp, tp, None)``) and
+the transformer scan body applies ``with_sharding_constraint`` per block.
+``None`` (default) leaves layout decisions entirely to GSPMD — that is the
+baseline the §Perf iterations measure against.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_ACTIVATION_PSPEC: "jax.sharding.PartitionSpec | None" = None
+_MOE_BUFFER_PSPEC: "jax.sharding.PartitionSpec | None" = None
+
+
+def set_activation_pspec(spec) -> None:
+    global _ACTIVATION_PSPEC
+    _ACTIVATION_PSPEC = spec
+
+
+def get_activation_pspec():
+    return _ACTIVATION_PSPEC
+
+
+@contextlib.contextmanager
+def activation_pspec(spec):
+    prev = _ACTIVATION_PSPEC
+    set_activation_pspec(spec)
+    try:
+        yield
+    finally:
+        set_activation_pspec(prev)
+
+
+def constrain(x):
+    """Apply the installed residual-stream constraint (no-op when unset)."""
+    spec = _ACTIVATION_PSPEC
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+@contextlib.contextmanager
+def moe_buffer_pspec(spec):
+    """Sharding for the MoE ``[E, C, d]`` dispatch buffer (dispatch-aware
+    sharding — the §Perf lever that keeps the token scatter axis-local)."""
+    global _MOE_BUFFER_PSPEC
+    prev = _MOE_BUFFER_PSPEC
+    _MOE_BUFFER_PSPEC = spec
+    try:
+        yield
+    finally:
+        _MOE_BUFFER_PSPEC = prev
+
+
+def constrain_moe_buffer(buf):
+    spec = _MOE_BUFFER_PSPEC
+    if spec is None:
+        return buf
+    return jax.lax.with_sharding_constraint(buf, spec)

@@ -1,0 +1,102 @@
+"""GPipe-style pipeline parallelism over ``shard_map`` + ``ppermute``.
+
+The stacked-block parameter layout (scan-over-layers) makes stage splitting
+trivial: stage s owns layers [s·L/S, (s+1)·L/S).  The schedule is the
+classic GPipe loop of ``M + S − 1`` ticks over M microbatches: each tick
+every stage runs its block stack on its current microbatch, then activations
+``ppermute`` one stage forward (compute/communication overlap comes from
+XLA's async collective-permute).
+
+The default 40-cell baseline uses the "pod" axis for DP (DESIGN.md §5); PP
+is a config option (``--pipeline``) exercised by tests on small meshes and
+available for the §Perf iterations.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def pipeline_forward(
+    block_fn: Callable,  # (stage_params, x) -> x
+    stage_params: Ellipsis,  # pytree with leading [num_stages, ...] leaves
+    x_micro: jax.Array,  # [M, mb, S, d] microbatched activations
+    mesh: Mesh,
+    *,
+    stage_axis: str = "stage",
+) -> jax.Array:
+    """Runs the GPipe schedule; returns [M, mb, S, d] final-stage outputs.
+
+    Stage placement: leaf ``stage_params[s]`` lives on mesh slice s of
+    ``stage_axis``; microbatch m enters stage 0 at tick m and exits stage
+    S−1 at tick m + S − 1.
+    """
+    num_stages = mesh.shape[stage_axis]
+    M = x_micro.shape[0]
+    ticks = M + num_stages - 1
+
+    def stage_body(params_local, x_local):
+        # params_local: this stage's block stack ([1, ...] leaves — squeeze)
+        params_local = jax.tree.map(lambda a: a[0], params_local)
+        x_local = x_local[0]  # [M, mb, S, d] local copy of the stream
+        sidx = jax.lax.axis_index(stage_axis)
+
+        buf = jnp.zeros_like(x_local[0])  # current activation held by stage
+        outs = jnp.zeros_like(x_local)
+
+        def tick(carry, t):
+            buf, outs = carry
+            # stage 0 ingests microbatch t (if in range)
+            take = jnp.clip(t, 0, M - 1)
+            injected = jnp.where(
+                (sidx == 0) & (t < M), x_local[take], buf
+            )
+            y = block_fn(params_local, injected)
+            # pass activations forward one stage
+            perm = [(i, (i + 1) % num_stages) for i in range(num_stages)]
+            shifted = jax.lax.ppermute(y, stage_axis, perm)
+            # last stage records its finished microbatch (tick t finishes
+            # microbatch t - (S-1) at the last stage)
+            done_idx = jnp.clip(t - (num_stages - 1), 0, M - 1)
+            outs = jnp.where(
+                (sidx == num_stages - 1) & (t >= num_stages - 1),
+                outs.at[done_idx].set(y),
+                outs,
+            )
+            return (shifted, outs), None
+
+        (buf, outs), _ = jax.lax.scan(tick, (buf, outs), jnp.arange(ticks))
+        # broadcast final outputs from the last stage to all (psum of masked)
+        outs = jnp.where(sidx == num_stages - 1, outs, jnp.zeros_like(outs))
+        outs = jax.lax.psum(outs, stage_axis)
+        return outs[None]
+
+    pspec = jax.tree.map(lambda _: P(stage_axis), stage_params)
+    fn = shard_map(
+        stage_body,
+        mesh=mesh,
+        in_specs=(pspec, P(stage_axis)),
+        out_specs=P(stage_axis),
+        check_rep=False,
+    )
+    # replicate the microbatch stream to every stage (stage 0 consumes it)
+    x_rep = jnp.broadcast_to(x_micro[None], (num_stages, *x_micro.shape))
+    out = fn(stage_params, x_rep)
+    return out[0]
+
+
+def split_stages(stacked_params, num_stages: int):
+    """[L, ...] stacked block params → [num_stages, L/S, ...]."""
+
+    def reshape(a):
+        L = a.shape[0]
+        assert L % num_stages == 0, (L, num_stages)
+        return a.reshape(num_stages, L // num_stages, *a.shape[1:])
+
+    return jax.tree.map(reshape, stacked_params)

@@ -1,0 +1,230 @@
+"""Sharding rule tables: name-based PartitionSpec assignment for every
+architecture family, with divisibility-aware fallbacks.
+
+Strategy (DESIGN.md §5) on mesh ``(data=16, model=16)`` (+ leading ``pod``):
+
+* parameters: FSDP over ``data`` on the d_model-ish dim, TP over ``model``
+  on heads / ffn-hidden / vocab / experts.  Replicated over ``pod``
+  (pure DP across pods → one DCN all-reduce per step, optionally
+  compressed) unless ``fsdp_over_pod`` is set.
+* activations: batch over (``pod``, ``data``); KV caches shard kv-heads
+  over ``model`` when divisible, else sequence; B=1 long-context shards
+  sequence over everything available.
+* every rule checks divisibility and silently degrades to replication on
+  that axis (never a lowering failure — a worse layout is a perf bug, not a
+  correctness bug; the §Perf loop is where layouts get tuned).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    dp_axes: tuple[str, ...] = ("data",)  # batch axes
+    tp_axes: tuple[str, ...] = ("model",)  # tensor-parallel axes
+    fsdp_over_pod: bool = False  # also FSDP params over "pod" (DCN)
+    shard_kv_seq: bool = True  # allow sequence-sharded KV caches
+    # None → FSDP params over dp_axes; () → no FSDP (TP-only params, no
+    # per-layer weight all-gather — the serve-cell §Perf lever)
+    param_fsdp_axes: tuple[str, ...] | None = None
+    sequence_parallel: bool = False  # shard residual-stream seq over tp_axes
+
+    def param_fsdp(self) -> tuple[str, ...]:
+        base = self.dp_axes if self.param_fsdp_axes is None else self.param_fsdp_axes
+        return (("pod",) + base) if self.fsdp_over_pod else base
+
+    def batch_axes(self, mesh: Mesh) -> tuple[str, ...]:
+        axes = tuple(a for a in ("pod",) + self.dp_axes if a in mesh.axis_names)
+        return axes
+
+
+def _axes_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes if a in mesh.axis_names] or [1]))
+
+
+def _fit(mesh: Mesh, axes: tuple[str, ...], dim: int):
+    """Return the axis (or axis tuple) if ``dim`` divides, else None."""
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes:
+        return None
+    if dim % _axes_size(mesh, axes) == 0:
+        return axes if len(axes) > 1 else axes[0]
+    # try shrinking from the left (drop pod first, etc.)
+    for i in range(1, len(axes)):
+        sub = axes[i:]
+        if dim % _axes_size(mesh, sub) == 0:
+            return sub if len(sub) > 1 else sub[0]
+    return None
+
+
+def _norm_path(keypath) -> str:
+    parts = []
+    for k in keypath:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+_IN_RULES = (  # (d_in, out)-shaped matmul weights: FSDP × TP
+    re.compile(r"(attn|self_attn|cross_attn)/(q|k|v)/w$"),
+    re.compile(r"(mlp|moe)?/?(gate|up)/w$"),
+    re.compile(r"in_proj/w$"),
+)
+_OUT_RULES = (  # (in, d_out)-shaped: TP × FSDP
+    re.compile(r"(attn|self_attn|cross_attn)/o/w$"),
+    re.compile(r"down/w$"),
+    re.compile(r"out_proj/w$"),
+)
+
+
+def param_spec(path: str, shape: tuple[int, ...], cfg: ModelConfig, mesh: Mesh,
+               policy: ShardingPolicy) -> P:
+    """PartitionSpec for one parameter leaf (trailing-dims matching; leading
+    stacked-layer dims get None)."""
+    rank = len(shape)
+    fsdp = policy.param_fsdp()
+    tp = policy.tp_axes
+
+    def pad(spec_tail: list) -> P:
+        return P(*([None] * (rank - len(spec_tail)) + spec_tail))
+
+    if path.endswith("embed/tok"):
+        return pad([_fit(mesh, tp, shape[-2]), _fit(mesh, fsdp, shape[-1])])
+    if path.endswith("embed/unembed"):
+        return pad([_fit(mesh, fsdp, shape[-2]), _fit(mesh, tp, shape[-1])])
+    if re.search(r"moe/(gate|up)$", path):  # [E, d, f]
+        e, d, f = shape[-3:]
+        if e % _axes_size(mesh, tp) == 0:
+            return pad([_fit(mesh, tp, e), _fit(mesh, fsdp, d), None])
+        return pad([None, _fit(mesh, fsdp, d), _fit(mesh, tp, f)])
+    if path.endswith("moe/down"):  # [E, f, d]
+        e, f, d = shape[-3:]
+        if e % _axes_size(mesh, tp) == 0:
+            return pad([_fit(mesh, tp, e), None, _fit(mesh, fsdp, d)])
+        return pad([None, _fit(mesh, tp, f), _fit(mesh, fsdp, d)])
+    if path.endswith("router/w"):
+        return pad([_fit(mesh, fsdp, shape[-2]), None])
+    for rule in _IN_RULES:
+        if rule.search(path):
+            return pad([_fit(mesh, fsdp, shape[-2]), _fit(mesh, tp, shape[-1])])
+    for rule in _OUT_RULES:
+        if rule.search(path):
+            return pad([_fit(mesh, tp, shape[-2]), _fit(mesh, fsdp, shape[-1])])
+    if path.endswith("conv_w"):  # [k, C]
+        return pad([None, _fit(mesh, tp, shape[-1])])
+    if re.search(r"(A_log|dt_bias|D)$", path):
+        return pad([_fit(mesh, tp, shape[-1])])
+    if re.search(r"(pos_enc|pos_dec|patch_pos)$", path):
+        return pad([None, _fit(mesh, fsdp, shape[-1])])
+    if path.endswith("/b"):  # biases
+        return pad([_fit(mesh, tp, shape[-1])])
+    # norms scales and anything small: replicate
+    return P(*([None] * rank))
+
+
+def make_param_shardings(mesh: Mesh, cfg: ModelConfig, param_tree: Any,
+                         policy: ShardingPolicy = ShardingPolicy()) -> Any:
+    def assign(kp, leaf):
+        spec = param_spec(_norm_path(kp), leaf.shape, cfg, mesh, policy)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, param_tree)
+
+
+def make_opt_shardings(mesh: Mesh, cfg: ModelConfig, opt_tree: Any, param_shardings: Any,
+                       policy: ShardingPolicy = ShardingPolicy()) -> Any:
+    """Adam m/v (and master) mirror the param shardings; step is replicated."""
+    rep = NamedSharding(mesh, P())
+    out = {}
+    for key in opt_tree:
+        if key in ("m", "v", "master"):
+            out[key] = param_shardings
+        else:
+            out[key] = rep
+    return out
+
+
+# -----------------------------------------------------------------------------
+# Activation / cache shardings
+# -----------------------------------------------------------------------------
+
+def batch_shardings(mesh: Mesh, cfg: ModelConfig, batch_tree: Any,
+                    policy: ShardingPolicy = ShardingPolicy()) -> Any:
+    dp = policy.batch_axes(mesh)
+
+    def assign(kp, leaf):
+        rank = len(leaf.shape)
+        b_ax = _fit(mesh, dp, leaf.shape[0])
+        return NamedSharding(mesh, P(*([b_ax] + [None] * (rank - 1))))
+
+    return jax.tree_util.tree_map_with_path(assign, batch_tree)
+
+
+def cache_spec(path: str, shape: tuple[int, ...], cfg: ModelConfig, mesh: Mesh,
+               policy: ShardingPolicy) -> P:
+    dp = policy.batch_axes(mesh)
+    tp = policy.tp_axes
+    rank = len(shape)
+    if rank == 5 and re.search(r"(k|v)$", path):
+        # KV cache [n_layers, B, Hkv, S, D]
+        _, b, hkv, s, _ = shape
+        b_ax = _fit(mesh, dp, b)
+        h_ax = _fit(mesh, tp, hkv)
+
+        def _axes_of(a):
+            return set() if a is None else ({a} if isinstance(a, str) else set(a))
+
+        used = _axes_of(b_ax) | _axes_of(h_ax)
+        s_ax = None
+        if h_ax is None and policy.shard_kv_seq:
+            free_tp = tuple(a for a in tp if a not in used)
+            s_ax = _fit(mesh, free_tp, s)
+        if b_ax is None and policy.shard_kv_seq:
+            # B=1 long-context: spread sequence across everything unused
+            cands = tuple(a for a in dp + tp if a not in used | _axes_of(s_ax))
+            s_ax = _fit(mesh, cands, s) or s_ax
+        return P(None, b_ax, h_ax, s_ax, None)
+    if path.endswith("ssm"):  # [L, B, H, Pdim, N]
+        _, b, h, _, _ = shape
+        return P(None, _fit(mesh, dp, b), _fit(mesh, tp, h), None, None)
+    if path.endswith("conv"):  # [L, B, k, C]
+        _, b, _, c = shape
+        return P(None, _fit(mesh, dp, b), None, _fit(mesh, tp, c))
+    if rank >= 1 and shape and shape[0] > 1:
+        b_ax = _fit(mesh, dp, shape[0])
+        return P(*([b_ax] + [None] * (rank - 1)))
+    return P(*([None] * rank))
+
+
+def make_cache_shardings(mesh: Mesh, cfg: ModelConfig, cache_tree: Any,
+                         policy: ShardingPolicy = ShardingPolicy()) -> Any:
+    def assign(kp, leaf):
+        path = _norm_path(kp)
+        if path.endswith("pos"):
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, cache_spec(path, leaf.shape, cfg, mesh, policy))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_tree)
+
+
+def logits_sharding(mesh: Mesh, cfg: ModelConfig, batch: int,
+                    policy: ShardingPolicy = ShardingPolicy()) -> NamedSharding:
+    dp = policy.batch_axes(mesh)
+    b_ax = _fit(mesh, dp, batch)
+    used = set() if b_ax is None else ({b_ax} if isinstance(b_ax, str) else set(b_ax))
+    tp_free = tuple(a for a in policy.tp_axes if a not in used)
+    return NamedSharding(mesh, P(b_ax, _fit(mesh, tp_free, cfg.vocab)))

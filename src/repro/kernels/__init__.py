@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework compute hot spots.
+
+Layout per kernel: ``<name>.py`` holds the ``pl.pallas_call`` + BlockSpec
+implementation, ``ref.py`` the pure-jnp oracle, ``ops.py`` the jit dispatch
+wrapper (Pallas | jnp fallback).  See DESIGN.md section 6.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

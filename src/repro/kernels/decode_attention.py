@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: KV-cache decode attention (one query token).
+
+Decode attention is HBM-bandwidth-bound: the whole valid KV prefix is
+streamed once per emitted token while compute is tiny (no S×S matrix).  The
+kernel layout follows that reality:
+
+* grid ``(B, Hkv, num_kv_blocks)`` — kv blocks innermost-sequential so the
+  online-softmax state persists in VMEM scratch;
+* one q-head *group* (GQA) is processed per (b, kv-head) cell: the grouped
+  query ``[group, D]`` stays resident in VMEM while K/V blocks stream
+  through, giving an MXU-shaped ``[group, bk]`` logit tile per step;
+* per-sequence cache lengths mask the tail block; blocks entirely past
+  ``length`` are skipped (``pl.when``) so cost scales with the *valid*
+  prefix, not the cache allocation — this is what `decode_32k` vs
+  `long_500k` relies on.
+
+Oracle: ``ref.decode_attention_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _decode_kernel(
+    len_ref,  # [1, 1] int32 — valid cache length for this sequence
+    q_ref,  # [1, group, D]
+    k_ref,  # [1, 1, bk, D]
+    v_ref,  # [1, 1, bk, D]
+    o_ref,  # [1, group, D]
+    m_scr,  # [group, 1] f32
+    l_scr,  # [group, 1] f32
+    acc_scr,  # [group, D] f32
+    *,
+    scale: float,
+    softcap: float | None,
+    block_k: int,
+):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    length = len_ref[0, 0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(ki * block_k < length)  # skip blocks past the valid prefix
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale  # [group, D]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [group, bk]
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + ki * block_k
+        mask = cols < length
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = corr * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("softcap", "scale", "block_k", "interpret")
+)
+def decode_attention_pallas(
+    q: jax.Array,  # [B, H, D]
+    k_cache: jax.Array,  # [B, Hkv, S, D]
+    v_cache: jax.Array,  # [B, Hkv, S, D]
+    lengths: jax.Array,  # [B] int32
+    *,
+    softcap: float | None = None,
+    scale: float | None = None,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    B, H, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    group = H // Hkv
+    block_k = min(block_k, S)
+    assert S % block_k == 0, (S, block_k)
+    scale_v = float(D**-0.5 if scale is None else scale)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale_v, softcap=softcap, block_k=block_k
+    )
+    grid = (B, Hkv, S // block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, ki: (b, 0)),
+            pl.BlockSpec((1, group, D), lambda b, h, ki: (b, h, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, D), lambda b, h, ki: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lengths.reshape(B, 1).astype(jnp.int32), q, k_cache, v_cache)

@@ -1,0 +1,169 @@
+"""Pallas TPU kernel: blockwise flash attention (train / prefill).
+
+Canonical TPU flash pattern: grid ``(B, H, num_q_blocks, num_kv_blocks)``
+with the kv dimension innermost-sequential; running max / denominator /
+accumulator live in VMEM scratch and persist across the kv grid steps.
+Block shapes are MXU-aligned (q/kv blocks default 128 × head_dim).
+
+Features needed by the assigned architectures:
+
+* GQA (kv-head sharing — qwen/deepseek/mixtral/gemma2) via the k/v
+  ``index_map`` folding ``h → h // group``;
+* causal masking with a query offset (``Skv ≥ Sq``, for chunked prefill);
+* sliding-window masking (mixtral SWA, gemma2 local layers);
+* logit softcapping (gemma2).
+
+Fully-masked kv blocks are *skipped* (``pl.when``) — with a sliding window
+this makes the kernel O(S·W) instead of O(S²), which is what makes
+`long_500k` tractable for mixtral/gemma2 (DESIGN.md §4).
+
+Oracle: ``ref.flash_attention_ref``; validated in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # [1, 1, bq, D]
+    k_ref,  # [1, 1, bk, D]
+    v_ref,  # [1, 1, bk, D]
+    o_ref,  # [1, 1, bq, D]
+    m_scr,  # [bq, 1] f32
+    l_scr,  # [bq, 1] f32
+    acc_scr,  # [bq, D] f32
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    softcap: float | None,
+    block_q: int,
+    block_k: int,
+    q_offset: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # block-level visibility: rows are [qi*bq, qi*bq+bq) + q_offset in kv coords
+    row_last = qi * block_q + block_q - 1 + q_offset
+    col_first = ki * block_k
+    visible = jnp.asarray(True)
+    if causal:
+        visible &= col_first <= row_last
+    if window is not None:
+        row_first = qi * block_q + q_offset
+        col_last = ki * block_k + block_k - 1
+        visible &= col_last >= row_first - window + 1
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [bq, bk]
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        rows = jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) + qi * block_q + q_offset
+        cols = jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1) + ki * block_k
+        mask = jnp.ones((block_q, block_k), dtype=bool)
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_scr[...]  # [bq, 1]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = corr * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # [B, H, Sq, D]
+    k: jax.Array,  # [B, Hkv, Skv, D]
+    v: jax.Array,  # [B, Hkv, Skv, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, block_q, Skv, block_k)
+    scale_v = float(D**-0.5 if scale is None else scale)
+    q_offset = Skv - Sq
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale_v,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        block_q=block_q,
+        block_k=block_k,
+        q_offset=q_offset,
+    )
+    grid = (B, H, Sq // block_q, Skv // block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

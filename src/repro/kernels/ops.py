@@ -1,0 +1,228 @@
+"""Jit'd dispatch wrappers over the Pallas kernels and their jnp oracles.
+
+Selection policy:
+
+* ``configure(use_pallas=...)`` or env ``REPRO_USE_PALLAS=1`` turns the
+  Pallas path on.  On CPU backends the kernels run in interpret mode
+  (functional validation); on TPU they compile natively.
+* The default on this container is the jnp oracle path — it is what the
+  512-device dry-run lowers (Pallas does not lower to the XLA:CPU backend),
+  and its FLOPs match the kernel contract, so the roofline terms are
+  representative (DESIGN.md §6).
+* ``population_makespan`` additionally falls back to the oracle whenever the
+  instance exceeds the kernel's VMEM sizing envelope.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.makespan import population_makespan_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+@dataclasses.dataclass
+class KernelConfig:
+    use_pallas: bool = bool(int(os.environ.get("REPRO_USE_PALLAS", "0")))
+    interpret: bool | None = None  # None → interpret iff backend is CPU
+
+    def resolve_interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+
+_CONFIG = KernelConfig()
+
+
+def configure(use_pallas: bool | None = None, interpret: bool | None = None) -> KernelConfig:
+    global _CONFIG
+    if use_pallas is not None:
+        _CONFIG = dataclasses.replace(_CONFIG, use_pallas=use_pallas)
+    if interpret is not None:
+        _CONFIG = dataclasses.replace(_CONFIG, interpret=interpret)
+    return _CONFIG
+
+
+def kernel_config() -> KernelConfig:
+    return _CONFIG
+
+
+# VMEM sizing envelope for the makespan kernel (see kernels/makespan.py)
+_MAKESPAN_VMEM_WORDS = 3_000_000
+
+
+def _makespan_fits(T: int, N: int, cmax: int, tile: int) -> bool:
+    words = T * N * 2 + N * N + N * cmax + tile * (N * cmax + T) + T * 4
+    return words <= _MAKESPAN_VMEM_WORDS
+
+
+def population_makespan(
+    assignments: jax.Array,  # [P, T] int32
+    *,
+    durations: jax.Array,
+    cores: jax.Array,
+    data: jax.Array,
+    feasible: jax.Array,
+    release: jax.Array,
+    pred_matrix: jax.Array,
+    dtr: jax.Array,
+    init_free: jax.Array,
+    tile: int = 8,
+) -> tuple[jax.Array, jax.Array]:
+    P, T = assignments.shape
+    N = durations.shape[1]
+    cmax = init_free.shape[1]
+    if _CONFIG.use_pallas and _makespan_fits(T, N, cmax, tile):
+        pad = (-P) % tile
+        if pad:
+            assignments = jnp.concatenate(
+                [assignments, jnp.zeros((pad, T), assignments.dtype)], axis=0
+            )
+        mk, viol = population_makespan_pallas(
+            assignments,
+            durations,
+            cores,
+            data,
+            feasible,
+            release,
+            pred_matrix,
+            dtr,
+            init_free,
+            tile=tile,
+            interpret=_CONFIG.resolve_interpret(),
+        )
+        return mk[:P], viol[:P]
+    return ref.population_makespan_ref(
+        assignments,
+        durations=durations,
+        cores=cores,
+        data=data,
+        feasible=feasible,
+        release=release,
+        pred_matrix=pred_matrix,
+        dtr=dtr,
+        init_free=init_free,
+    )
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    use_pallas: bool | None = None,
+) -> jax.Array:
+    use = _CONFIG.use_pallas if use_pallas is None else use_pallas
+    Sq, Skv = q.shape[2], k.shape[2]
+    if use and Sq % min(block_q, Sq) == 0 and Skv % min(block_k, Skv) == 0:
+        return flash_attention_pallas(
+            q,
+            k,
+            v,
+            causal=causal,
+            window=window,
+            softcap=softcap,
+            scale=scale,
+            block_q=block_q,
+            block_k=block_k,
+            interpret=_CONFIG.resolve_interpret(),
+        )
+    if Sq > 512 or Skv > 512:
+        # blockwise jnp path (flash-equivalent memory behaviour under XLA)
+        return _blockwise_attention_jnp(
+            q, k, v, causal=causal, window=window, softcap=softcap, scale=scale
+        )
+    return ref.flash_attention_ref(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale
+    )
+
+
+def _blockwise_attention_jnp(
+    q, k, v, *, causal, window, softcap, scale, block_q: int = 512
+):
+    """lax.map over query blocks against full K/V — bounds the live score
+    tensor to [block_q, Skv] so 32k prefill fits without a Pallas kernel.
+    Used by the dry-run lowering path."""
+    B, H, Sq, D = q.shape
+    if Sq % block_q != 0:
+        return ref.flash_attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap, scale=scale
+        )
+    Skv = k.shape[2]
+    nq = Sq // block_q
+    qb = q.reshape(B, H, nq, block_q, D)
+
+    def one_block(args):
+        qi, qblk = args
+        offset = Skv - Sq + qi * block_q
+        return ref.flash_attention_block(
+            qblk, k, v, q_offset=offset, causal=causal, window=window,
+            softcap=softcap, scale=scale,
+        )
+
+    out = jax.lax.map(one_block, (jnp.arange(nq), jnp.moveaxis(qb, 2, 0)))
+    return jnp.moveaxis(out, 0, 2).reshape(B, H, Sq, D)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    softcap: float | None = None,
+    scale: float | None = None,
+    block_k: int = 512,
+    use_pallas: bool | None = None,
+) -> jax.Array:
+    use = _CONFIG.use_pallas if use_pallas is None else use_pallas
+    S = k_cache.shape[2]
+    if use and S % min(block_k, S) == 0:
+        return decode_attention_pallas(
+            q,
+            k_cache,
+            v_cache,
+            lengths,
+            softcap=softcap,
+            scale=scale,
+            block_k=block_k,
+            interpret=_CONFIG.resolve_interpret(),
+        )
+    return ref.decode_attention_ref(
+        q, k_cache, v_cache, lengths, softcap=softcap, scale=scale
+    )
+
+
+def ssd_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B_mat: jax.Array,
+    C_mat: jax.Array,
+    *,
+    chunk: int = 128,
+    use_pallas: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    use = _CONFIG.use_pallas if use_pallas is None else use_pallas
+    L = x.shape[1]
+    if use and L % min(chunk, L) == 0:
+        return ssd_scan_pallas(
+            x, dt, A, B_mat, C_mat, chunk=chunk, interpret=_CONFIG.resolve_interpret()
+        )
+    if L % min(chunk, L) == 0:
+        return ref.ssd_scan_chunked_ref(x, dt, A, B_mat, C_mat, chunk=min(chunk, L))
+    return ref.ssd_scan_ref(x, dt, A, B_mat, C_mat)

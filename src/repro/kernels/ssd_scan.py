@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: Mamba2 SSD (state-space duality) chunked scan.
+
+The SSD insight (arXiv:2405.21060) is that the SSM recurrence factors into
+*intra-chunk* attention-like matmuls (MXU work) plus a low-rank *inter-chunk*
+state recurrence (the only sequential part).  The TPU mapping:
+
+* grid ``(B, H, num_chunks)`` — chunks innermost-sequential; the running
+  state ``[P, N]`` persists in VMEM scratch across chunk steps;
+* per chunk, all heavy ops are ``[Q,·]×[·,·]`` matmuls with f32 accumulation:
+  ``C·Bᵀ`` (``[Q,N]×[N,Q]``), the masked-decay weighted ``M·X`` (``[Q,Q]×[Q,P]``),
+  the state read ``C·S`` (``[Q,N]×[N,P]``) and the state write ``Bᵀ·X``
+  (``[N,Q]×[Q,P]``) — chunk Q=128 keeps every operand MXU-aligned;
+* decays are computed from an in-chunk cumulative sum of ``dt·A`` (all
+  exponents ≤ 0, numerically safe).
+
+GQA-style B/C group sharing (``G`` groups) is folded into the B/C
+``index_map`` (``h → h // rep``).
+
+Oracles: ``ref.ssd_scan_ref`` (sequential, exact) and
+``ref.ssd_scan_chunked_ref`` (same chunked math in jnp — also the dry-run
+path used by the mamba2/zamba2 models).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # [1, Q, 1, P]
+    dt_ref,  # [1, Q, 1]
+    a_ref,  # [1, 1] f32 — A for this head
+    b_ref,  # [1, Q, 1, N]
+    c_ref,  # [1, Q, 1, N]
+    y_ref,  # [1, Q, 1, P] out
+    fin_ref,  # [1, 1, P, N] out — final state
+    state,  # scratch [P, N] f32
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # [Q]
+    a = a_ref[0, 0]
+    b = b_ref[0, :, 0, :].astype(jnp.float32)  # [Q, N]
+    c = c_ref[0, :, 0, :].astype(jnp.float32)  # [Q, N]
+
+    a_step = dt * a  # [Q]  (A < 0, dt > 0 → ≤ 0)
+    acs = jnp.cumsum(a_step)  # inclusive cumsum
+    seg = acs[:, None] - acs[None, :]  # [Qi, Qj]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    qj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tril = qj <= qi
+    decay = jnp.where(tril, jnp.exp(jnp.where(tril, seg, 0.0)), 0.0)
+
+    cb = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, Q]
+    m = cb * decay
+    xdt = x * dt[:, None]  # [Q, P]
+    y_intra = jax.lax.dot(m, xdt, preferred_element_type=jnp.float32)  # [Q, P]
+
+    s_prev = state[...]  # [P, N]
+    c_scaled = c * jnp.exp(acs)[:, None]  # [Q, N]
+    y_inter = jax.lax.dot_general(
+        c_scaled, s_prev, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, P]
+
+    a_tot = acs[chunk - 1]
+    w = jnp.exp(a_tot - acs) * dt  # [Q]
+    bw = b * w[:, None]  # [Q, N]
+    ds = jax.lax.dot_general(
+        x, bw, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [P, N]  — contraction over Q of x[Q,P] and bw[Q,N]
+    state[...] = s_prev * jnp.exp(a_tot) + ds
+
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        fin_ref[0, 0] = state[...].astype(fin_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(
+    x: jax.Array,  # [B, L, H, P]
+    dt: jax.Array,  # [B, L, H] (positive)
+    A: jax.Array,  # [H] (negative)
+    B_mat: jax.Array,  # [B, L, G, N]
+    C_mat: jax.Array,  # [B, L, G, N]
+    *,
+    chunk: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns ``(y [B,L,H,P], final_state [B,H,P,N])``."""
+    Bsz, L, H, P = x.shape
+    G, N = B_mat.shape[2], B_mat.shape[3]
+    rep = H // G
+    chunk = min(chunk, L)
+    assert L % chunk == 0, (L, chunk)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    grid = (Bsz, H, L // chunk)
+    y, fin = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, ci: (b, ci, h)),
+            pl.BlockSpec((1, 1), lambda b, h, ci: (h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, ci, r=rep: (b, ci, h // r, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, ci, r=rep: (b, ci, h // r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, L, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        x,
+        dt,
+        A.astype(jnp.float32).reshape(H, 1),
+        B_mat,
+        C_mat,
+    )
+    return y, fin

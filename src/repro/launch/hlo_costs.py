@@ -1,0 +1,420 @@
+"""Trip-count-aware HLO cost model (parsed from compiled HLO text).
+
+Why: ``compiled.cost_analysis()`` counts a ``while`` body **once**, so any
+scan-over-layers model under-reports FLOPs/bytes by ~num_layers — useless
+for a roofline.  This parser rebuilds per-device costs from the partitioned
+HLO with loop scaling:
+
+* computations are parsed into op lists with a result-shape symbol table;
+* ``dot`` FLOPs = 2 · |result| · Π(contracting dims)  (batch dims are part
+  of the result product — exact for every einsum XLA emits);
+* per-op bytes = result + operand sizes.  The text is post-fusion, so each
+  listed op is a fusion boundary — operands+results approximate XLA's own
+  bytes-accessed notion (internal fusion temporaries excluded, matching
+  how the HBM sees it);
+* collective bytes = result sizes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute, per type;
+* ``while(cond=%c, body=%b)``: body+cond costs × trip count, trip parsed
+  from the condition's ``constant(N)`` + LT/LE compare (scan loops are
+  static-trip);
+* ``fusion(calls=%f)`` recurses for FLOPs (dots can hide in fusions);
+  ``conditional`` takes the max across branches (conservative upper bound —
+  affects zamba2's every-6th-layer shared-attention cond; noted in
+  EXPERIMENTS.md §Roofline).
+
+All numbers are per-device (the module is SPMD-partitioned).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_SHAPE_RE = re.compile(r"(pred|bf16|f8e4m3fn|f8e5m2|[sufc]\d+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_OPNAME_RE = re.compile(r"^\s*(?:\(.*?\)|[\w\[\]{},\d\s.]+?)\s+([\w\-]+)\(")
+_CALL_ATTRS = ("calls", "to_apply", "condition", "body")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_ZERO_COST = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "copy-start",
+    "copy-done",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    rhs: str  # everything after '='
+    op: str
+    result_bytes: int
+    operands: list[str]
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: list[_Op]
+    shapes: dict[str, str]  # result name -> type string
+
+
+def _parse_computations(text: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    current: _Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if current is None:
+            m = _COMP_RE.match(line)
+            if m:
+                current = _Computation(m.group(1), [], {})
+            continue
+        if line == "}":
+            comps[current.name] = current
+            current = None
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        opm = _OPNAME_RE.match(rhs)
+        op = opm.group(1) if opm else "unknown"
+        # operands: %names inside the first (...) after the op name
+        paren = rhs.find(f"{op}(") if opm else -1
+        operands: list[str] = []
+        if paren >= 0:
+            depth = 0
+            args = ""
+            for ch in rhs[paren + len(op):]:
+                if ch == "(":
+                    depth += 1
+                    if depth == 1:
+                        continue
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                if depth >= 1:
+                    args += ch
+            operands = re.findall(r"%([\w.\-]+)", args)
+        # result type: prefix of rhs before the op name
+        type_str = rhs[:paren] if paren > 0 else rhs.split(" ", 1)[0]
+        current.shapes[name] = type_str
+        current.ops.append(_Op(name, rhs, op, _shape_bytes(type_str), operands))
+    return comps
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    result_dims = _shape_dims(comp.shapes[op.name])
+    out = 1
+    for d in result_dims:
+        out *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rhs)
+    if not m or not op.operands:
+        return 2.0 * out  # degenerate
+    lhs_type = comp.shapes.get(op.operands[0], "")
+    lhs_dims = _shape_dims(lhs_type)
+    k = 1
+    for idx in m.group(1).split(","):
+        if idx and int(idx) < len(lhs_dims):
+            k *= lhs_dims[int(idx)]
+    return 2.0 * out * k
+
+
+def _conv_flops(op: _Op, comp: _Computation) -> float:
+    # rough: 2 * |result| * (kernel elements * in_channels) — models are
+    # conv-free (frontends stubbed); mamba conv is expressed as matmuls.
+    result = 1
+    for d in _shape_dims(comp.shapes[op.name]):
+        result *= d
+    kernel = 1
+    if len(op.operands) > 1:
+        for d in _shape_dims(comp.shapes.get(op.operands[1], "")):
+            kernel *= d
+    return 2.0 * result * kernel
+
+
+def _trip_count(cond: _Computation) -> int:
+    """Scan conditions compare the induction var against constant(N)."""
+    const = None
+    direction = "LT"
+    for op in cond.ops:
+        m = re.search(r"constant\((\d+)\)", op.rhs)
+        if m:
+            const = max(int(m.group(1)), const or 0)
+        d = re.search(r"direction=(LT|LE|GT|GE)", op.rhs)
+        if d:
+            direction = d.group(1)
+    # nested wrapped_compare computations hold the direction sometimes —
+    # default LT (jax scans count 0..N-1)
+    if const is None:
+        return 1
+    return const + 1 if direction == "LE" else const
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collective_bytes: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    collective_counts: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    unhandled: dict = dataclasses.field(default_factory=lambda: defaultdict(int))
+
+    def scaled(self, k: float) -> "HloCosts":
+        out = HloCosts(
+            self.flops * k, self.bytes * k, self.transcendentals * k,
+            defaultdict(float, {m: v * k for m, v in self.collective_bytes.items()}),
+            defaultdict(float, {m: v * k for m, v in self.collective_counts.items()}),
+            defaultdict(int, self.unhandled),
+        )
+        return out
+
+    def add(self, other: "HloCosts") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.transcendentals += other.transcendentals
+        for m, v in other.collective_bytes.items():
+            self.collective_bytes[m] += v
+        for m, v in other.collective_counts.items():
+            self.collective_counts[m] += v
+        for m, v in other.unhandled.items():
+            self.unhandled[m] += v
+
+    def to_json(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "transcendentals": self.transcendentals,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_counts": dict(self.collective_counts),
+            "collective_total_bytes": sum(self.collective_bytes.values()),
+            "unhandled": dict(self.unhandled),
+        }
+
+
+_ELEMENTWISE_TRANSCENDENTAL = {"exponential", "tanh", "log", "rsqrt", "sqrt",
+                               "power", "logistic", "sine", "cosine"}
+
+
+def _comp_cost(name: str, comps: dict[str, _Computation],
+               memo: dict[str, HloCosts]) -> HloCosts:
+    if name in memo:
+        return memo[name]
+    comp = comps.get(name)
+    out = HloCosts()
+    if comp is None:
+        memo[name] = out
+        return out
+    memo[name] = out  # cycle guard (HLO call graphs are acyclic)
+    for op in comp.ops:
+        if op.op in _ZERO_COST:
+            continue
+        # bytes: result + operands (post-fusion boundaries)
+        nbytes = op.result_bytes
+        for o in op.operands:
+            nbytes += _shape_bytes(comp.shapes.get(o, ""))
+        # in-place/windowed ops move only the slice, not the full buffer:
+        if op.op == "dynamic-update-slice":
+            upd = _shape_bytes(comp.shapes.get(op.operands[1], "")) if len(op.operands) > 1 else 0
+            nbytes = 2 * upd  # read+write of the updated window
+        elif op.op in ("dynamic-slice", "slice"):
+            nbytes = 2 * op.result_bytes
+        elif op.op in ("while", "conditional", "tuple", "optimization-barrier"):
+            nbytes = 0  # control flow: traffic is captured by inner ops
+        if op.op == "while":
+            body = re.search(r"body=%([\w.\-]+)", op.rhs)
+            cond = re.search(r"condition=%([\w.\-]+)", op.rhs)
+            trips = _trip_count(comps[cond.group(1)]) if cond and cond.group(1) in comps else 1
+            inner = HloCosts()
+            if body:
+                inner.add(_comp_cost(body.group(1), comps, memo))
+            if cond:
+                inner.add(_comp_cost(cond.group(1), comps, memo))
+            out.add(inner.scaled(max(trips, 1)))
+            continue
+        if op.op == "conditional":
+            branches = re.findall(r"(?:true_computation|false_computation|branch_computations=\{[^}]*)=?%([\w.\-]+)", op.rhs)
+            if not branches:
+                branches = re.findall(r"%([\w.\-]+)", op.rhs.split("conditional(")[-1])
+            costs = [_comp_cost(b, comps, memo) for b in branches if b in comps]
+            if costs:
+                best = max(costs, key=lambda c: c.flops)
+                out.add(best)
+            out.bytes += nbytes
+            continue
+        if op.op in _COLLECTIVES:
+            out.collective_bytes[op.op] += op.result_bytes
+            out.collective_counts[op.op] += 1
+            out.bytes += nbytes
+            continue
+        if op.op == "dot":
+            out.flops += _dot_flops(op, comp)
+            out.bytes += nbytes
+            continue
+        if op.op == "convolution":
+            out.flops += _conv_flops(op, comp)
+            out.bytes += nbytes
+            continue
+        if op.op in ("fusion", "call", "custom-call", "async-start"):
+            m = re.search(r"(?:calls|to_apply)=%([\w.\-]+)", op.rhs)
+            # in-place DUS fusion: XLA aliases the big destination operand
+            # with the result — the full buffer is neither read nor written,
+            # only the updated window moves.  Heuristic: result type matches
+            # an operand type and the called computation performs a DUS.
+            if m and m.group(1) in comps:
+                callee = comps[m.group(1)]
+                has_dus = any(o.op == "dynamic-update-slice" for o in callee.ops)
+                if has_dus:
+                    def _dtype_dims(t: str):  # ignore layout braces
+                        mm = _SHAPE_RE.search(t)
+                        return mm.groups() if mm else None
+
+                    res_sig = _dtype_dims(comp.shapes.get(op.name, ""))
+                    res_bytes = op.result_bytes
+                    for o in op.operands:
+                        if res_sig and _dtype_dims(comp.shapes.get(o, "")) == res_sig:
+                            nbytes -= res_bytes + _shape_bytes(comp.shapes.get(o, ""))
+                            break
+                    nbytes = max(nbytes, 0)
+            if m:
+                inner = _comp_cost(m.group(1), comps, memo)
+                # fusion internals: take flops/transcendentals (real compute),
+                # NOT bytes (internal temporaries never touch HBM)
+                out.flops += inner.flops
+                out.transcendentals += inner.transcendentals
+                for mm, v in inner.collective_bytes.items():
+                    out.collective_bytes[mm] += v
+                for mm, v in inner.collective_counts.items():
+                    out.collective_counts[mm] += v
+            out.bytes += nbytes
+            continue
+        if op.op in ("reduce", "reduce-window", "scatter", "select-and-scatter", "sort", "map"):
+            result_elems = max(op.result_bytes // 4, 1)
+            op_bytes_in = sum(_shape_bytes(comp.shapes.get(o, "")) for o in op.operands)
+            out.flops += max(op_bytes_in // 4, result_elems)  # ~1 flop/elem
+            out.bytes += nbytes
+            continue
+        if op.op in _ELEMENTWISE_TRANSCENDENTAL:
+            out.transcendentals += max(op.result_bytes // 4, 1)
+            out.bytes += nbytes
+            continue
+        # generic elementwise / data movement
+        if op.op in ("add", "subtract", "multiply", "divide", "maximum",
+                     "minimum", "compare", "select", "convert", "negate",
+                     "and", "or", "xor", "clamp", "abs"):
+            out.flops += max(op.result_bytes // 4, 1)
+        elif op.op not in ("dynamic-slice", "dynamic-update-slice", "slice",
+                           "broadcast", "reshape", "transpose", "concatenate",
+                           "pad", "gather", "copy", "rng", "rng-bit-generator",
+                           "optimization-barrier", "custom-call", "domain",
+                           "send", "recv", "infeed", "outfeed", "cholesky",
+                           "triangular-solve"):
+            out.unhandled[op.op] += 1
+        out.bytes += nbytes
+    memo[name] = out
+    return out
+
+
+def analyze_hlo_text(text: str, entry: str | None = None) -> HloCosts:
+    comps = _parse_computations(text)
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+        entry = m.group(1) if m else next(iter(comps))
+    # computations reachable only via the entry should be counted once —
+    # memoized recursion from the entry point does exactly that.
+    memo: dict[str, HloCosts] = {}
+    return _comp_cost(entry, comps, memo)
+
+
+# -----------------------------------------------------------------------------
+# Scope attribution — where do the bytes go? (§Perf diagnosis tool)
+# -----------------------------------------------------------------------------
+
+_SCOPE_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def bytes_by_scope(text: str, depth: int = 3, top: int = 15) -> list[tuple[str, float, float]]:
+    """Aggregate per-op (bytes, flops) by the leading ``depth`` components of
+    the jax op_name metadata, with while-loop trip scaling.  Returns the top
+    scopes by bytes: [(scope, bytes, flops)].
+
+    This is the profile substitute on a dry-run-only container: it answers
+    "which part of the model moves the bytes" without hardware."""
+    comps = _parse_computations(text)
+    # trip multiplier per computation: entry=1; while bodies get their trips
+    mult: dict[str, float] = {}
+    entry_m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+    entry = entry_m.group(1) if entry_m else next(iter(comps))
+
+    def walk(name: str, k: float) -> None:
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + k
+        for op in comps[name].ops:
+            if op.op == "while":
+                body = re.search(r"body=%([\w.\-]+)", op.rhs)
+                cond = re.search(r"condition=%([\w.\-]+)", op.rhs)
+                trips = _trip_count(comps[cond.group(1)]) if cond and cond.group(1) in comps else 1
+                if body:
+                    walk(body.group(1), k * max(trips, 1))
+                if cond:
+                    walk(cond.group(1), k * max(trips, 1))
+            else:
+                for m in re.finditer(r"(?:calls|to_apply|condition|body)=%([\w.\-]+)", op.rhs):
+                    walk(m.group(1), k)
+                for m in re.finditer(r"branch_computations=\{([^}]*)\}", op.rhs):
+                    for b in re.findall(r"%([\w.\-]+)", m.group(1)):
+                        walk(b, k)
+
+    walk(entry, 1.0)
+
+    agg: dict[str, list[float]] = {}
+    for cname, comp in comps.items():
+        k = mult.get(cname, 0.0)
+        if k == 0.0:
+            continue
+        for op in comp.ops:
+            if op.op in _ZERO_COST or op.op in ("while", "conditional", "tuple"):
+                continue
+            nbytes = op.result_bytes + sum(
+                _shape_bytes(comp.shapes.get(o, "")) for o in op.operands
+            )
+            if op.op == "dynamic-update-slice":
+                upd = _shape_bytes(comp.shapes.get(op.operands[1], "")) if len(op.operands) > 1 else 0
+                nbytes = 2 * upd
+            elif op.op in ("dynamic-slice", "slice"):
+                nbytes = 2 * op.result_bytes
+            flops = _dot_flops(op, comp) if op.op == "dot" else 0.0
+            m = _SCOPE_RE.search(op.rhs)
+            scope = "/".join(m.group(1).split("/")[:depth]) if m else "(no-scope)"
+            cur = agg.setdefault(scope, [0.0, 0.0])
+            cur[0] += nbytes * k
+            cur[1] += flops * k
+    rows = sorted(((s, b, f) for s, (b, f) in agg.items()), key=lambda r: -r[1])
+    return rows[:top]

@@ -1,0 +1,59 @@
+"""Training CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --steps 50
+
+Uses the reduced config by default (CPU-runnable); ``--full`` selects the
+assigned full config (requires the production mesh — pair with the dry-run
+for lowering evidence on this container).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.data.pipeline import DataConfig
+from repro.models.registry import ALL_ARCHS, get_model
+from repro.optim import adamw
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS, default="qwen2.5-3b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint-every", type=int, default=25)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt_cli")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--full", action="store_true", help="full (production) config")
+    ap.add_argument("--f32", action="store_true", help="train in float32")
+    args = ap.parse_args()
+
+    api = get_model(args.arch)
+    cfg = api.config if args.full else api.reduced
+    if args.f32:
+        cfg = dataclasses.replace(cfg, dtype="float32")
+
+    trainer = Trainer(
+        api,
+        cfg,
+        adamw.AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5 + 1),
+                          total_steps=args.steps),
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+                   seed=0, mixture_components=2),
+        TrainerConfig(steps=args.steps, checkpoint_every=args.checkpoint_every,
+                      checkpoint_dir=args.ckpt_dir, microbatches=args.microbatches,
+                      resume=args.resume),
+    )
+    result = trainer.run()
+    print(f"arch={args.arch} steps={result.final_step} "
+          f"loss {result.losses[0]:.3f} -> {result.losses[-1]:.3f}"
+          + (f" (resumed from {result.resumed_from})" if result.resumed_from else ""))
+
+
+if __name__ == "__main__":
+    main()

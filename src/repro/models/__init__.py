@@ -1,0 +1,1 @@
+"""Pure-JAX model substrate: all assigned architecture families."""

@@ -1,0 +1,207 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv frontend is STUBBED per the assignment: ``input_specs()`` provides
+precomputed frame embeddings [B, frames, d] (post-conv), matching the
+"modality frontend is the paper's edge stage" mapping in DESIGN.md §4.
+Learned positions, non-causal encoder self-attention, causal decoder
+self-attention + cross-attention, GELU MLPs, tied decoder embeddings.
+
+Decode caches: ring-free self-attn KV per decoder layer plus cross-attn
+K/V precomputed once from the encoder output at prefill.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _enc_block_init(key, cfg, dtype):
+    ka, km = jax.random.split(key)
+    return {
+        "ln_attn": L.rmsnorm_init(cfg.d_model, dtype),
+        "attn": L.attention_init(ka, cfg, dtype),
+        "ln_mlp": L.rmsnorm_init(cfg.d_model, dtype),
+        "mlp": L.mlp_init(km, cfg, dtype=dtype),
+    }
+
+
+def _dec_block_init(key, cfg, dtype):
+    ka, kx, km = jax.random.split(key, 3)
+    return {
+        "ln_self": L.rmsnorm_init(cfg.d_model, dtype),
+        "self_attn": L.attention_init(ka, cfg, dtype),
+        "ln_cross": L.rmsnorm_init(cfg.d_model, dtype),
+        "cross_attn": L.attention_init(kx, cfg, dtype),
+        "ln_mlp": L.rmsnorm_init(cfg.d_model, dtype),
+        "mlp": L.mlp_init(km, cfg, dtype=dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = _dtype(cfg)
+    ke, kpe, kpd, kenc, kdec = jax.random.split(key, 5)
+    return {
+        "embed": L.embed_init(ke, cfg, dtype),
+        "pos_enc": L.truncated_normal_init(kpe, (cfg.enc_frames, cfg.d_model), 0.02, dtype),
+        "pos_dec": L.truncated_normal_init(kpd, (cfg.dec_positions, cfg.d_model), 0.02, dtype),
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(
+            jax.random.split(kenc, cfg.enc_layers)
+        ),
+        "dec_blocks": jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(
+            jax.random.split(kdec, cfg.num_layers)
+        ),
+        "ln_enc_final": L.rmsnorm_init(cfg.d_model, dtype),
+        "ln_final": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames [B, F, d] (stub frontend output) → encoder states [B, F, d]."""
+    F = frames.shape[1]
+    x = frames + params["pos_enc"][:F][None]
+
+    def block(x, p):
+        h, _ = L.attention_forward(
+            p["attn"], L.rmsnorm(p["ln_attn"], x, cfg.norm_eps), cfg,
+            causal=False, use_rope=False,
+        )
+        x = x + h
+        x = x + L.mlp(p["mlp"], L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps), cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(block, x, params["enc_blocks"])
+    return L.rmsnorm(params["ln_enc_final"], x, cfg.norm_eps)
+
+
+def _cross_kv(p, enc: jax.Array, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder states → [B, Hkv, F, D]."""
+    B, F, _ = enc.shape
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    k = L.linear(p["k"], enc).reshape(B, F, hkv, hd)
+    v = L.linear(p["v"], enc).reshape(B, F, hkv, hd)
+    return jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2)
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict, *, remat: bool = False):
+    """batch {"frames": [B,F,d], "tokens": [B,S]} → (logits, aux)."""
+    enc = encode(params, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    x = L.embed(params["embed"], tokens, cfg) + params["pos_dec"][:S][None]
+
+    def block(x, p):
+        h, _ = L.attention_forward(
+            p["self_attn"], L.rmsnorm(p["ln_self"], x, cfg.norm_eps), cfg,
+            causal=True, use_rope=False,
+        )
+        x = x + h
+        kv = _cross_kv(p["cross_attn"], enc, cfg)
+        h, _ = L.attention_forward(
+            p["cross_attn"], L.rmsnorm(p["ln_cross"], x, cfg.norm_eps), cfg,
+            causal=False, use_rope=False, kv_override=kv,
+        )
+        x = x + h
+        x = x + L.mlp(p["mlp"], L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps), cfg)
+        return x, None
+
+    if remat:
+        block = jax.checkpoint(block, prevent_cse=False)
+    x, _ = jax.lax.scan(block, x, params["dec_blocks"])
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    return L.unembed(params["embed"], x, cfg), {"aux_loss": jnp.zeros((), jnp.float32)}
+
+
+# -----------------------------------------------------------------------------
+# Serving
+# -----------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or _dtype(cfg)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    nl = cfg.num_layers
+    return {
+        "self_k": jnp.zeros((nl, batch, hkv, max_len, hd), dtype),
+        "self_v": jnp.zeros((nl, batch, hkv, max_len, hd), dtype),
+        "cross_k": jnp.zeros((nl, batch, hkv, cfg.enc_frames, hd), dtype),
+        "cross_v": jnp.zeros((nl, batch, hkv, cfg.enc_frames, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, cache: dict,
+            frames: jax.Array | None = None):
+    """Encode frames, run the decoder prompt, fill self+cross caches."""
+    assert frames is not None, "encdec prefill needs frames"
+    enc = encode(params, cfg, frames)
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg) + params["pos_dec"][:S][None]
+
+    def block(x, p):
+        h, (kc, vc) = L.attention_forward(
+            p["self_attn"], L.rmsnorm(p["ln_self"], x, cfg.norm_eps), cfg,
+            causal=True, use_rope=False,
+        )
+        x = x + h
+        ck, cv = _cross_kv(p["cross_attn"], enc, cfg)
+        h, _ = L.attention_forward(
+            p["cross_attn"], L.rmsnorm(p["ln_cross"], x, cfg.norm_eps), cfg,
+            causal=False, use_rope=False, kv_override=(ck, cv),
+        )
+        x = x + h
+        x = x + L.mlp(p["mlp"], L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps), cfg)
+        return x, (kc, vc, ck, cv)
+
+    x, (kcs, vcs, cks, cvs) = jax.lax.scan(block, x, params["dec_blocks"])
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+    new_cache = {
+        "self_k": cache["self_k"].at[:, :, :, :S].set(kcs.astype(cache["self_k"].dtype)),
+        "self_v": cache["self_v"].at[:, :, :, :S].set(vcs.astype(cache["self_v"].dtype)),
+        "cross_k": cks.astype(cache["cross_k"].dtype),
+        "cross_v": cvs.astype(cache["cross_v"].dtype),
+        "pos": jnp.asarray(S, jnp.int32),
+    }
+    return logits, new_cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: jax.Array, cache: dict):
+    from repro.kernels import ops
+
+    B = token.shape[0]
+    pos = cache["pos"]
+    x = L.embed(params["embed"], token[:, None], cfg) + params["pos_dec"][pos][None, None]
+
+    def body(x, scanned):
+        p, sk, sv, ck, cv = scanned
+        h, sk2, sv2 = L.attention_decode(
+            p["self_attn"], L.rmsnorm(p["ln_self"], x, cfg.norm_eps), cfg,
+            sk, sv, pos, use_rope=False,
+        )
+        x = x + h
+        # cross attention: static precomputed cache, full length
+        xq = L.rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        q = L.linear(p["cross_attn"]["q"], xq).reshape(
+            B, cfg.num_heads, cfg.resolved_head_dim
+        )
+        lengths = jnp.full((B,), ck.shape[2], jnp.int32)
+        o = ops.decode_attention(q, ck, cv, lengths)
+        o = o.reshape(B, 1, cfg.num_heads * cfg.resolved_head_dim)
+        x = x + L.linear(p["cross_attn"]["o"], o)
+        x = x + L.mlp(p["mlp"], L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps), cfg)
+        return x, (sk2, sv2)
+
+    x, (sks, svs) = jax.lax.scan(
+        body, x,
+        (params["dec_blocks"], cache["self_k"], cache["self_v"], cache["cross_k"], cache["cross_v"]),
+    )
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, {**cache, "self_k": sks, "self_v": svs, "pos": pos + 1}

@@ -1,0 +1,206 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block
+applied every ``hybrid_period`` layers (weights reused, per-invocation KV).
+
+Simplifications vs. the released zamba2 (noted per DESIGN.md §7): the shared
+block here is a plain pre-norm attention+MLP residual block (no LoRA
+per-invocation adapters, no concat-with-embedding input) — the scheduling-
+relevant structure (periodic full-attention with shared weights, bounded
+decode state) is preserved.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def num_shared_invocations(cfg: ModelConfig) -> int:
+    return sum(1 for i in range(cfg.num_layers) if (i + 1) % cfg.hybrid_period == 0)
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = _dtype(cfg)
+    ke, kb, ks, km = jax.random.split(key, 4)
+
+    def block_init(k):
+        return {
+            "ln": L.rmsnorm_init(cfg.d_model, dtype),
+            "mamba": M.mamba_init(k, cfg, dtype),
+        }
+
+    blocks = jax.vmap(block_init)(jax.random.split(kb, cfg.num_layers))
+    shared = {
+        "ln_attn": L.rmsnorm_init(cfg.d_model, dtype),
+        "attn": L.attention_init(ks, cfg, dtype),
+        "ln_mlp": L.rmsnorm_init(cfg.d_model, dtype),
+        "mlp": L.mlp_init(km, cfg, dtype=dtype),
+    }
+    return {
+        "embed": L.embed_init(ke, cfg, dtype),
+        "blocks": blocks,
+        "shared": shared,
+        "ln_final": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+
+
+def _shared_forward(shared, x, cfg: ModelConfig):
+    h, _ = L.attention_forward(
+        shared["attn"], L.rmsnorm(shared["ln_attn"], x, cfg.norm_eps), cfg
+    )
+    x = x + h
+    x = x + L.mlp(shared["mlp"], L.rmsnorm(shared["ln_mlp"], x, cfg.norm_eps), cfg)
+    return x
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict, *, remat: bool = False):
+    x = L.embed(params["embed"], batch["tokens"], cfg)
+    shared = params["shared"]
+    is_shared = jnp.asarray(
+        [(i + 1) % cfg.hybrid_period == 0 for i in range(cfg.num_layers)]
+    )
+
+    def block_fn(x, scanned):
+        from repro.distributed import hints
+
+        p, apply_shared = scanned
+        x = hints.constrain(x)  # residual-stream layout (sequence parallel)
+        x = x + M.mamba_forward(p["mamba"], L.rmsnorm(p["ln"], x, cfg.norm_eps), cfg)
+        x = jax.lax.cond(
+            apply_shared, lambda x: _shared_forward(shared, x, cfg), lambda x: x, x
+        )
+        return x, None
+
+    if remat:
+        block_fn = jax.checkpoint(block_fn, prevent_cse=False)
+    x, _ = jax.lax.scan(block_fn, x, (params["blocks"], is_shared))
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    return L.unembed(params["embed"], x, cfg), {"aux_loss": jnp.zeros((), jnp.float32)}
+
+
+# -----------------------------------------------------------------------------
+# Serving: mamba states per layer + one KV cache per shared-block invocation
+# -----------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or _dtype(cfg)
+    one = M.mamba_cache_init(cfg, batch, dtype)
+    mamba_stack = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_layers, *a.shape)).copy(), one
+    )
+    n_inv = num_shared_invocations(cfg)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "layers": mamba_stack,
+        "shared_kv": {
+            "k": jnp.zeros((n_inv, batch, hkv, max_len, hd), dtype),
+            "v": jnp.zeros((n_inv, batch, hkv, max_len, hd), dtype),
+        },
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: jax.Array, cache: dict):
+    x = L.embed(params["embed"], token[:, None], cfg)
+    shared = params["shared"]
+    pos = cache["pos"]
+    is_shared = jnp.asarray(
+        [(i + 1) % cfg.hybrid_period == 0 for i in range(cfg.num_layers)]
+    )
+    inv_index = jnp.cumsum(is_shared.astype(jnp.int32)) - 1  # invocation id per layer
+
+    def body(carry, scanned):
+        x, shared_kv = carry
+        p, c, apply_shared, inv = scanned
+        y, c2 = M.mamba_decode(p["mamba"], L.rmsnorm(p["ln"], x, cfg.norm_eps), cfg, c)
+        x = x + y
+
+        def with_attn(args):
+            x, shared_kv = args
+            inv_safe = jnp.maximum(inv, 0)
+            kc = shared_kv["k"][inv_safe]
+            vc = shared_kv["v"][inv_safe]
+            h, kc2, vc2 = L.attention_decode(
+                shared["attn"], L.rmsnorm(shared["ln_attn"], x, cfg.norm_eps), cfg,
+                kc, vc, pos,
+            )
+            x = x + h
+            x = x + L.mlp(shared["mlp"], L.rmsnorm(shared["ln_mlp"], x, cfg.norm_eps), cfg)
+            shared_kv = {
+                "k": shared_kv["k"].at[inv_safe].set(kc2),
+                "v": shared_kv["v"].at[inv_safe].set(vc2),
+            }
+            return x, shared_kv
+
+        x, shared_kv = jax.lax.cond(apply_shared, with_attn, lambda a: a, (x, shared_kv))
+        return (x, shared_kv), c2
+
+    (x, shared_kv), new_layers = jax.lax.scan(
+        body, (x, cache["shared_kv"]), (params["blocks"], cache["layers"], is_shared, inv_index)
+    )
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, {"layers": new_layers, "shared_kv": shared_kv, "pos": pos + 1}
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, cache: dict):
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+    shared = params["shared"]
+    is_shared = jnp.asarray(
+        [(i + 1) % cfg.hybrid_period == 0 for i in range(cfg.num_layers)]
+    )
+
+    def body(x, scanned):
+        p, c, apply_shared = scanned
+        u = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+        y, state = ssm_lib._mamba_forward_with_state(p["mamba"], u, cfg)
+        x = x + y
+
+        def with_attn(x):
+            h, (kc, vc) = L.attention_forward(
+                shared["attn"], L.rmsnorm(shared["ln_attn"], x, cfg.norm_eps), cfg
+            )
+            x = x + h
+            x = x + L.mlp(shared["mlp"], L.rmsnorm(shared["ln_mlp"], x, cfg.norm_eps), cfg)
+            return x, kc, vc
+
+        def without(x):
+            hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+            zero = jnp.zeros((B, hkv, S, hd), x.dtype)
+            return x, zero, zero
+
+        x, kc, vc = jax.lax.cond(apply_shared, with_attn, without, x)
+        return x, (state, kc, vc)
+
+    x, (states, kcs, vcs) = jax.lax.scan(body, x, (params["blocks"], cache["layers"], is_shared))
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+
+    # compact the shared-layer K/V rows into the invocation-indexed cache
+    inv_layers = [i for i in range(cfg.num_layers) if (i + 1) % cfg.hybrid_period == 0]
+    sel = jnp.asarray(inv_layers, jnp.int32)
+    cap = cache["shared_kv"]["k"].shape[3]
+    kc_sel, vc_sel = kcs[sel], vcs[sel]  # [n_inv, B, Hkv, S, D]
+    k0 = cache["shared_kv"]["k"]
+    v0 = cache["shared_kv"]["v"]
+    if S >= cap:
+        shift = S % cap
+        k0 = jnp.roll(kc_sel[..., S - cap :, :], shift, axis=3).astype(k0.dtype)
+        v0 = jnp.roll(vc_sel[..., S - cap :, :], shift, axis=3).astype(v0.dtype)
+    else:
+        k0 = k0.at[:, :, :, :S].set(kc_sel.astype(k0.dtype))
+        v0 = v0.at[:, :, :, :S].set(vc_sel.astype(v0.dtype))
+    return logits, {
+        "layers": states,
+        "shared_kv": {"k": k0, "v": v0},
+        "pos": jnp.asarray(S, jnp.int32),
+    }

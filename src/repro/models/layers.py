@@ -1,0 +1,221 @@
+"""Model-layer primitives (pure JAX, no framework): RMSNorm, RoPE, linear,
+embedding, GQA attention (train/prefill/decode), SwiGLU/GELU MLPs.
+
+Parameters are plain dict pytrees; per-layer stacks are built by ``vmap``-ing
+the single-block initializers (leading layer axis), which is what lets the
+model forwards run as a single ``lax.scan`` over layers — the key to fast
+XLA compiles for 95-layer configs on 512 fake devices (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.config import ModelConfig
+
+
+def truncated_normal_init(key, shape, scale: float, dtype) -> jax.Array:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+def linear_init(key, d_in: int, d_out: int, *, bias: bool, dtype) -> dict:
+    p = {"w": truncated_normal_init(key, (d_in, d_out), d_in**-0.5, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}  # (1 + scale) convention
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# -----------------------------------------------------------------------------
+# RoPE (GPT-NeoX rotate-half convention, as llama/qwen/gemma)
+# -----------------------------------------------------------------------------
+
+def rope_tables(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions [...]; returns (sin, cos) with shape [..., head_dim//2], f32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x [..., S, H, D] with sin/cos [S, D/2] (broadcast over batch/heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :] if x.ndim == 4 else sin
+    c = cos[..., None, :] if x.ndim == 4 else cos
+    # shapes: x [B, S, H, D]; sin/cos [S, D/2] → [S, 1, D/2]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out1 = xf1 * c - xf2 * s
+    out2 = xf2 * c + xf1 * s
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+# -----------------------------------------------------------------------------
+# Attention (GQA) — init + train/prefill/decode forwards
+# -----------------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "q": linear_init(kq, d, h * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "k": linear_init(kk, d, hkv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "v": linear_init(kv, d, hkv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "o": linear_init(ko, h * hd, d, bias=False, dtype=dtype),
+    }
+
+
+def _project_qkv(p: dict, x: jax.Array, cfg: ModelConfig):
+    B, S, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = linear(p["q"], x).reshape(B, S, h, hd)
+    k = linear(p["k"], x).reshape(B, S, hkv, hd)
+    v = linear(p["v"], x).reshape(B, S, hkv, hd)
+    return q, k, v
+
+
+def attention_forward(
+    p: dict,
+    x: jax.Array,  # [B, S, d]
+    cfg: ModelConfig,
+    *,
+    window: int | None = None,
+    causal: bool = True,
+    use_rope: bool = True,
+    positions: jax.Array | None = None,
+    kv_override: tuple[jax.Array, jax.Array] | None = None,  # cross-attention
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Full-sequence attention (train / prefill).  Returns (out, (k, v)) with
+    k/v in [B, Hkv, S, D] layout (cache layout)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    if kv_override is not None:
+        kc, vc = kv_override  # [B, Hkv, Skv, D]
+    else:
+        if use_rope:
+            pos = jnp.arange(S) if positions is None else positions
+            sin, cos = rope_tables(pos, cfg.resolved_head_dim, cfg.rope_theta)
+            q = apply_rope(q, sin, cos)
+            k = apply_rope(k, sin, cos)
+        kc = jnp.moveaxis(k, 1, 2)  # [B, Hkv, S, D]
+        vc = jnp.moveaxis(v, 1, 2)
+    qh = jnp.moveaxis(q, 1, 2)  # [B, H, S, D]
+    o = ops.flash_attention(
+        qh, kc, vc, causal=causal, window=window, softcap=cfg.attn_softcap
+    )
+    o = jnp.moveaxis(o, 1, 2).reshape(B, S, cfg.num_heads * cfg.resolved_head_dim)
+    return linear(p["o"], o), (kc, vc)
+
+
+def attention_decode(
+    p: dict,
+    x: jax.Array,  # [B, 1, d] — one new token
+    cfg: ModelConfig,
+    k_cache: jax.Array,  # [B, Hkv, S, D]
+    v_cache: jax.Array,
+    pos: jax.Array,  # [] or [B] current position (== length so far)
+    *,
+    window: int | None = None,
+    use_rope: bool = True,
+    update_cache: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against a KV cache.  Returns (out, k_cache, v_cache).
+
+    With a sliding window the cache is a ring buffer of size ``window``
+    (positions wrap); lengths passed to the kernel are clamped accordingly.
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg)  # S == 1
+    posb = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    if use_rope:
+        sin, cos = rope_tables(posb[:, None], cfg.resolved_head_dim, cfg.rope_theta)
+        # q/k: [B, 1, H, D] ; sin/cos: [B, 1, D/2]
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    S = k_cache.shape[2]
+    if update_cache:
+        # ring buffer when the cache is window-sized; identity otherwise
+        slot = posb % S
+        bidx = jnp.arange(B)
+        k_cache = k_cache.at[bidx, :, slot].set(k[:, 0])
+        v_cache = v_cache.at[bidx, :, slot].set(v[:, 0])
+    lengths = jnp.minimum(posb + 1, S)
+    qh = q[:, 0]  # [B, H, D]
+    o = ops.decode_attention(qh, k_cache, v_cache, lengths, softcap=cfg.attn_softcap)
+    o = o.reshape(B, 1, cfg.num_heads * cfg.resolved_head_dim)
+    return linear(p["o"], o), k_cache, v_cache
+
+
+# -----------------------------------------------------------------------------
+# MLPs
+# -----------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    if cfg.mlp_act == "gelu":
+        k1, k2 = jax.random.split(key)
+        return {
+            "up": linear_init(k1, d, ff, bias=True, dtype=dtype),
+            "down": linear_init(k2, ff, d, bias=True, dtype=dtype),
+        }
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": linear_init(k1, d, ff, bias=False, dtype=dtype),
+        "up": linear_init(k2, d, ff, bias=False, dtype=dtype),
+        "down": linear_init(k3, ff, d, bias=False, dtype=dtype),
+    }
+
+
+def mlp(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if "gate" in p:
+        return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))
+    return linear(p["down"], jax.nn.gelu(linear(p["up"], x)))
+
+
+# -----------------------------------------------------------------------------
+# Embedding / unembedding
+# -----------------------------------------------------------------------------
+
+def embed_init(key, cfg: ModelConfig, dtype) -> dict:
+    p = {"tok": truncated_normal_init(key, (cfg.vocab, cfg.d_model), 0.02, dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = truncated_normal_init(
+            jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab), cfg.d_model**-0.5, dtype
+        )
+    return p
+
+
+def embed(p: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = p["tok"][tokens]
+    if cfg.scale_embedding:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    return x
+
+
+def unembed(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
+    logits = (x @ w).astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits

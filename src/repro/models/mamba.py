@@ -1,0 +1,127 @@
+"""Mamba2 (SSD) block — train forward (chunked scan) and single-step decode.
+
+Block structure per arXiv:2405.21060:
+  in_proj → split [z | x | B | C | dt] → causal depthwise conv1d over
+  (x,B,C) → silu → SSD scan (``repro.kernels.ops.ssd_scan``) → per-head
+  RMSNorm gated by silu(z) → out_proj, with a learned D skip and dt bias.
+
+Decode keeps two recurrent states per layer: the SSM state ``[B, H, P, N]``
+and the conv ring buffer ``[B, conv-1, d_conv_in]`` — O(1) per token, which
+is why mamba2/zamba2 are the `long_500k` architectures (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.config import ModelConfig
+from repro.models.layers import linear, linear_init, rmsnorm, rmsnorm_init, truncated_normal_init
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int, int, int]:
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    g = cfg.ssm_groups
+    h = cfg.ssm_heads
+    d_conv_in = di + 2 * g * n  # conv covers x, B, C
+    return di, n, g, h, d_conv_in
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    di, n, g, h, d_conv_in = _dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * g * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": linear_init(k1, d, d_in_proj, bias=False, dtype=dtype),
+        "conv_w": truncated_normal_init(k2, (cfg.ssm_conv, d_conv_in), 0.1, dtype),
+        "conv_b": jnp.zeros((d_conv_in,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),  # A = -exp(A_log) ∈ (-∞, 0)
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),  # softplus(-2) ≈ 0.13
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": linear_init(k3, di, d, bias=False, dtype=dtype),
+    }
+
+
+def _split(cfg: ModelConfig, proj: jax.Array):
+    di, n, g, h, _ = _dims(cfg)
+    z, xbc, dt = jnp.split(proj, [di, di + di + 2 * g * n], axis=-1)
+    return z, xbc, dt  # xbc = [x | B | C]
+
+
+def _split_xbc(cfg: ModelConfig, xbc: jax.Array):
+    di, n, g, _, _ = _dims(cfg)
+    return jnp.split(xbc, [di, di + g * n], axis=-1)
+
+
+def mamba_forward(p: dict, u: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """u [B, L, d] → [B, L, d] (training / prefill path, chunked SSD)."""
+    B, L, d = u.shape
+    di, n, g, h, d_conv_in = _dims(cfg)
+    proj = linear(p["in_proj"], u)
+    z, xbc, dt_raw = _split(cfg, proj)
+
+    # causal depthwise conv1d over the sequence
+    pad = cfg.ssm_conv - 1
+    xp = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+    conv = sum(
+        xp[:, i : i + L, :] * p["conv_w"][i][None, None, :] for i in range(cfg.ssm_conv)
+    )
+    xbc = jax.nn.silu(conv + p["conv_b"])
+
+    x, Bm, Cm = _split_xbc(cfg, xbc)
+    x = x.reshape(B, L, h, cfg.ssm_headdim)
+    Bm = Bm.reshape(B, L, g, n)
+    Cm = Cm.reshape(B, L, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B, L, h]
+    A = -jnp.exp(p["A_log"])
+
+    y, _ = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
+    y = y + x * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, L, di)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return linear(p["out_proj"], y)
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype) -> dict:
+    di, n, g, h, d_conv_in = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, h, cfg.ssm_headdim, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_conv_in), dtype),
+    }
+
+
+def mamba_decode(
+    p: dict, u: jax.Array, cfg: ModelConfig, cache: dict
+) -> tuple[jax.Array, dict]:
+    """u [B, 1, d] one-token step. Returns (y [B, 1, d], new cache)."""
+    B = u.shape[0]
+    di, n, g, h, d_conv_in = _dims(cfg)
+    proj = linear(p["in_proj"], u[:, 0])  # [B, d_in_proj]
+    z, xbc, dt_raw = _split(cfg, proj)
+
+    window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # [B, conv, C]
+    conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv)
+    new_conv = window[:, 1:, :]
+
+    x, Bm, Cm = _split_xbc(cfg, xbc)
+    x = x.reshape(B, h, cfg.ssm_headdim)
+    Bm = jnp.repeat(Bm.reshape(B, g, n), h // g, axis=1)  # [B, h, n]
+    Cm = jnp.repeat(Cm.reshape(B, g, n), h // g, axis=1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B, h]
+    A = -jnp.exp(p["A_log"])
+
+    dA = jnp.exp(dt * A[None, :])  # [B, h]
+    state = cache["ssm"] * dA[..., None, None] + (
+        dt[..., None, None] * x.astype(jnp.float32)[..., None] * Bm.astype(jnp.float32)[..., None, :]
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", state, Cm.astype(jnp.float32)).astype(u.dtype)
+    y = y + x * p["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(B, di)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = linear(p["out_proj"], y)[:, None, :]
+    return out, {"ssm": state, "conv": new_conv}

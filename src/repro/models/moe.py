@@ -1,0 +1,119 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+The dispatch is the scalable "grouped matmul via capacity buffer" scheme
+(MaxText-style) rather than the GShard one-hot einsum, whose
+``[tokens, E, C]`` combine tensor is intractable at E=128:
+
+1. top-k routing per token (softmax-renormalized gates);
+2. (token, slot) pairs sorted by expert id — static shapes throughout;
+3. position-within-expert via a sorted-segment cumsum; pairs beyond the
+   per-expert capacity ``C = ceil(T·k/E · capacity_factor)`` are dropped
+   (standard capacity-based token dropping);
+4. scatter into an ``[E, C, d]`` buffer → batched expert matmuls
+   (``E×C×d×f`` FLOPs — proportional to *active* experts, keeping the
+   §Roofline useful-FLOPs ratio honest) → gather-combine with gates.
+
+Sharding: the buffer's expert axis maps to the mesh "model" axis when
+``E % axis == 0`` (qwen3-moe: 128/16 = 8 experts per chip, EP); otherwise
+experts are replicated and the expert FFN hidden dim is TP-sharded
+(mixtral: 8 experts < 16 shards).  The token→buffer scatter lowers to an
+all-to-all under pjit.  Aux load-balance loss per Switch/GShard.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import linear_init, truncated_normal_init
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.d_ff_expert
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": linear_init(kr, d, e, bias=False, dtype=jnp.float32),
+        "gate": truncated_normal_init(kg, (e, d, f), d**-0.5, dtype),
+        "up": truncated_normal_init(ku, (e, d, f), d**-0.5, dtype),
+        "down": truncated_normal_init(kd, (e, f, d), f**-0.5, dtype),
+    }
+
+
+def moe_capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    cap = int(num_tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts) + 1
+    # round up to a lane-friendly multiple (MXU second-minor alignment)
+    return max(8, -(-cap // 8) * 8)
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """x [B, S, d] → (y [B, S, d], aux_loss scalar)."""
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.num_experts, cfg.top_k
+    xt = x.reshape(T, d)
+
+    router_logits = (xt.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # [T, K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- aux load-balance loss (Switch eq. 4–6) ------------------------------
+    me = jnp.mean(probs, axis=0)  # mean router prob per expert
+    one_hot_top1 = jax.nn.one_hot(expert_idx[:, 0], E)
+    ce = jnp.mean(one_hot_top1, axis=0)  # fraction of tokens per expert
+    aux = cfg.aux_loss_coef * E * jnp.sum(me * ce)
+
+    # ---- sort-based capacity dispatch ---------------------------------------
+    C = moe_capacity(cfg, T)
+    flat_expert = expert_idx.reshape(T * K)  # [P] pair → expert
+    flat_gate = gate_vals.reshape(T * K)
+    flat_token = jnp.repeat(jnp.arange(T), K)
+
+    order = jnp.argsort(flat_expert, stable=True)
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    # position within the expert segment: global index − index of segment start
+    idx = jnp.arange(T * K)
+    seg_start = jnp.searchsorted(se, jnp.arange(E), side="left")  # [E]
+    pos = idx - seg_start[se]
+    keep = pos < C
+    slot = se * C + jnp.where(keep, pos, 0)  # [P] flat buffer slot
+
+    buf = jnp.zeros((E * C, d), x.dtype)
+    buf = buf.at[jnp.where(keep, slot, E * C)].add(xt[st], mode="drop")
+    buf = buf.reshape(E, C, d)
+    from repro.distributed import hints
+
+    buf = hints.constrain_moe_buffer(buf)
+
+    # ---- batched expert FFN (swiglu) -----------------------------------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["gate"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["up"]
+    )
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["down"]).reshape(E * C, d)
+
+    # ---- combine -------------------------------------------------------------
+    pair_out = jnp.where(keep[:, None], out_buf[slot], 0.0)  # [P, d]
+    yt = jnp.zeros((T, d), x.dtype).at[st].add(pair_out * sg[:, None].astype(x.dtype))
+    return yt.reshape(B, S, d), aux
+
+
+def moe_ffn_dense_ref(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """O(T·E·d·f) dense oracle (no capacity dropping) for tests: every token
+    is processed by all experts, combined with its top-k gates."""
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+    logits = (xt.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.top_k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xt, p["gate"])) * jnp.einsum(
+        "td,edf->tef", xt, p["up"]
+    )
+    all_out = jnp.einsum("tef,efd->ted", h, p["down"])  # [T, E, d]
+    gates_full = jnp.zeros(probs.shape, x.dtype)
+    gates_full = gates_full.at[jnp.arange(xt.shape[0])[:, None], expert_idx].set(
+        gate_vals.astype(x.dtype)
+    )
+    yt = jnp.einsum("ted,te->td", all_out, gates_full)
+    return yt.reshape(B, S, d)

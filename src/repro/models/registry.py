@@ -1,0 +1,111 @@
+"""Architecture registry — ``--arch <id>`` resolution for every entry point.
+
+Each architecture binds a full :class:`ModelConfig`, a reduced smoke-test
+config, its family forward module, and ``input_specs`` (ShapeDtypeStruct
+stand-ins for every model input at a given shape suite — the dry-run's
+no-allocation contract)."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, ShapeSuite, applicable_shapes
+from repro.models.config import ModelConfig
+
+_FAMILY_MODULES = {
+    "dense": "repro.models.transformer",
+    "moe": "repro.models.transformer",
+    "ssm": "repro.models.ssm",
+    "hybrid": "repro.models.hybrid",
+    "encdec": "repro.models.encdec",
+    "vlm": "repro.models.vlm",
+}
+
+ARCH_MODULES: dict[str, str] = {
+    "qwen2.5-3b": "repro.configs.qwen2_5_3b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "whisper-base": "repro.configs.whisper_base",
+    "mamba2-780m": "repro.configs.mamba2_780m",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "internvl2-76b": "repro.configs.internvl2_76b",
+}
+
+ALL_ARCHS = tuple(ARCH_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    name: str
+    config: ModelConfig
+    reduced: ModelConfig
+    module: Any  # family forward module
+
+    # ---- functional API -----------------------------------------------------
+    def init(self, key, cfg: ModelConfig | None = None):
+        return self.module.init_params(key, cfg or self.config)
+
+    def forward(self, params, batch, cfg: ModelConfig | None = None, *, remat=False):
+        return self.module.forward(params, cfg or self.config, batch, remat=remat)
+
+    def init_cache(self, batch: int, max_len: int, cfg: ModelConfig | None = None, dtype=None):
+        return self.module.init_cache(cfg or self.config, batch, max_len, dtype)
+
+    def prefill(self, params, tokens, cache, cfg: ModelConfig | None = None, **extras):
+        return self.module.prefill(params, cfg or self.config, tokens, cache, **extras)
+
+    def decode_step(self, params, token, cache, cfg: ModelConfig | None = None):
+        return self.module.decode_step(params, cfg or self.config, token, cache)
+
+    # ---- dry-run specs -------------------------------------------------------
+    def batch_specs(self, cfg: ModelConfig, suite: ShapeSuite) -> dict:
+        """ShapeDtypeStruct stand-ins for the *data* inputs of the step kind."""
+        B, S = suite.global_batch, suite.seq_len
+        dt = jnp.dtype(cfg.dtype)
+        if suite.kind == "train":
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+            if cfg.family == "encdec":
+                specs["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_frames, cfg.d_model), dt)
+            if cfg.family == "vlm":
+                specs["patches"] = jax.ShapeDtypeStruct((B, cfg.num_patches, cfg.d_model), dt)
+            return specs
+        if suite.kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+            if cfg.family == "encdec":
+                specs["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_frames, cfg.d_model), dt)
+            if cfg.family == "vlm":
+                specs["patches"] = jax.ShapeDtypeStruct((B, cfg.num_patches, cfg.d_model), dt)
+            return specs
+        if suite.kind == "decode":
+            return {"token": jax.ShapeDtypeStruct((B,), jnp.int32)}
+        raise ValueError(suite.kind)
+
+    def param_specs(self, cfg: ModelConfig | None = None):
+        cfg = cfg or self.config
+        return jax.eval_shape(lambda k: self.module.init_params(k, cfg), jax.random.PRNGKey(0))
+
+    def cache_specs(self, cfg: ModelConfig, suite: ShapeSuite):
+        return jax.eval_shape(
+            lambda: self.module.init_cache(cfg, suite.global_batch, suite.seq_len)
+        )
+
+    def shapes(self) -> list[str]:
+        return applicable_shapes(self.name)
+
+
+def get_model(arch: str) -> ModelApi:
+    if arch not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; options: {sorted(ARCH_MODULES)}")
+    cfg_mod = importlib.import_module(ARCH_MODULES[arch])
+    config: ModelConfig = cfg_mod.CONFIG
+    reduced: ModelConfig = cfg_mod.REDUCED
+    fam_mod = importlib.import_module(_FAMILY_MODULES[config.family])
+    return ModelApi(name=arch, config=config, reduced=reduced, module=fam_mod)

@@ -1,0 +1,124 @@
+"""Mamba2 language model (attention-free SSM family).
+
+Stack of Mamba2 SSD blocks with pre-RMSNorm residuals; decode carries
+O(1) recurrent state per layer (``long_500k`` applicable, DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models.config import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = _dtype(cfg)
+    ke, kb = jax.random.split(key)
+
+    def block_init(k):
+        return {
+            "ln": L.rmsnorm_init(cfg.d_model, dtype),
+            "mamba": M.mamba_init(k, cfg, dtype),
+        }
+
+    blocks = jax.vmap(block_init)(jax.random.split(kb, cfg.num_layers))
+    return {
+        "embed": L.embed_init(ke, cfg, dtype),
+        "blocks": blocks,
+        "ln_final": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict, *, remat: bool = False):
+    from repro.distributed import hints
+
+    x = L.embed(params["embed"], batch["tokens"], cfg)
+
+    def block_fn(x, p):
+        x = hints.constrain(x)  # residual-stream layout (sequence parallel)
+        return x + M.mamba_forward(p["mamba"], L.rmsnorm(p["ln"], x, cfg.norm_eps), cfg), None
+
+    if remat:
+        block_fn = jax.checkpoint(block_fn, prevent_cse=False)
+    x, _ = jax.lax.scan(block_fn, x, params["blocks"])
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    return L.unembed(params["embed"], x, cfg), {"aux_loss": jnp.zeros((), jnp.float32)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or _dtype(cfg)
+    one = M.mamba_cache_init(cfg, batch, dtype)
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_layers, *a.shape)).copy(), one
+    )
+    return {"layers": stacked, "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: jax.Array, cache: dict):
+    x = L.embed(params["embed"], token[:, None], cfg)
+
+    def body(x, scanned):
+        p, c = scanned
+        y, c2 = M.mamba_decode(p["mamba"], L.rmsnorm(p["ln"], x, cfg.norm_eps), cfg, c)
+        return x + y, c2
+
+    x, new_layers = jax.lax.scan(body, x, (params["blocks"], cache["layers"]))
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, {"layers": new_layers, "pos": cache["pos"] + 1}
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, cache: dict):
+    """SSM prefill = full forward capturing final states.  For simplicity the
+    recurrent states are rebuilt with the sequential-scan oracle per layer
+    (exact); the heavy path (training) uses the chunked kernel."""
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+
+    from repro.kernels import ref as kref
+
+    def body(x, scanned):
+        p, c = scanned
+        u = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+        # run the block but also extract its final ssm/conv state
+        y, state = _mamba_forward_with_state(p["mamba"], u, cfg)
+        return x + y, state
+
+    x, new_layers = jax.lax.scan(body, x, (params["blocks"], cache["layers"]))
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+    return logits, {"layers": new_layers, "pos": jnp.asarray(S, jnp.int32)}
+
+
+def _mamba_forward_with_state(p, u, cfg: ModelConfig):
+    """mamba_forward that also returns the end-of-sequence recurrent state."""
+    from repro.kernels import ops
+
+    B, S, _ = u.shape
+    di, n, g, h, d_conv_in = M._dims(cfg)
+    proj = L.linear(p["in_proj"], u)
+    z, xbc_raw, dt_raw = M._split(cfg, proj)
+    pad = cfg.ssm_conv - 1
+    xp = jnp.pad(xbc_raw, ((0, 0), (pad, 0), (0, 0)))
+    conv = sum(xp[:, i : i + S, :] * p["conv_w"][i][None, None, :] for i in range(cfg.ssm_conv))
+    xbc = jax.nn.silu(conv + p["conv_b"])
+    x, Bm, Cm = M._split_xbc(cfg, xbc)
+    x = x.reshape(B, S, h, cfg.ssm_headdim)
+    Bm = Bm.reshape(B, S, g, n)
+    Cm = Cm.reshape(B, S, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, final_state = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
+    y = y + x * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, S, di)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = L.linear(p["out_proj"], y)
+    conv_state = xbc_raw[:, S - pad :, :] if pad else jnp.zeros((B, 0, d_conv_in), u.dtype)
+    return out, {"ssm": final_state, "conv": conv_state.astype(u.dtype)}

@@ -1,0 +1,258 @@
+"""Decoder-only transformer LM — dense and MoE families.
+
+Layers are weight-stacked and executed with ``lax.scan`` (fast XLA compiles
+at 95 layers × 512 devices) with optional per-block ``jax.checkpoint``
+(remat) for training.  gemma2's alternating local/global attention is
+handled by scanning over *layer groups*: the stacked params are a tuple of
+``group`` stacks with a static per-slot window, so local layers can keep
+window-sized KV caches while global layers keep full-length ones — this is
+what bounds gemma2/mixtral `long_500k` decode memory (DESIGN.md §4).
+
+API (shared by every family module):
+  init_params / forward (logits + aux) / init_cache / prefill / decode_step
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models.config import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def layer_windows(cfg: ModelConfig) -> tuple[int | None, ...]:
+    """Static per-slot window sizes within a layer group."""
+    if cfg.local_global:
+        return (cfg.window, None)  # gemma2: even layers local, odd global
+    return (cfg.window,)  # mixtral SWA (window) or plain (None)
+
+
+def group_size(cfg: ModelConfig) -> int:
+    return len(layer_windows(cfg))
+
+
+def _block_init(key, cfg: ModelConfig, dtype) -> dict:
+    ka, km, k1, k2, k3, k4 = jax.random.split(key, 6)
+    p = {
+        "ln_attn": L.rmsnorm_init(cfg.d_model, dtype),
+        "attn": L.attention_init(ka, cfg, dtype),
+        "ln_mlp": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_lib.moe_init(km, cfg, dtype)
+    else:
+        p["mlp"] = L.mlp_init(km, cfg, dtype=dtype)
+    if cfg.post_norms:
+        p["ln_attn_post"] = L.rmsnorm_init(cfg.d_model, dtype)
+        p["ln_mlp_post"] = L.rmsnorm_init(cfg.d_model, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = _dtype(cfg)
+    g = group_size(cfg)
+    n_groups = cfg.num_layers // g
+    assert cfg.num_layers % g == 0, (cfg.num_layers, g)
+    ke, kf, *kb = jax.random.split(key, 2 + g)
+    blocks = tuple(
+        jax.vmap(lambda k: _block_init(k, cfg, dtype))(jax.random.split(kb[s], n_groups))
+        for s in range(g)
+    )
+    return {
+        "embed": L.embed_init(ke, cfg, dtype),
+        "blocks": blocks,
+        "ln_final": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+
+
+def _block_forward(p, x, cfg: ModelConfig, window, *, causal=True):
+    """Full-sequence block. Returns (x, aux)."""
+    from repro.distributed import hints
+
+    x = hints.constrain(x)  # residual-stream layout (e.g. sequence parallel)
+    h, _ = L.attention_forward(
+        p["attn"], L.rmsnorm(p["ln_attn"], x, cfg.norm_eps), cfg,
+        window=window, causal=causal,
+    )
+    if cfg.post_norms:
+        h = L.rmsnorm(p["ln_attn_post"], h, cfg.norm_eps)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    y_in = L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        h, aux = moe_lib.moe_ffn(p["moe"], y_in, cfg)
+    else:
+        h = L.mlp(p["mlp"], y_in, cfg)
+    if cfg.post_norms:
+        h = L.rmsnorm(p["ln_mlp_post"], h, cfg.norm_eps)
+    return x + h, aux
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    remat: bool = False,
+) -> tuple[jax.Array, dict]:
+    """batch {"tokens": [B, S]} (or {"embeds": [B, S, d]} — VLM prefix path)
+    → (logits [B, S, V] f32, aux dict)."""
+    if "embeds" in batch:
+        x = batch["embeds"]
+    else:
+        x = L.embed(params["embed"], batch["tokens"], cfg)
+    windows = layer_windows(cfg)
+    g = group_size(cfg)
+
+    def group_fn(x, group_params):
+        aux_total = jnp.zeros((), jnp.float32)
+        for s in range(g):
+            x, aux = _block_forward(group_params[s], x, cfg, windows[s])
+            aux_total += aux
+        return x, aux_total
+
+    if remat:
+        group_fn = jax.checkpoint(group_fn, prevent_cse=False)
+
+    def scan_body(x, group_params):
+        x, aux = group_fn(x, group_params)
+        return x, aux
+
+    x, auxs = jax.lax.scan(scan_body, x, params["blocks"])
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"aux_loss": jnp.sum(auxs)}
+
+
+# -----------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# -----------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    """Per-slot stacked KV caches; windowed slots are ring buffers of size
+    ``window`` (bounded memory — the long_500k story)."""
+    dtype = dtype or _dtype(cfg)
+    g = group_size(cfg)
+    n_groups = cfg.num_layers // g
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    caches = []
+    for w in layer_windows(cfg):
+        s = min(max_len, w) if w is not None else max_len
+        caches.append(
+            {
+                "k": jnp.zeros((n_groups, batch, hkv, s, hd), dtype),
+                "v": jnp.zeros((n_groups, batch, hkv, s, hd), dtype),
+            }
+        )
+    return {"kv": tuple(caches), "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(
+    params: dict, cfg: ModelConfig, tokens: jax.Array, cache: dict,
+    embeds: jax.Array | None = None,
+) -> tuple[jax.Array, dict]:
+    """Run the full prompt, fill caches. Returns (last-position logits, cache)."""
+    if embeds is not None:
+        x = embeds
+        B, S = embeds.shape[:2]
+    else:
+        B, S = tokens.shape
+        x = L.embed(params["embed"], tokens, cfg)
+    windows = layer_windows(cfg)
+    g = group_size(cfg)
+
+    def scan_body(x, group_params):
+        from repro.distributed import hints
+
+        new_kv = []
+        for s in range(g):
+            p = group_params[s]
+            x = hints.constrain(x)
+            h, (kc, vc) = L.attention_forward(
+                p["attn"], L.rmsnorm(p["ln_attn"], x, cfg.norm_eps), cfg,
+                window=windows[s],
+            )
+            if cfg.post_norms:
+                h = L.rmsnorm(p["ln_attn_post"], h, cfg.norm_eps)
+            x = x + h
+            y_in = L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
+            if cfg.family == "moe":
+                hm, _ = moe_lib.moe_ffn(p["moe"], y_in, cfg)
+            else:
+                hm = L.mlp(p["mlp"], y_in, cfg)
+            if cfg.post_norms:
+                hm = L.rmsnorm(p["ln_mlp_post"], hm, cfg.norm_eps)
+            x = x + hm
+            new_kv.append((kc, vc))
+        return x, tuple(new_kv)
+
+    x, kvs = jax.lax.scan(scan_body, x, params["blocks"])
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+
+    # fold prefill K/V into the (possibly ring-buffered) caches
+    new_cache = {"kv": [], "pos": jnp.asarray(S, jnp.int32)}
+    for s, w in enumerate(windows):
+        kc, vc = kvs[s]  # [n_groups, B, Hkv, S, D]
+        cap = cache["kv"][s]["k"].shape[3]
+        if S >= cap:
+            # keep the last `cap` positions, laid out ring-consistently
+            kc_tail = kc[..., S - cap :, :]
+            vc_tail = vc[..., S - cap :, :]
+            shift = S % cap
+            kc_tail = jnp.roll(kc_tail, shift, axis=3)
+            vc_tail = jnp.roll(vc_tail, shift, axis=3)
+            new_cache["kv"].append({"k": kc_tail.astype(cache["kv"][s]["k"].dtype),
+                                    "v": vc_tail.astype(cache["kv"][s]["v"].dtype)})
+        else:
+            k0 = cache["kv"][s]["k"].at[:, :, :, :S].set(kc.astype(cache["kv"][s]["k"].dtype))
+            v0 = cache["kv"][s]["v"].at[:, :, :, :S].set(vc.astype(cache["kv"][s]["v"].dtype))
+            new_cache["kv"].append({"k": k0, "v": v0})
+    new_cache["kv"] = tuple(new_cache["kv"])
+    return logits, new_cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: jax.Array, cache: dict) -> tuple[jax.Array, dict]:
+    """One decode step. token [B] int32 → (logits [B, V], new cache)."""
+    B = token.shape[0]
+    x = L.embed(params["embed"], token[:, None], cfg)
+    pos = cache["pos"]
+    windows = layer_windows(cfg)
+    g = group_size(cfg)
+
+    def scan_body(x, scanned):
+        group_params, kv = scanned
+        new_kv = []
+        for s in range(g):
+            p = group_params[s]
+            h, kc, vc = L.attention_decode(
+                p["attn"], L.rmsnorm(p["ln_attn"], x, cfg.norm_eps), cfg,
+                kv[s]["k"], kv[s]["v"], pos, window=windows[s],
+            )
+            if cfg.post_norms:
+                h = L.rmsnorm(p["ln_attn_post"], h, cfg.norm_eps)
+            x = x + h
+            y_in = L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
+            if cfg.family == "moe":
+                hm, _ = moe_lib.moe_ffn(p["moe"], y_in, cfg)
+            else:
+                hm = L.mlp(p["mlp"], y_in, cfg)
+            if cfg.post_norms:
+                hm = L.rmsnorm(p["ln_mlp_post"], hm, cfg.norm_eps)
+            x = x + hm
+            new_kv.append({"k": kc, "v": vc})
+        return x, tuple(new_kv)
+
+    x, kvs = jax.lax.scan(scan_body, x, (params["blocks"], cache["kv"]))
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, {"kv": kvs, "pos": pos + 1}

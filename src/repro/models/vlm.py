@@ -1,0 +1,56 @@
+"""InternVL2-style VLM backbone: stubbed ViT patch embeddings prepended to
+the text sequence of a dense LM (the assignment specifies backbone-only;
+``input_specs()`` provides precomputed patch embeddings).
+
+The LM is the dense-transformer family; this module adds the multimodal
+prefix plumbing (patch-position table, prefix-aware loss masking, prefix
+prefill for serving).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    kt, kp = jax.random.split(key)
+    params = T.init_params(kt, cfg)
+    params["patch_pos"] = L.truncated_normal_init(
+        kp, (cfg.num_patches, cfg.d_model), 0.02, jnp.dtype(cfg.dtype)
+    )
+    return params
+
+
+def _prefix_embeds(params: dict, cfg: ModelConfig, patches: jax.Array, tokens: jax.Array):
+    """[patch embeds + pos | token embeds] → [B, P+S, d]."""
+    tok = L.embed(params["embed"], tokens, cfg)
+    pre = (patches + params["patch_pos"][None]).astype(tok.dtype)
+    return jnp.concatenate([pre, tok], axis=1)
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict, *, remat: bool = False):
+    """batch {"patches": [B,P,d], "tokens": [B,S]} → logits over the FULL
+    (prefix+text) sequence; the loss layer masks the prefix positions."""
+    embeds = _prefix_embeds(params, cfg, batch["patches"], batch["tokens"])
+    return T.forward(params, cfg, {"embeds": embeds}, remat=remat)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    return T.init_cache(cfg, batch, max_len, dtype)
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, cache: dict,
+            patches: jax.Array | None = None):
+    if patches is not None:
+        embeds = _prefix_embeds(params, cfg, patches, tokens)
+        return T.prefill(params, cfg, tokens, cache, embeds=embeds)
+    return T.prefill(params, cfg, tokens, cache)
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: jax.Array, cache: dict):
+    return T.decode_step(params, cfg, token, cache)

@@ -1,0 +1,105 @@
+"""AdamW optimizer + schedules + global-norm clipping (pure JAX pytrees).
+
+Optimizer state dtype policy: first/second moments are f32 regardless of
+parameter dtype (bf16 params train stably with f32 moments at these scales);
+an optional f32 master copy is available for long runs.  The dry-run memory
+analysis accounts both modes (§Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"  # cosine | linear | constant
+    master_weights: bool = False
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    else:
+        frac = jnp.clip(
+            (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        if cfg.schedule == "cosine":
+            decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        else:
+            decay = 1.0 - frac
+    return cfg.lr * warm * decay
+
+
+def init(cfg: AdamWConfig, params) -> dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.master_weights:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def update(cfg: AdamWConfig, grads, state, params):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    ref = state.get("master", params)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        pf = p.astype(jnp.float32)
+        p2 = pf - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * pf)
+        return m2, v2, p2
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_p = jax.tree.leaves(ref)
+    outs = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = treedef.unflatten([o[0] for o in outs])
+    new_v = treedef.unflatten([o[1] for o in outs])
+    new_f32 = treedef.unflatten([o[2] for o in outs])
+
+    param_dtypes = jax.tree.map(lambda p: p.dtype, params)
+    new_params = jax.tree.map(lambda p32, dt: p32.astype(dt), new_f32, param_dtypes)
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if cfg.master_weights:
+        new_state["master"] = new_f32
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

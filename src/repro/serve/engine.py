@@ -1,0 +1,120 @@
+"""Batched serving engine: slot-based continuous batching over the family
+prefill/decode steps, with continuum-scheduler admission.
+
+The engine owns ``max_slots`` sequence slots backed by one shared KV-cache
+pytree.  Requests are admitted when a slot frees; new prompts are prefixed
+via per-slot prefill (batch=1) and merged into the live cache, then all
+active slots decode in lockstep (classic continuous batching).  Request→
+replica placement across multiple engine replicas (pods) is solved with the
+paper's scheduler — ``repro.core.continuum.place_requests``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.registry import ModelApi
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int = 16
+    # filled by the engine:
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_slots: int = 4
+    max_len: int = 256
+    greedy: bool = True
+
+
+class ServeEngine:
+    """Single-replica continuous-batching engine (CPU-runnable)."""
+
+    def __init__(self, api: ModelApi, cfg: ModelConfig, params, ecfg: EngineConfig):
+        self.api = api
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.cache = api.init_cache(ecfg.max_slots, ecfg.max_len, cfg)
+        self.slot_req: list[Request | None] = [None] * ecfg.max_slots
+        self.slot_remaining = np.zeros(ecfg.max_slots, dtype=np.int64)
+        self.slot_pos = np.zeros(ecfg.max_slots, dtype=np.int64)
+        self.queue: list[Request] = []
+        self._decode = jax.jit(
+            lambda params, token, cache: api.module.decode_step(params, cfg, token, cache)
+        )
+
+    # --- admission ------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.ecfg.max_slots):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_into_slot(slot, req)
+
+    def _prefill_into_slot(self, slot: int, req: Request) -> None:
+        # per-request prefill at batch=1, then merge the slot row
+        tmp_cache = self.api.init_cache(1, self.ecfg.max_len, self.cfg)
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, tmp_cache = self.api.prefill(self.params, toks, tmp_cache, self.cfg)
+        tok0 = int(jnp.argmax(logits[0]))
+        req.output.append(tok0)
+
+        def merge(big, small):
+            if big.ndim >= 2 and small.shape[0] == big.shape[0] and big.ndim == small.ndim:
+                # stacked-layer leaves: batch is axis 1
+                if big.shape[1] == self.ecfg.max_slots and small.shape[1] == 1:
+                    return big.at[:, slot].set(small[:, 0])
+            if big.ndim >= 1 and big.shape[0] == self.ecfg.max_slots and small.shape[0] == 1:
+                return big.at[slot].set(small[0])
+            return big  # scalars (pos) handled below
+
+        self.cache = jax.tree.map(merge, self.cache, tmp_cache)
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = len(req.prompt)
+        self.slot_remaining[slot] = req.max_new_tokens - 1
+
+    # --- decode ----------------------------------------------------------------
+    def step(self) -> None:
+        """One engine tick: admit waiting requests, decode all active slots."""
+        self._admit()
+        active = [s for s in range(self.ecfg.max_slots) if self.slot_req[s] is not None]
+        if not active:
+            return
+        tokens = np.zeros(self.ecfg.max_slots, dtype=np.int32)
+        for s in active:
+            tokens[s] = self.slot_req[s].output[-1]
+        # lockstep decode: cache "pos" is per-engine max; per-slot positions
+        # tracked host-side (homogeneous-position batching)
+        self.cache = {**self.cache, "pos": jnp.asarray(int(self.slot_pos.max()), jnp.int32)}
+        logits, self.cache = self._decode(self.params, jnp.asarray(tokens), self.cache)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for s in active:
+            req = self.slot_req[s]
+            req.output.append(int(nxt[s]))
+            self.slot_pos[s] += 1
+            self.slot_remaining[s] -= 1
+            if self.slot_remaining[s] <= 0:
+                req.done = True
+                self.slot_req[s] = None
+
+    def run_until_done(self, max_ticks: int = 10000) -> None:
+        for _ in range(max_ticks):
+            if not self.queue and all(r is None for r in self.slot_req):
+                return
+            self.step()
+        raise RuntimeError("engine did not drain")

@@ -1,0 +1,59 @@
+"""KV-cache utilities: sizing, slot surgery for continuous batching, and
+int8 block-quantized cache storage (beyond-paper memory lever for decode —
+halves the dominant §Roofline memory term of serve cells vs bf16).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.autoshard import kv_cache_bytes  # re-export sizing  # noqa: F401
+from repro.models.config import ModelConfig
+
+
+def merge_slot(big_cache, small_cache, slot: int, max_slots: int):
+    """Graft a batch=1 prefill cache into slot ``slot`` of an engine cache.
+
+    Handles stacked-layer leaves ([L, B, ...] — batch on axis 1) and flat
+    leaves ([B, ...]); scalars (pos) are left to the caller."""
+
+    def merge(big, small):
+        if big.ndim >= 2 and big.ndim == small.ndim:
+            if big.shape[1] == max_slots and small.shape[1] == 1:
+                return big.at[:, slot].set(small[:, 0])
+        if big.ndim >= 1 and big.shape[0] == max_slots and small.shape[0] == 1:
+            return big.at[slot].set(small[0])
+        return big
+
+    return jax.tree.map(merge, big_cache, small_cache)
+
+
+# -----------------------------------------------------------------------------
+# int8 block-quantized KV storage
+# -----------------------------------------------------------------------------
+
+def quantize_kv(kv: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """[..., S, D] → (int8 codes [..., S, D], f32 scales [..., S, 1]).
+    Per-(position) scaling keeps attention error small (keys/values have
+    position-local dynamic range)."""
+    kf = kv.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(kf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    codes = jnp.clip(jnp.round(kf / scale), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize_kv(codes: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return (codes.astype(jnp.float32) * scale).astype(dtype)
+
+
+def cache_bytes_report(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Sizing for capacity planning (used by the continuum scheduler's
+    HBM-feasibility checks and EXPERIMENTS.md)."""
+    bf16 = kv_cache_bytes(cfg, batch, seq)
+    return {
+        "bf16_bytes": bf16,
+        "int8_bytes": bf16 / 2 * (1 + 4 / (2 * cfg.resolved_head_dim)),
+        "per_chip_bf16_256": bf16 / 256,
+    }

@@ -1,0 +1,39 @@
+"""Sampling strategies for the serving engine: greedy, temperature,
+top-k, top-p (nucleus), all batched and jit-friendly."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    temperature: float = 0.0  # 0 → greedy
+    top_k: int = 0  # 0 → disabled
+    top_p: float = 1.0  # 1 → disabled
+
+
+def sample(
+    logits: jax.Array,  # [B, V] f32
+    key: jax.Array,
+    cfg: SamplingConfig = SamplingConfig(),
+) -> jax.Array:
+    """Returns sampled token ids [B]."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / cfg.temperature
+    if cfg.top_k and cfg.top_k < logits.shape[-1]:
+        kth = jnp.sort(logits, axis=-1)[:, -cfg.top_k][:, None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if cfg.top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative prob ≥ top_p (always keep the max)
+        cutoff_idx = jnp.sum(cum < cfg.top_p, axis=-1)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,50 @@
+"""Evaluation loop: held-out perplexity over the deterministic stream
+(disjoint seed space from training) — the train→eval jobs wired through
+the continuum scheduler in `examples/autoshard_demo.py`."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import DataConfig, SyntheticLMStream
+from repro.models.config import ModelConfig
+from repro.models.registry import ModelApi
+from repro.train.losses import next_token_loss
+
+
+def evaluate(
+    api: ModelApi,
+    cfg: ModelConfig,
+    params,
+    data_cfg: DataConfig,
+    *,
+    batches: int = 8,
+    start_step: int = 1_000_000,
+) -> dict:
+    """Returns {"nll", "perplexity", "tokens"} over `batches` eval batches.
+
+    Held-out protocol: same seed (= same learnable mixture) but a step
+    range far beyond anything training consumes — batches are keyed by
+    (seed, step, host), so this is unseen data from the same distribution."""
+    stream = SyntheticLMStream(data_cfg, step=start_step)
+
+    @jax.jit
+    def eval_step(params, batch):
+        logits, aux = api.module.forward(params, cfg, batch, remat=False)
+        prefix = cfg.num_patches if cfg.family == "vlm" else 0
+        _, metrics = next_token_loss(
+            logits, batch["tokens"], cfg, aux_loss=None, prefix_len=prefix
+        )
+        return metrics["nll"] * metrics["tokens"], metrics["tokens"]
+
+    total_nll, total_tok = 0.0, 0.0
+    for _ in range(batches):
+        batch = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+        nll, tok = eval_step(params, batch)
+        total_nll += float(nll)
+        total_tok += float(tok)
+    nll = total_nll / max(total_tok, 1.0)
+    return {"nll": nll, "perplexity": math.exp(min(nll, 50.0)), "tokens": total_tok}

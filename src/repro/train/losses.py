@@ -1,0 +1,42 @@
+"""Training losses: next-token cross-entropy with z-loss, prefix/pad
+masking, and the MoE auxiliary load-balance term."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def next_token_loss(
+    logits: jax.Array,  # [B, S, V] f32
+    tokens: jax.Array,  # [B, S] int32 (inputs; targets = shift-left)
+    cfg: ModelConfig,
+    *,
+    mask: jax.Array | None = None,  # [B, S] — 1 where the *target* counts
+    aux_loss: jax.Array | None = None,
+    prefix_len: int = 0,  # VLM: logits cover [prefix | text]; loss on text only
+) -> tuple[jax.Array, dict]:
+    if prefix_len:
+        logits = logits[:, prefix_len:]
+    B, S = tokens.shape
+    pred = logits[:, : S - 1]
+    targets = tokens[:, 1:]
+    m = jnp.ones_like(targets, jnp.float32) if mask is None else mask[:, 1:].astype(jnp.float32)
+
+    logz = jax.nn.logsumexp(pred, axis=-1)
+    tgt_logit = jnp.take_along_axis(pred, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - tgt_logit) * m
+    denom = jnp.maximum(m.sum(), 1.0)
+    loss = nll.sum() / denom
+    metrics = {"nll": loss, "tokens": denom}
+    if cfg.z_loss:
+        zl = cfg.z_loss * jnp.sum(jnp.square(logz) * m) / denom
+        loss = loss + zl
+        metrics["z_loss"] = zl
+    if aux_loss is not None:
+        loss = loss + aux_loss
+        metrics["moe_aux"] = aux_loss
+    metrics["loss"] = loss
+    return loss, metrics

@@ -1,0 +1,81 @@
+"""Train-step factory: loss → grad → AdamW update, with per-block remat and
+microbatch gradient accumulation (``lax.scan``) — the memory/throughput
+knobs the §Perf iterations turn.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.registry import ModelApi
+from repro.optim import adamw
+from repro.train.losses import next_token_loss
+
+
+def make_loss_fn(api: ModelApi, cfg: ModelConfig, *, remat: bool = True) -> Callable:
+    def loss_fn(params, batch):
+        logits, aux = api.module.forward(params, cfg, batch, remat=remat)
+        prefix = cfg.num_patches if cfg.family == "vlm" else 0
+        return next_token_loss(
+            logits,
+            batch["tokens"],
+            cfg,
+            mask=batch.get("mask"),
+            aux_loss=aux.get("aux_loss"),
+            prefix_len=prefix,
+        )
+
+    return loss_fn
+
+
+def make_train_step(
+    api: ModelApi,
+    cfg: ModelConfig,
+    opt_cfg: adamw.AdamWConfig,
+    *,
+    remat: bool = True,
+    microbatches: int = 1,
+    grad_compressor=None,  # optional repro.distributed.compression hook
+) -> Callable:
+    """Returns ``train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics)``.  With ``microbatches > 1`` the global batch is split on axis
+    0 and gradients are accumulated in f32 via ``lax.scan`` (memory knob)."""
+    loss_fn = make_loss_fn(api, cfg, remat=remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def acc_body(carry, micro):
+            acc, loss_sum = carry
+            (loss, _metrics), grads = grad_fn(params, micro)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, loss_sum + loss), None
+
+        (acc, loss_sum), _ = jax.lax.scan(acc_body, (zero, jnp.zeros(())), mb)
+        grads = jax.tree.map(lambda a: a / microbatches, acc)
+        return grads, {"loss": loss_sum / microbatches}
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = compute_grads(params, batch)
+        if grad_compressor is not None:
+            grads = grad_compressor(grads)
+        params, opt_state, opt_metrics = adamw.update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return train_step

@@ -1,0 +1,123 @@
+"""Fault-tolerant training loop: checkpoint/restart, straggler monitoring,
+failure injection (for tests), deterministic data resume, sharded steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.data.pipeline import DataConfig, SyntheticLMStream
+from repro.distributed.fault_tolerance import StragglerDetector
+from repro.models.config import ModelConfig
+from repro.models.registry import ModelApi
+from repro.optim import adamw
+from repro.train.train_step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    checkpoint_every: int = 25
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    microbatches: int = 1
+    remat: bool = True
+    seed: int = 0
+    resume: bool = True
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: list
+    final_step: int
+    resumed_from: int | None
+    straggler_flags: list
+
+
+class Trainer:
+    def __init__(
+        self,
+        api: ModelApi,
+        cfg: ModelConfig,
+        opt_cfg: adamw.AdamWConfig,
+        data_cfg: DataConfig,
+        tcfg: TrainerConfig,
+        *,
+        grad_compressor=None,
+        step_delay_injector: Callable[[int], float] | None = None,
+    ):
+        self.api = api
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.stream = SyntheticLMStream(data_cfg)
+        self.ckpt = CheckpointManager(
+            Path(tcfg.checkpoint_dir), keep=tcfg.keep_checkpoints, async_save=False
+        )
+        self.detector = StragglerDetector()
+        self.step_fn = jax.jit(
+            make_train_step(
+                api, cfg, opt_cfg,
+                remat=tcfg.remat, microbatches=tcfg.microbatches,
+                grad_compressor=grad_compressor,
+            )
+        )
+        self.delay_injector = step_delay_injector
+
+    def init_state(self):
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        params = self.api.init(key, self.cfg)
+        opt_state = adamw.init(self.opt_cfg, params)
+        return params, opt_state
+
+    def run(self) -> TrainResult:
+        params, opt_state = self.init_state()
+        start_step = 0
+        resumed_from = None
+        if self.tcfg.resume:
+            template = {"params": params, "opt": opt_state, "data": self.stream.state()}
+            restored, step = self.ckpt.restore(template)
+            if restored is not None:
+                params = restored["params"]
+                opt_state = restored["opt"]
+                self.stream.restore(
+                    jax.tree.map(lambda x: np.asarray(x).item() if np.ndim(x) == 0 else x,
+                                 restored["data"])
+                )
+                start_step = int(step)
+                resumed_from = start_step
+
+        losses: list[float] = []
+        flags: list[int] = []
+        for step in range(start_step, self.tcfg.steps):
+            batch = self.stream.next_batch()
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            t0 = time.perf_counter()
+            params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            if self.delay_injector is not None:
+                dt += self.delay_injector(step)
+            if self.detector.observe(step, dt):
+                flags.append(step)
+            losses.append(loss)
+            if (step + 1) % self.tcfg.checkpoint_every == 0 or step + 1 == self.tcfg.steps:
+                self.ckpt.save(
+                    step + 1,
+                    {"params": params, "opt": opt_state, "data": self.stream.state()},
+                )
+        self.ckpt.wait()
+        return TrainResult(
+            losses=losses,
+            final_step=self.tcfg.steps,
+            resumed_from=resumed_from,
+            straggler_flags=flags,
+        )

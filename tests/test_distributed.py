@@ -1,0 +1,251 @@
+"""Distribution-layer tests that need >1 device run in subprocesses with
+``--xla_force_host_platform_device_count=8`` (the main pytest process keeps
+the real 1-device topology, per the dry-run isolation requirement)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import (
+    ErrorFeedbackState,
+    compress_roundtrip,
+    dequantize,
+    quantize,
+)
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def run_with_devices(body: str, n: int = 8) -> None:
+    script = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={n}'\n"
+        "os.environ['JAX_PLATFORMS'] = 'cpu'\n" + textwrap.dedent(body)
+    )
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True, env=env,
+        timeout=600,
+    )
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr[-4000:]}"
+
+
+# ---------------------------------------------------------------------------
+# compression (single device — pure math)
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000).astype(np.float32)) * 3.0
+    codes, scale, pad = quantize(x)
+    assert codes.dtype == jnp.int8
+    xr = dequantize(codes, scale, pad, x.shape, x.dtype)
+    err = np.abs(np.asarray(x) - np.asarray(xr))
+    # per-block max error ≤ scale/2
+    assert err.max() <= float(scale.max()) / 2 + 1e-7
+
+
+def test_error_feedback_preserves_sum():
+    """Over many steps, error feedback makes the *accumulated* compressed
+    signal track the accumulated true signal (residual stays bounded)."""
+    ef = ErrorFeedbackState()
+    rng = np.random.default_rng(1)
+    total_true = np.zeros(64, np.float32)
+    total_comp = np.zeros(64, np.float32)
+    for _ in range(50):
+        g = rng.standard_normal(64).astype(np.float32) * 0.01
+        total_true += g
+        out = ef({"g": jnp.asarray(g)})
+        total_comp += np.asarray(out["g"])
+    resid = np.abs(np.asarray(ef.residual["g"]))
+    np.testing.assert_allclose(total_comp + np.asarray(ef.residual["g"]), total_true,
+                               atol=1e-5)
+    assert resid.max() < 0.01  # residual bounded by one quantization step
+
+
+def test_zero_tensor_roundtrip():
+    xr, err = compress_roundtrip(jnp.zeros((300,)))
+    assert np.all(np.asarray(xr) == 0) and np.all(np.asarray(err) == 0)
+
+
+# ---------------------------------------------------------------------------
+# multi-device subprocess tests
+# ---------------------------------------------------------------------------
+
+def test_param_sharding_rules_8dev():
+    run_with_devices("""
+    import jax, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_mesh
+    from repro.models.registry import get_model
+    from repro.distributed.sharding import make_param_shardings, ShardingPolicy
+
+    api = get_model("qwen2.5-3b")
+    cfg = api.config
+    mesh = make_mesh((2, 4), ("data", "model"))
+    specs = api.param_specs(cfg)
+    sh = make_param_shardings(mesh, cfg, specs, ShardingPolicy())
+    # embed.tok [V, d]: vocab TP, d FSDP
+    assert sh["embed"]["tok"].spec == P("model", "data"), sh["embed"]["tok"].spec
+    # attn q [L, d, H*hd]: (None, fsdp, tp)
+    q = sh["blocks"][0]["attn"]["q"]["w"].spec
+    assert q == P(None, "data", "model"), q
+    o = sh["blocks"][0]["attn"]["o"]["w"].spec
+    assert o == P(None, "model", "data"), o
+    # norm replicated
+    assert sh["blocks"][0]["ln_attn"]["scale"].spec == P(None, None)
+    # every sharded dim divides
+    import jax.tree_util as jtu
+    for (kp, spec), (_, leaf) in zip(jtu.tree_flatten_with_path(sh)[0],
+                                     jtu.tree_flatten_with_path(specs)[0]):
+        for dim, ax in zip(leaf.shape, spec.spec):
+            if ax is not None:
+                size = mesh.shape[ax] if isinstance(ax, str) else int(np.prod([mesh.shape[a] for a in ax]))
+                assert dim % size == 0, (kp, leaf.shape, spec.spec)
+    print("sharding rules OK")
+    """)
+
+
+def test_moe_expert_sharding_8dev():
+    run_with_devices("""
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_mesh
+    from repro.models.registry import get_model
+    from repro.distributed.sharding import make_param_shardings, ShardingPolicy
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    # qwen3-moe: 128 experts % 4 == 0 → EP over model
+    api = get_model("qwen3-moe-30b-a3b")
+    sh = make_param_shardings(mesh, api.config, api.param_specs(), ShardingPolicy())
+    g = sh["blocks"][0]["moe"]["gate"].spec
+    assert g == P(None, "model", "data", None), g
+    # mixtral: 8 % 4 == 0 too → EP; force non-divisible with a 3-wide model axis
+    mesh2 = make_mesh((2, 3), ("data", "model"))  # 6 devices
+    api2 = get_model("mixtral-8x7b")
+    sh2 = make_param_shardings(mesh2, api2.config, api2.param_specs(), ShardingPolicy())
+    g2 = sh2["blocks"][0]["moe"]["gate"].spec
+    assert g2[0] is None, g2  # experts replicated, TP inside expert
+    print("moe sharding OK")
+    """, n=8)
+
+
+def test_sharded_train_step_matches_single_device():
+    """The distributed train step must be numerically identical to the
+    single-device step (SPMD is a layout, not a math change)."""
+    run_with_devices("""
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.launch.mesh import make_mesh
+    from repro.models.registry import get_model
+    from repro.distributed.sharding import (ShardingPolicy, batch_shardings,
+        make_opt_shardings, make_param_shardings)
+    from repro.optim import adamw
+    from repro.train.train_step import make_train_step
+
+    api = get_model("qwen2.5-3b")
+    cfg = dataclasses.replace(api.reduced, dtype="float32")
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=0, schedule="constant")
+    opt = adamw.init(opt_cfg, params)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab)}
+    step = make_train_step(api, cfg, opt_cfg, remat=False)
+
+    p1, o1, m1 = jax.jit(step)(params, opt, batch)
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    pol = ShardingPolicy()
+    psh = make_param_shardings(mesh, cfg, jax.eval_shape(lambda: params), pol)
+    osh = make_opt_shardings(mesh, cfg, o1, psh, pol)
+    bsh = batch_shardings(mesh, cfg, jax.eval_shape(lambda: batch), pol)
+    pd = jax.device_put(params, psh)
+    od = jax.device_put(opt, osh)
+    bd = jax.device_put(batch, bsh)
+    p2, o2, m2 = jax.jit(step, in_shardings=(psh, osh, bsh))(pd, od, bd)
+
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4, rtol=2e-3)
+    print("sharded == single-device OK")
+    """)
+
+
+def test_compressed_psum_pod_axis():
+    run_with_devices("""
+    import functools, jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    from repro.launch.mesh import make_mesh
+    from repro.distributed.compression import compressed_psum_pod
+
+    mesh = make_mesh((4, 2), ("pod", "x"))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 256)).astype(np.float32))
+
+    f = shard_map(functools.partial(compressed_psum_pod, axis_name="pod"),
+                  mesh=mesh, in_specs=P("pod", None), out_specs=P("pod", None))
+    out = f(x)
+    expect = np.broadcast_to(np.asarray(x).sum(axis=0, keepdims=True), (4, 256))
+    err = np.abs(np.asarray(out) - expect)
+    scale = np.abs(np.asarray(x)).max() / 127
+    assert err.max() <= scale * 4 * 1.5 + 1e-6, err.max()
+    print("compressed psum OK")
+    """)
+
+
+def test_pipeline_parallel_matches_sequential():
+    run_with_devices("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.launch.mesh import make_mesh
+    from repro.distributed.pipeline import pipeline_forward, split_stages
+
+    L, d, M, mb, S = 8, 16, 4, 2, 8
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (L, d, d)) * 0.3
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, mb, S, d))
+
+    def block_fn(stage_w, h):
+        def one(h, wi):
+            return jnp.tanh(h @ wi), None
+        h, _ = jax.lax.scan(one, h, stage_w)
+        return h
+
+    # sequential reference
+    ref = jax.vmap(lambda xm: block_fn(w, xm))(x)
+
+    mesh = make_mesh((4,), ("stage",))
+    stages = split_stages(w, 4)
+    out = pipeline_forward(block_fn, stages, x, mesh)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+    print("pipeline == sequential OK")
+    """, n=4)
+
+
+def test_cross_mesh_checkpoint_restore():
+    """Elastic rescale: save under mesh (2,4), restore under mesh (4,2)."""
+    run_with_devices("""
+    import jax, jax.numpy as jnp, numpy as np, tempfile
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_mesh
+    from repro.checkpoint.checkpoint import save_pytree, restore_pytree
+
+    mesh_a = make_mesh((2, 4), ("data", "model"))
+    tree = {"w": jax.device_put(jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+                                NamedSharding(mesh_a, P("data", "model")))}
+    with tempfile.TemporaryDirectory() as d:
+        save_pytree(tree, d + "/ck")
+        mesh_b = make_mesh((4, 2), ("data", "model"))
+        sh_b = {"w": NamedSharding(mesh_b, P("model", "data"))}
+        out = restore_pytree(tree, d + "/ck", shardings=sh_b)
+        assert out["w"].sharding.mesh.shape == {"data": 4, "model": 2}
+        np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+    print("cross-mesh restore OK")
+    """)

@@ -1,0 +1,194 @@
+"""Evaluator semantics + solver correctness: the Table VI reproduction, the
+capacity co-running case, MILP optimality vs heuristics, MH convergence."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ObjectiveWeights,
+    Task,
+    Workflow,
+    Workload,
+    build_problem,
+    evaluate_assignment,
+    mri_system,
+    mri_w1,
+    mri_w2,
+    mri_workload,
+    verify_schedule,
+)
+from repro.core.evaluator import make_fitness_fn
+from repro.core.heuristics import heft, olb, upward_ranks
+from repro.core.metaheuristics import aco, ga, pso, sa
+from repro.core.milp import MilpSizeError, solve_milp
+from repro.core.simulator import execute
+
+
+# ---------------------------------------------------------------------------
+# evaluator semantics
+# ---------------------------------------------------------------------------
+
+def test_serial_chain_timing():
+    """W1 all on N2: 3 + 5 + 2 = 10 with zero transfers."""
+    prob = build_problem(mri_system(), Workload((mri_w1(),)))
+    s = evaluate_assignment(prob, np.array([1, 1, 1]))
+    assert s.makespan == pytest.approx(10.0)
+    assert s.violations == 0
+    assert list(s.start) == [0.0, 3.0, 8.0]
+
+
+def test_cross_node_transfer_added():
+    """T1 on N1, rest on N2: T2 waits for the 0.02 transfer (Eq. 5/12)."""
+    prob = build_problem(mri_system(), Workload((mri_w1(),)))
+    s = evaluate_assignment(prob, np.array([0, 1, 1]))
+    assert s.start[1] == pytest.approx(3.02)
+    assert s.makespan == pytest.approx(10.02)
+
+
+def test_capacity_corun_allowed():
+    """W2's T2 (12 cores) and T3 (32 cores) co-run on N2 (48 cores) — the
+    paper's Table VI schedule requires this."""
+    prob = build_problem(mri_system(), Workload((mri_w2(),)))
+    s = evaluate_assignment(prob, np.array([1, 1, 1, 1]))
+    assert s.start[1] == pytest.approx(3.0)
+    assert s.start[2] == pytest.approx(3.0)  # co-runs with T2
+    assert s.makespan == pytest.approx(10.0)
+
+
+def test_capacity_exceeded_serializes():
+    """Two 32-core tasks on 48-core N2 cannot co-run."""
+    sys_ = mri_system()
+    wf = Workflow("w", (
+        Task("a", cores=32, work=0, durations={"N1": 2, "N2": 2, "N3": 2}),
+        Task("b", cores=32, work=0, durations={"N1": 2, "N2": 2, "N3": 2}),
+    ))
+    prob = build_problem(sys_, Workload((wf,)))
+    s = evaluate_assignment(prob, np.array([1, 1]))
+    assert s.makespan == pytest.approx(4.0)  # serialized
+    s3 = evaluate_assignment(prob, np.array([2, 2]))
+    assert s3.makespan == pytest.approx(2.0)  # N3 has 2572 cores → co-run
+
+
+def test_infeasible_assignment_penalized():
+    prob = build_problem(mri_system(), Workload((mri_w1(),)))
+    s = evaluate_assignment(prob, np.array([0, 0, 0]))  # T2/T3 need F2
+    assert s.violations == 2
+    assert s.objective > 1e8
+
+
+def test_jax_fitness_matches_oracle():
+    prob = build_problem(mri_system(), mri_workload())
+    fit = make_fitness_fn(prob)
+    rng = np.random.default_rng(0)
+    A = rng.integers(0, prob.num_nodes, (32, prob.num_tasks))
+    obj, mk = fit(A)
+    for k in range(32):
+        ref = evaluate_assignment(prob, A[k])
+        assert float(mk[k]) == pytest.approx(ref.makespan, rel=1e-4)
+        assert float(obj[k]) == pytest.approx(ref.objective, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# MILP — Algorithm 1
+# ---------------------------------------------------------------------------
+
+def test_milp_reproduces_table6_w1():
+    prob = build_problem(mri_system(), Workload((mri_w1(),)))
+    s = solve_milp(prob)
+    assert s.status == "optimal"
+    assert s.makespan == pytest.approx(10.0, abs=1e-5)
+    assert s.usage == pytest.approx(32.0)
+    assert verify_schedule(prob, s) == []
+
+
+def test_milp_reproduces_table6_w2():
+    prob = build_problem(mri_system(), Workload((mri_w2(),)))
+    s = solve_milp(prob)
+    assert s.status == "optimal"
+    assert s.makespan == pytest.approx(10.0, abs=1e-5)
+    assert s.usage == pytest.approx(64.0)
+    assert verify_schedule(prob, s) == []
+
+
+def test_milp_static_mode_matches_paper_capacity():
+    """Paper-faithful Eq. (10): ΣU per node ≤ R_i forces W2 to spread."""
+    prob = build_problem(mri_system(), Workload((mri_w2(),)))
+    s = solve_milp(prob, capacity_mode="static")
+    assert s.status == "optimal"
+    # usage on any node must respect the static budget
+    for i in range(prob.num_nodes):
+        used = prob.usage[s.assignment == i].sum()
+        assert used <= prob.node_cores[i] + 1e-6
+    assert s.makespan == pytest.approx(10.0, abs=1e-4)
+
+
+def test_milp_size_guard():
+    from repro.core import synthetic_workload
+
+    prob = build_problem(mri_system(), synthetic_workload(100, seed=1))
+    with pytest.raises(MilpSizeError):
+        solve_milp(prob, max_tasks=60)
+
+
+def test_milp_respects_release_times():
+    wf = Workflow("w", (Task("a", cores=1, work=0, durations={"N1": 1, "N2": 1, "N3": 1}),),
+                  submission=4.0)
+    prob = build_problem(mri_system(), Workload((wf,)))
+    s = solve_milp(prob)
+    assert s.start[0] >= 4.0 - 1e-6
+    assert s.makespan >= 5.0 - 1e-6
+
+
+# ---------------------------------------------------------------------------
+# heuristics + metaheuristics
+# ---------------------------------------------------------------------------
+
+def test_heft_ranks_decrease_along_edges():
+    prob = build_problem(mri_system(), mri_workload())
+    rank = upward_ranks(prob)
+    for p, j in prob.edges:
+        assert rank[p] > rank[j]
+
+
+@pytest.mark.parametrize("fn", [heft, olb])
+def test_heuristics_valid_and_near_optimal(fn):
+    prob = build_problem(mri_system(), mri_workload())
+    s = fn(prob)
+    assert verify_schedule(prob, s) == []
+    assert s.violations == 0
+    assert s.makespan <= 10.0 * 1.15  # paper: 5–10 % deviation band
+
+
+@pytest.mark.parametrize("fn,kw", [
+    (ga, dict(pop_size=32, generations=30)),
+    (pso, dict(pop_size=32, iterations=30)),
+    (sa, dict(chains=16, steps=120)),
+    (aco, dict(ants=32, iterations=30)),
+])
+def test_metaheuristics_find_mri_optimum(fn, kw):
+    prob = build_problem(mri_system(), mri_workload())
+    res = fn(prob, seed=0, **kw)
+    s = res.schedule
+    assert verify_schedule(prob, s) == []
+    assert s.violations == 0
+    assert s.makespan <= 10.0 + 0.25  # within the paper's deviation band
+    assert len(res.history) > 0
+    # best objective is monotonically improving for elitist methods
+    assert res.history[-1] <= res.history[0] + 1e-6
+
+
+def test_executor_replay_matches_oracle():
+    prob = build_problem(mri_system(), mri_workload())
+    s = evaluate_assignment(prob, np.array([1, 1, 1, 1, 1, 1, 1]))
+    rep = execute(prob, s)
+    assert rep.makespan == pytest.approx(s.makespan)
+    assert rep.slowdown == pytest.approx(1.0)
+
+
+def test_executor_detects_slow_node():
+    prob = build_problem(mri_system(), mri_workload())
+    s = evaluate_assignment(prob, np.array([1, 1, 1, 1, 1, 1, 1]))
+    rep = execute(prob, s, speed_factors=np.array([1.0, 0.5, 1.0]))
+    assert rep.makespan > s.makespan * 1.5
+    factors = rep.observed_speed_factors(prob)
+    assert factors[1] == pytest.approx(0.5, rel=1e-6)

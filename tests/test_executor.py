@@ -1,0 +1,44 @@
+"""Executor façade: simulate / SLURM / Kubernetes rendering (Fig. 4 step 4)."""
+
+import json
+
+from repro.core import build_problem, mri_system, mri_workload
+from repro.core.executor import dispatch
+from repro.core.solver import solve_problem
+
+
+def _solved():
+    system = mri_system()
+    problem = build_problem(system, mri_workload())
+    schedule = solve_problem(problem, "heft").schedule
+    return system, problem, schedule
+
+
+def test_simulate_backend_default():
+    system, problem, schedule = _solved()
+    rep = dispatch(problem, schedule, system)
+    assert rep.makespan == schedule.makespan
+
+
+def test_slurm_rendering(tmp_path):
+    system, problem, schedule = _solved()
+    paths = dispatch(problem, schedule, system, backend="slurm", out_dir=tmp_path)
+    assert len(paths) == problem.num_tasks
+    t2 = next(p for p in paths if "T2" in p.name and "W1" in p.name)
+    text = t2.read_text()
+    assert "--dependency=afterok" in text  # T2 depends on T1
+    assert "--cpus-per-task=12" in text
+    node = [n.name for n in system.nodes][int(schedule.assignment[problem.task_names.index("W1/T2")])]
+    assert f"--nodelist={node}" in text
+
+
+def test_k8s_rendering(tmp_path):
+    system, problem, schedule = _solved()
+    paths = dispatch(problem, schedule, system, backend="kubernetes", out_dir=tmp_path)
+    assert len(paths) == problem.num_tasks
+    m = json.loads(paths[0].read_text())
+    assert m["kind"] == "Job"
+    assert "repro/node" in m["spec"]["template"]["spec"]["nodeSelector"]
+    deps = [json.loads(p.read_text()).get("metadata", {}).get("annotations")
+            for p in paths]
+    assert any(d and "repro/wait-for" in d for d in deps)

@@ -1,0 +1,104 @@
+"""HLO cost-model tests: trip-count scaling, dot flops, collective parsing —
+the §Roofline measurement infrastructure must itself be correct."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_costs import analyze_hlo_text
+from repro.launch.dryrun import collective_bytes
+
+
+def test_scan_trip_count_scaling():
+    """cost_analysis counts a while body once; the parser must scale by the
+    trip count."""
+    def step(xs, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), ()
+        c, _ = jax.lax.scan(body, x, xs)
+        return c.sum()
+
+    trips, m, k, n = 9, 8, 16, 16
+    comp = jax.jit(step).lower(
+        jax.ShapeDtypeStruct((trips, k, n), jnp.float32),
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+    ).compile()
+    costs = analyze_hlo_text(comp.as_text())
+    dot_flops = 2 * m * k * n
+    assert costs.flops >= trips * dot_flops
+    assert costs.flops < trips * dot_flops * 1.5  # no gross overcount
+    # raw cost_analysis undercounts by ~trips
+    raw = comp.cost_analysis()["flops"]
+    assert costs.flops > raw * (trips - 2)
+
+
+def test_single_dot_flops_exact():
+    m, k, n = 32, 64, 16
+    comp = jax.jit(lambda a, b: a @ b).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+    ).compile()
+    costs = analyze_hlo_text(comp.as_text())
+    assert costs.flops == pytest.approx(2 * m * k * n, rel=0.05)
+
+
+def test_batched_dot_flops():
+    b, m, k, n = 4, 8, 32, 16
+    comp = jax.jit(lambda a, c: jnp.einsum("bmk,bkn->bmn", a, c)).lower(
+        jax.ShapeDtypeStruct((b, m, k), jnp.float32),
+        jax.ShapeDtypeStruct((b, k, n), jnp.float32),
+    ).compile()
+    costs = analyze_hlo_text(comp.as_text())
+    assert costs.flops == pytest.approx(2 * b * m * k * n, rel=0.05)
+
+
+def test_nested_scan_multiplies():
+    def step(xs):
+        def outer(c, _):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ c2), ()
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, ()
+        c, _ = jax.lax.scan(outer, xs, None, length=5)
+        return c.sum()
+
+    comp = jax.jit(step).lower(jax.ShapeDtypeStruct((16, 16), jnp.float32)).compile()
+    costs = analyze_hlo_text(comp.as_text())
+    dot = 2 * 16 * 16 * 16
+    assert costs.flops >= 15 * dot  # 5 × 3 nested trips
+    assert costs.flops < 15 * dot * 1.6
+
+
+def test_collective_bytes_regex():
+    hlo = """
+ENTRY %main {
+  %x = f32[16,128]{1,0} parameter(0)
+  %all-reduce.1 = f32[16,128]{1,0} all-reduce(%x), replica_groups={}
+  %ag = bf16[4,256]{1,0} all-gather(%x), dimensions={1}
+  %cp = (f32[8]{0}, f32[8]{0}) collective-permute(%x, %x), source_target_pairs={{0,1}}
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["bytes"]["all-reduce"] == 16 * 128 * 4
+    assert out["bytes"]["all-gather"] == 4 * 256 * 2
+    assert out["bytes"]["collective-permute"] == 2 * 8 * 4
+    assert out["counts"]["all-reduce"] == 1
+
+
+def test_parser_consistent_with_cost_analysis_loop_free():
+    """On a loop-free program the parser must agree with XLA's own
+    cost_analysis (which is correct there) to within elementwise noise."""
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+
+    def loss(w, x):
+        h = jnp.tanh(x @ w)
+        h = jnp.tanh(h @ w)
+        return jnp.sum(h ** 2)
+
+    comp = jax.jit(jax.grad(loss)).lower(w, x).compile()
+    parsed = analyze_hlo_text(comp.as_text()).flops
+    raw = comp.cost_analysis()["flops"]
+    assert parsed == pytest.approx(raw, rel=0.1), (parsed, raw)

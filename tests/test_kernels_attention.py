@@ -1,0 +1,108 @@
+"""Flash / decode attention Pallas kernels vs jnp oracles — shape, dtype,
+GQA-group, masking and softcap sweeps (interpret mode)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,D", [
+    (1, 4, 4, 128, 32),    # MHA
+    (2, 4, 2, 128, 64),    # GQA 2x
+    (1, 8, 2, 256, 32),    # GQA 4x
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_shapes_dtypes(B, H, Hkv, S, D, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(k1, (B, H, S, D), dtype)
+    k = _rand(k2, (B, Hkv, S, D), dtype)
+    v = _rand(k3, (B, Hkv, S, D), dtype)
+    out = flash_attention_pallas(q, k, v, block_q=64, block_k=64)
+    exp = ref.flash_attention_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("kw", [
+    dict(causal=True),
+    dict(causal=False),
+    dict(causal=True, window=32),       # SWA (mixtral) / local (gemma2)
+    dict(causal=True, window=64),
+    dict(causal=True, softcap=50.0),    # gemma2 logit softcap
+    dict(causal=True, window=32, softcap=50.0),
+])
+def test_flash_masking_modes(kw):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(k1, (2, 4, 128, 32), jnp.float32)
+    k = _rand(k2, (2, 2, 128, 32), jnp.float32)
+    v = _rand(k3, (2, 2, 128, 32), jnp.float32)
+    out = flash_attention_pallas(q, k, v, block_q=32, block_k=32, **kw)
+    exp = ref.flash_attention_ref(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_kv_longer_than_q():
+    """Chunked prefill: Skv > Sq with the causal offset."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = _rand(k1, (1, 2, 64, 32), jnp.float32)
+    k = _rand(k2, (1, 2, 256, 32), jnp.float32)
+    v = _rand(k3, (1, 2, 256, 32), jnp.float32)
+    out = flash_attention_pallas(q, k, v, block_q=32, block_k=64)
+    exp = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+def test_blockwise_jnp_path_matches_ref():
+    """The dry-run's lax.map blockwise attention == dense reference."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _rand(k1, (1, 4, 1024, 32), jnp.float32)
+    k = _rand(k2, (1, 2, 1024, 32), jnp.float32)
+    v = _rand(k3, (1, 2, 1024, 32), jnp.float32)
+    out = ops._blockwise_attention_jnp(
+        q, k, v, causal=True, window=None, softcap=None, scale=None, block_q=256
+    )
+    exp = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,D", [
+    (1, 4, 4, 256, 32),
+    (3, 8, 2, 512, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_shapes_dtypes(B, H, Hkv, S, D, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = _rand(k1, (B, H, D), dtype)
+    kc = _rand(k2, (B, Hkv, S, D), dtype)
+    vc = _rand(k3, (B, Hkv, S, D), dtype)
+    lengths = jnp.asarray([S] + [S // 3] * (B - 1), jnp.int32)[:B]
+    out = decode_attention_pallas(q, kc, vc, lengths, block_k=128)
+    exp = ref.decode_attention_ref(q, kc, vc, lengths)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_decode_length_one():
+    """Fresh cache with a single valid entry."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = _rand(k1, (2, 4, 32), jnp.float32)
+    kc = _rand(k2, (2, 2, 128, 32), jnp.float32)
+    vc = _rand(k3, (2, 2, 128, 32), jnp.float32)
+    lengths = jnp.asarray([1, 1], jnp.int32)
+    out = decode_attention_pallas(q, kc, vc, lengths, block_k=64)
+    exp = ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5, rtol=2e-5)

@@ -1,0 +1,121 @@
+"""KV quantization accuracy + the end-to-end elastic rescale drill:
+train → checkpoint → lose a 'pod' → remesh → restore → continue, with the
+loss trajectory preserved."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import get_model
+from repro.serve.kvcache import cache_bytes_report, dequantize_kv, quantize_kv
+from tests.test_distributed import run_with_devices
+
+
+def test_kv_quantization_attention_error():
+    """int8 KV must keep decode-attention outputs close to bf16."""
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(0)
+    B, H, Hkv, S, D = 2, 4, 2, 128, 32
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), jnp.float32)
+    lengths = jnp.full((B,), S, jnp.int32)
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    out_q = ref.decode_attention_ref(q, dequantize_kv(kq, ks, jnp.float32),
+                                     dequantize_kv(vq, vs, jnp.float32), lengths)
+    out = ref.decode_attention_ref(q, k, v, lengths)
+    err = float(jnp.max(jnp.abs(out - out_q)))
+    assert err < 0.05, err
+
+
+def test_kv_roundtrip_error_bound():
+    rng = np.random.default_rng(1)
+    kv = jnp.asarray(rng.standard_normal((4, 2, 64, 32)), jnp.float32) * 3
+    codes, scale = quantize_kv(kv)
+    back = dequantize_kv(codes, scale, jnp.float32)
+    assert float(jnp.max(jnp.abs(kv - back))) <= float(scale.max()) / 2 + 1e-6
+
+
+def test_cache_bytes_report_sane():
+    cfg = get_model("qwen2.5-3b").config
+    rep = cache_bytes_report(cfg, batch=128, seq=32768)
+    assert rep["int8_bytes"] < rep["bf16_bytes"] * 0.6
+    # 36L × 128B × 2kv × 32k × 128hd × 2(K,V) × 2B
+    expect = 36 * 128 * 2 * 32768 * 128 * 2 * 2
+    assert rep["bf16_bytes"] == pytest.approx(expect)
+
+
+def test_elastic_rescale_end_to_end():
+    """Save under a 2-'pod' mesh, restore under 1 pod (plan_remesh), keep
+    training — losses must continue the original trajectory exactly."""
+    run_with_devices("""
+    import dataclasses, tempfile
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.checkpoint.checkpoint import save_pytree, restore_pytree
+    from repro.data.pipeline import DataConfig, SyntheticLMStream
+    from repro.distributed.fault_tolerance import plan_remesh
+    from repro.distributed.sharding import (ShardingPolicy, batch_shardings,
+        make_opt_shardings, make_param_shardings)
+    from repro.launch.mesh import make_mesh
+    from repro.models.registry import get_model
+    from repro.optim import adamw
+    from repro.train.train_step import make_train_step
+
+    api = get_model("qwen2.5-3b")
+    cfg = dataclasses.replace(api.reduced, dtype="float32", vocab=64)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=0, schedule="constant")
+    data = SyntheticLMStream(DataConfig(vocab=64, seq_len=32, global_batch=4, seed=3))
+    step = make_train_step(api, cfg, opt_cfg, remat=False)
+
+    # reference: 6 uninterrupted steps on one device
+    p_ref = api.init(jax.random.PRNGKey(0), cfg)
+    o_ref = adamw.init(opt_cfg, p_ref)
+    ref_losses = []
+    d_ref = SyntheticLMStream(DataConfig(vocab=64, seq_len=32, global_batch=4, seed=3))
+    jstep = jax.jit(step)
+    for _ in range(6):
+        b = {k: jnp.asarray(v) for k, v in d_ref.next_batch().items()}
+        p_ref, o_ref, m = jstep(p_ref, o_ref, b)
+        ref_losses.append(float(m["loss"]))
+
+    # phase 1: "2 pods" mesh (pod=2, data=2, model=2) for 3 steps
+    mesh_a = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    pol = ShardingPolicy()
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init(opt_cfg, params)
+    psh = make_param_shardings(mesh_a, cfg, jax.eval_shape(lambda: params), pol)
+    osh = make_opt_shardings(mesh_a, cfg, opt, psh, pol)
+    params = jax.device_put(params, psh); opt = jax.device_put(opt, osh)
+    jstep_a = jax.jit(step, in_shardings=(psh, osh, None),
+                      out_shardings=(psh, osh, None))
+    losses = []
+    for _ in range(3):
+        b = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+        params, opt, m = jstep_a(params, opt, b)
+        losses.append(float(m["loss"]))
+
+    with tempfile.TemporaryDirectory() as d:
+        save_pytree({"p": params, "o": opt}, d + "/ck")
+        # phase 2: pod lost → remesh to (data=2, model=2), 4 devices
+        plan = plan_remesh(surviving_pods=1, chips_per_pod=4, model_parallel=2)
+        assert plan.mesh_shape == (2, 2)
+        mesh_b = make_mesh(plan.mesh_shape, plan.axis_names)
+        psh_b = make_param_shardings(mesh_b, cfg, jax.eval_shape(lambda: params), pol)
+        osh_b = make_opt_shardings(mesh_b, cfg, opt, psh_b, pol)
+        out = restore_pytree({"p": params, "o": opt}, d + "/ck",
+                             shardings={"p": psh_b, "o": osh_b})
+        params_b, opt_b = out["p"], out["o"]
+        jstep_b = jax.jit(step, in_shardings=(psh_b, osh_b, None),
+                          out_shardings=(psh_b, osh_b, None))
+        for _ in range(3):
+            b = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+            params_b, opt_b, m = jstep_b(params_b, opt_b, b)
+            losses.append(float(m["loss"]))
+
+    np.testing.assert_allclose(losses, ref_losses, rtol=1e-4)
+    print("elastic rescale trajectory preserved:", [round(x, 4) for x in losses])
+    """)

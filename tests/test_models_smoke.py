@@ -1,0 +1,203 @@
+"""Per-architecture smoke tests on REDUCED configs (the full configs are
+exercised only via the dry-run): one forward + one train step on CPU with
+shape and NaN assertions, plus prefill/decode consistency per family."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ALL_ARCHS, get_model
+from repro.optim import adamw
+from repro.train.train_step import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32):
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(7), (B, S), 0, cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["frames"] = (
+            jax.random.normal(jax.random.PRNGKey(8), (B, cfg.enc_frames, cfg.d_model)) * 0.1
+        ).astype(jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        batch["patches"] = (
+            jax.random.normal(jax.random.PRNGKey(9), (B, cfg.num_patches, cfg.d_model)) * 0.1
+        ).astype(jnp.dtype(cfg.dtype))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_shapes_no_nans(arch):
+    api = get_model(arch)
+    cfg = api.reduced
+    params = api.init(KEY, cfg)
+    B, S = 2, 32
+    logits, aux = api.forward(params, _batch(cfg, B, S), cfg)
+    prefix = cfg.num_patches if cfg.family == "vlm" else 0
+    assert logits.shape == (B, S + prefix, cfg.vocab)
+    assert logits.dtype == jnp.float32
+    assert not bool(jnp.isnan(logits).any())
+    assert not bool(jnp.isnan(aux["aux_loss"]))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_one_train_step(arch):
+    api = get_model(arch)
+    cfg = api.reduced
+    params = api.init(KEY, cfg)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt_state = adamw.init(opt_cfg, params)
+    step = jax.jit(make_train_step(api, cfg, opt_cfg, remat=True))
+    params2, opt_state2, metrics = step(params, opt_state, _batch(cfg))
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["loss"]) > 0
+    # parameters actually moved
+    moved = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert moved
+    assert int(opt_state2["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "gemma2-2b", "mixtral-8x7b",
+                                  "qwen3-moe-30b-a3b", "stablelm-1.6b", "internvl2-76b"])
+def test_prefill_decode_matches_forward(arch):
+    """Teacher-forced decode must reproduce the full-forward logits.
+
+    MoE configs use a lossless capacity factor here: with token dropping,
+    forward(S) and prefill(S/2) legitimately drop different tokens —
+    equivalence only holds when no token is dropped."""
+    import dataclasses
+
+    api = get_model(arch)
+    cfg = api.reduced
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, capacity_factor=64.0)
+    params = api.init(KEY, cfg)
+    B, S, split = 2, 16, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    batch = _batch(cfg, B, S)
+    batch["tokens"] = toks
+    logits_full, _ = api.forward(params, batch, cfg)
+    prefix = cfg.num_patches if cfg.family == "vlm" else 0
+
+    cache = api.init_cache(B, 64, cfg)
+    extras = {}
+    if cfg.family == "vlm":
+        extras["patches"] = batch["patches"]
+    lg, cache = api.prefill(params, toks[:, :split], cache, cfg, **extras)
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(logits_full[:, prefix + split - 1]),
+        rtol=5e-2, atol=5e-2,
+    )
+    for t in range(split, S):
+        lg, cache = api.decode_step(params, toks[:, t], cache, cfg)
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(logits_full[:, prefix + t]),
+            rtol=5e-2, atol=5e-2,
+        )
+
+
+@pytest.mark.parametrize("arch", ["mamba2-780m", "zamba2-7b"])
+def test_ssm_prefill_decode_matches_forward(arch):
+    api = get_model(arch)
+    cfg = api.reduced
+    params = api.init(KEY, cfg)
+    B, S, split = 2, 16, 8
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    logits_full, _ = api.forward(params, {"tokens": toks}, cfg)
+    cache = api.init_cache(B, 64, cfg)
+    lg, cache = api.prefill(params, toks[:, :split], cache, cfg)
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(logits_full[:, split - 1]), rtol=5e-2, atol=5e-2
+    )
+    for t in range(split, S):
+        lg, cache = api.decode_step(params, toks[:, t], cache, cfg)
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(logits_full[:, t]), rtol=5e-2, atol=5e-2
+        )
+
+
+def test_whisper_prefill_decode_matches_forward():
+    api = get_model("whisper-base")
+    cfg = api.reduced
+    params = api.init(KEY, cfg)
+    B, S, split = 2, 12, 6
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab)
+    frames = (jax.random.normal(jax.random.PRNGKey(4), (B, cfg.enc_frames, cfg.d_model)) * 0.1
+              ).astype(jnp.dtype(cfg.dtype))
+    logits_full, _ = api.forward(params, {"tokens": toks, "frames": frames}, cfg)
+    cache = api.init_cache(B, 64, cfg)
+    lg, cache = api.prefill(params, toks[:, :split], cache, cfg, frames=frames)
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(logits_full[:, split - 1]), rtol=5e-2, atol=5e-2
+    )
+    for t in range(split, S):
+        lg, cache = api.decode_step(params, toks[:, t], cache, cfg)
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(logits_full[:, t]), rtol=5e-2, atol=5e-2
+        )
+
+
+def test_gemma2_window_bounds_cache():
+    """gemma2 local layers must allocate window-sized (not S-sized) caches."""
+    api = get_model("gemma2-2b")
+    cfg = api.reduced  # window=8
+    cache = api.init_cache(2, 64, cfg)
+    local_kv, global_kv = cache["kv"]
+    assert local_kv["k"].shape[3] == cfg.window
+    assert global_kv["k"].shape[3] == 64
+
+
+def test_sliding_window_ring_buffer_decode():
+    """mixtral-style SWA: decode past the window stays correct vs a full
+    forward restricted to the window."""
+    import dataclasses
+
+    api = get_model("mixtral-8x7b")
+    cfg = dataclasses.replace(api.reduced, capacity_factor=64.0)  # window=8, lossless MoE
+    params = api.init(KEY, cfg)
+    B, S = 1, 24
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0, cfg.vocab)
+    logits_full, _ = api.forward(params, {"tokens": toks}, cfg)
+    cache = api.init_cache(B, 16, cfg)  # cache smaller than S → ring wraps
+    lg, cache = api.prefill(params, toks[:, :12], cache, cfg)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(logits_full[:, 11]),
+                               rtol=5e-2, atol=5e-2)
+    for t in range(12, S):
+        lg, cache = api.decode_step(params, toks[:, t], cache, cfg)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(logits_full[:, t]),
+                                   rtol=5e-2, atol=5e-2)
+
+
+def test_param_counts_match_analytic():
+    for arch in ALL_ARCHS:
+        api = get_model(arch)
+        cfg = api.reduced
+        params = api.init(KEY, cfg)
+        n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+        assert n == cfg.param_count(), arch
+
+
+def test_full_config_param_counts_in_range():
+    expected = {
+        "qwen2.5-3b": (3.0e9, 3.8e9),
+        "stablelm-1.6b": (1.4e9, 1.9e9),
+        "deepseek-67b": (64e9, 70e9),
+        "gemma2-2b": (2.2e9, 3.2e9),
+        "whisper-base": (0.05e9, 0.11e9),
+        "mamba2-780m": (0.7e9, 0.85e9),
+        "qwen3-moe-30b-a3b": (29e9, 32e9),
+        "mixtral-8x7b": (45e9, 48e9),
+        "zamba2-7b": (6.0e9, 8.0e9),
+        "internvl2-76b": (68e9, 73e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_model(arch).config.param_count()
+        assert lo <= n <= hi, (arch, n)
+    # MoE active counts
+    assert 2.5e9 <= get_model("qwen3-moe-30b-a3b").config.active_param_count() <= 4e9
+    assert 12e9 <= get_model("mixtral-8x7b").config.active_param_count() <= 14e9

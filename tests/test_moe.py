@@ -1,0 +1,82 @@
+"""MoE dispatch correctness: capacity dispatch vs the dense oracle, aux
+load-balance loss, capacity math, drop behaviour."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.moe import moe_capacity, moe_ffn, moe_ffn_dense_ref, moe_init
+
+CFG = ModelConfig(
+    name="t", family="moe", num_layers=1, d_model=32, vocab=64,
+    num_heads=4, num_kv_heads=2, head_dim=8,
+    num_experts=8, top_k=2, d_ff_expert=16, capacity_factor=64.0,  # lossless
+)
+
+
+def _setup(cfg=CFG, B=2, S=16, seed=0):
+    params = moe_init(jax.random.PRNGKey(seed), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, S, cfg.d_model)) * 0.5
+    return params, x
+
+
+def test_lossless_capacity_matches_dense_oracle():
+    params, x = _setup()
+    y, aux = moe_ffn(params, x, CFG)
+    y_ref = moe_ffn_dense_ref(params, x, CFG)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5, rtol=1e-5)
+
+
+def test_gates_renormalized():
+    """Top-k gate weights sum to 1 → output magnitude independent of k."""
+    params, x = _setup()
+    cfg1 = dataclasses.replace(CFG, top_k=1)
+    y1, _ = moe_ffn(params, x, cfg1)
+    assert np.isfinite(np.asarray(y1)).all()
+
+
+def test_aux_loss_uniform_router_is_one_coef():
+    """With a perfectly uniform router, aux = coef · E · Σ (1/E · 1/E) · E = coef."""
+    cfg = dataclasses.replace(CFG, aux_loss_coef=0.01)
+    params, x = _setup(cfg)
+    params = {**params, "router": {"w": jnp.zeros_like(params["router"]["w"])}}
+    _, aux = moe_ffn(params, x, cfg)
+    # uniform probs → me = 1/E; top-1 ties broken deterministically → ce is
+    # a one-hot distribution; aux = coef·E·Σ me·ce = coef·E·(1/E) = coef
+    assert float(aux) == pytest.approx(0.01, rel=1e-3)
+
+
+def test_capacity_dropping_bounds_work():
+    """With capacity_factor=1.0, per-expert tokens ≤ C and output stays finite."""
+    cfg = dataclasses.replace(CFG, capacity_factor=1.0)
+    params, x = _setup(cfg, B=4, S=32)
+    y, aux = moe_ffn(params, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+    # dropped tokens pass through with zero MoE contribution — y can differ
+    y_ref = moe_ffn_dense_ref(params, x, cfg)
+    assert not np.allclose(np.asarray(y), np.asarray(y_ref))
+
+
+def test_moe_capacity_rounding():
+    cfg = dataclasses.replace(CFG, capacity_factor=1.25)
+    c = moe_capacity(cfg, 1024)
+    assert c >= 1024 * cfg.top_k * 1.25 / cfg.num_experts
+    assert c % 8 == 0
+
+
+def test_dispatch_permutation_invariance():
+    """Shuffling tokens then unshuffling gives the same outputs (lossless
+    capacity) — the sort-based dispatch must not couple tokens."""
+    params, x = _setup()
+    B, S, d = x.shape
+    y, _ = moe_ffn(params, x, CFG)
+    perm = jax.random.permutation(jax.random.PRNGKey(9), S)
+    y_p, _ = moe_ffn(params, x[:, perm], CFG)
+    np.testing.assert_allclose(
+        np.asarray(y[:, perm]), np.asarray(y_p), atol=1e-5, rtol=1e-5
+    )

@@ -1,0 +1,202 @@
+"""Serving engine, Snakemake I/O (Fig 5/6 dialect), continuum job scheduling,
+autoshard roofline estimates, monitor feedback loop."""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    ObjectiveWeights,
+    build_problem,
+    mri_system,
+    mri_workload,
+    solve_problem,
+    verify_schedule,
+    Workload,
+)
+from repro.core.autoshard import Layout, best_layout, estimate, kv_cache_bytes
+from repro.core.continuum import (
+    Job,
+    default_job_mix,
+    schedule_jobs,
+    training_step_workflow,
+)
+from repro.core.monitor import MonitorState
+from repro.core.simulator import execute
+from repro.core.snakemake_io import load_config, parse_rules
+from repro.configs.shapes import SHAPES
+from repro.models.registry import get_model
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+FIG6_SNAKEFILE = """
+rule T1: # dependencies
+ input:
+ experiment.conf
+ output:
+ product1.dat
+ resources:
+ mem_mb = [1024] # memory_required, (R2)
+ features = ["F1", "F2"] # requested features
+ data = 2GiB # estimated output size, (R3)
+ duration = [1000] # usage, in seconds
+ run:
+ # Execute shell command/script
+
+rule T2:
+ input:
+ product1.dat
+ output:
+ product2.dat
+ resources:
+ features = ["F1"]
+"""
+
+
+def test_parse_fig6_rules():
+    wf = parse_rules(FIG6_SNAKEFILE)
+    assert [t.name for t in wf.tasks] == ["T1", "T2"]
+    t1, t2 = wf.tasks
+    assert t1.memory == 1024
+    assert t1.features == {"F1", "F2"}
+    assert t1.data == 2.0
+    assert t1.work == 1000.0
+    assert t2.deps == ("T1",)  # inferred from product1.dat
+
+
+def test_schedule_json_contract(tmp_path):
+    prob = build_problem(mri_system(), mri_workload())
+    rep = solve_problem(prob, "heft")
+    obj = rep.schedule.to_json(prob, [n.name for n in mri_system().nodes])
+    assert obj["makespan"] > 0
+    assert len(obj["schedule"]) == prob.num_tasks
+    # sorted by start time
+    starts = [e["start"] for e in obj["schedule"]]
+    assert starts == sorted(starts)
+    path = tmp_path / "sched.json"
+    path.write_text(json.dumps(obj))
+    assert json.loads(path.read_text())["technique"] == "heft"
+
+
+def test_load_combined_config(tmp_path):
+    obj = {
+        "nodes": {"N1": {"cores": [4], "features": ["F1"],
+                         "processing_speed": [1.0], "data_transfer_rate": [10]}},
+        "Workflow 1": {"tasks": {"T1": {"cores": [1], "duration": [5],
+                                        "features": ["F1"], "dependencies": []}}},
+    }
+    p = tmp_path / "config.json"
+    p.write_text(json.dumps(obj))
+    system, workload = load_config(p)
+    assert system.num_nodes == 1
+    assert workload.num_tasks == 1
+
+
+def test_monitor_feedback_improves_prediction():
+    """Fig. 4 loop: solve → execute (slow node) → monitor updates P →
+    re-solve predicts the observed reality."""
+    system = mri_system()
+    prob = build_problem(system, mri_workload())
+    rep = solve_problem(prob, "heft")
+    slow = np.array([1.0, 0.5, 1.0])  # N2 at half speed
+    run1 = execute(prob, rep.schedule, speed_factors=slow)
+    assert run1.slowdown > 1.2
+
+    mon = MonitorState(smoothing=1.0)
+    mon.update(system, prob, run1)
+    system2 = mon.refreshed_system(system)
+    assert system2.nodes[1].processing_speed == pytest.approx(0.5, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# continuum / autoshard
+# ---------------------------------------------------------------------------
+
+def test_roofline_estimates_sane():
+    cfg = get_model("deepseek-67b").config
+    est = estimate(cfg, SHAPES["train_4k"], Layout(dp=16, tp=16))
+    assert est.compute_s > 0 and est.memory_s > 0
+    assert est.bottleneck in ("compute", "memory", "collective")
+    # training a 67B dense model at 1M tokens/step on 256 v5e chips: the
+    # compute term must be O(10 s), not O(ms) or O(hours)
+    assert 1.0 < est.compute_s < 100.0
+
+
+def test_decode_is_memory_bound():
+    cfg = get_model("qwen2.5-3b").config
+    est = estimate(cfg, SHAPES["decode_32k"], Layout(dp=16, tp=16))
+    assert est.bottleneck == "memory"  # decode streams params+KV
+
+
+def test_kv_bytes_window_bounded():
+    g = get_model("gemma2-2b").config
+    q = get_model("qwen2.5-3b").config
+    # gemma2 local layers cap their KV at the window — much smaller than a
+    # same-depth full-attention model at 512k
+    assert kv_cache_bytes(g, 1, 524288) < 0.7 * kv_cache_bytes(q, 1, 524288) * (26 / 36) * 4
+
+
+def test_best_layout_respects_hbm():
+    cfg = get_model("deepseek-67b").config
+    lay, est = best_layout(cfg, SHAPES["train_4k"], chips=256)
+    assert est.hbm_per_chip <= 16 * 1024**3
+
+
+def test_schedule_jobs_end_to_end():
+    rep, system = schedule_jobs(technique="heft")
+    assert rep.schedule.violations == 0
+    assert verify_schedule(rep.problem, rep.schedule) == []
+    assert np.isfinite(rep.schedule.makespan)
+    # dependencies (train → serve) respected is covered by verify_schedule
+
+
+def test_training_step_workflow_dag():
+    wf = training_step_workflow("qwen2.5-3b", groups=4)
+    assert wf.num_tasks == 4 + 4 + 1
+    names = {t.name: t for t in wf.tasks}
+    assert "fwd0" in names["bwd0"].deps or "bwd1" in names["bwd0"].deps
+    assert len(names["update"].deps) == 4
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+def test_engine_matches_manual_decode():
+    api = get_model("qwen2.5-3b")
+    cfg = api.reduced
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    prompt = np.array([3, 1, 4, 1, 5], dtype=np.int32)
+
+    # manual greedy: prefill + decode
+    cache = api.init_cache(1, 64, cfg)
+    lg, cache = api.prefill(params, jnp.asarray(prompt)[None], cache, cfg)
+    expected = [int(jnp.argmax(lg[0]))]
+    for _ in range(4):
+        lg, cache = api.decode_step(params, jnp.asarray([expected[-1]], jnp.int32), cache, cfg)
+        expected.append(int(jnp.argmax(lg[0])))
+
+    eng = ServeEngine(api, cfg, params, EngineConfig(max_slots=2, max_len=64))
+    req = Request(rid=0, prompt=prompt, max_new_tokens=5)
+    eng.submit(req)
+    eng.run_until_done()
+    assert req.done
+    assert req.output == expected
+
+
+def test_engine_batches_multiple_requests():
+    api = get_model("qwen2.5-3b")
+    cfg = api.reduced
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(api, cfg, params, EngineConfig(max_slots=2, max_len=64))
+    reqs = [Request(rid=i, prompt=np.arange(3 + i, dtype=np.int32) % cfg.vocab,
+                    max_new_tokens=4) for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    assert all(len(r.output) == 4 for r in reqs)

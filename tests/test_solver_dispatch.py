@@ -1,0 +1,92 @@
+"""Unified solver API: auto-hybrid dispatch thresholds, objective-weight
+plumbing, comparison harness, schedule JSON ordering."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ObjectiveWeights,
+    Workload,
+    build_problem,
+    compare_techniques,
+    mri_system,
+    mri_workload,
+    random_layered_workflow,
+    solve,
+    solve_problem,
+    synthetic_system,
+    synthetic_workload,
+)
+from repro.core.evaluator import evaluate_assignment
+
+
+def test_auto_uses_milp_when_small():
+    rep = solve(mri_system(), mri_workload(), technique="auto")
+    assert rep.schedule.technique.startswith("milp")
+
+
+def test_auto_falls_back_to_mh_midrange():
+    system = synthetic_system(4, seed=0)
+    wl = synthetic_workload(40, seed=0)  # > milp threshold (25)
+    rep = solve(system, wl, technique="auto", generations=5, pop_size=16)
+    assert rep.schedule.technique == "ga"
+    assert rep.schedule.violations == 0
+
+
+def test_auto_uses_heuristic_at_scale():
+    system = synthetic_system(8, seed=1)
+    wl = synthetic_workload(700, seed=1)  # > mh threshold (600)
+    rep = solve(system, wl, technique="auto")
+    assert rep.schedule.technique == "heft"
+
+
+def test_unknown_technique_rejected():
+    with pytest.raises(KeyError, match="unknown technique"):
+        solve(mri_system(), mri_workload(), technique="quantum")
+
+
+def test_objective_weights_change_tradeoff():
+    """With usage_mode='weighted' (Eq. 3), a big α should push tasks toward
+    low-share nodes even at some makespan cost."""
+    system = mri_system()
+    prob = build_problem(system, Workload((mri_workload().workflows[0],)))
+    from repro.core.milp import solve_milp
+
+    cheap = solve_milp(prob, ObjectiveWeights(alpha=100.0, beta=1.0, usage_mode="weighted"))
+    fast = solve_milp(prob, ObjectiveWeights(alpha=0.0, beta=1.0, usage_mode="weighted"))
+    assert cheap.status == "optimal" and fast.status == "optimal"
+    assert fast.makespan <= cheap.makespan + 1e-6
+    # weighted usage must be no worse for the α-heavy solve
+    wu = prob.weighted_usage()
+    u_cheap = wu[np.arange(prob.num_tasks), cheap.assignment].sum()
+    u_fast = wu[np.arange(prob.num_tasks), fast.assignment].sum()
+    assert u_cheap <= u_fast + 1e-6
+
+
+def test_compare_techniques_skips_oversized_milp():
+    system = synthetic_system(4, seed=2)
+    wl = synthetic_workload(80, seed=2)
+    out = compare_techniques(system, wl, techniques=("milp", "heft"),
+                             max_tasks=25)
+    assert out["milp"].status == "skipped(size)"
+    assert out["heft"].violations == 0
+
+
+def test_schedule_json_is_start_sorted():
+    prob = build_problem(mri_system(), mri_workload())
+    sched = solve_problem(prob, "olb").schedule
+    obj = sched.to_json(prob)
+    starts = [e["start"] for e in obj["schedule"]]
+    assert starts == sorted(starts)
+
+
+def test_fitness_penalty_keeps_mh_feasible():
+    """Feature-constrained workflows: the BIG_PENALTY must push GA to
+    all-feasible assignments."""
+    from repro.core.metaheuristics import ga
+
+    system = mri_system()
+    wf = random_layered_workflow(12, seed=5, feature_pool=("F1", "F2"), max_cores=8)
+    prob = build_problem(system, Workload((wf,)))
+    res = ga(prob, seed=1, pop_size=24, generations=25)
+    assert res.schedule.violations == 0

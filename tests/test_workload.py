@@ -1,0 +1,131 @@
+"""Workload-model tests (paper §IV-B2, Table II/V): DAG validation, topo
+ordering, JSON I/O, generators, problem building."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (  # noqa
+    Task,
+    Workflow,
+    Workload,
+    build_problem,
+    mri_system,
+    mri_w1,
+    mri_w2,
+    random_layered_workflow,
+    synthetic_workload,
+    testcase1_workloads as tc1_workloads,
+    workload_from_json,
+    workload_to_json,
+)
+from repro.core.workload_model import topological_order
+
+
+def test_dag_cycle_rejected():
+    with pytest.raises(ValueError, match="not a DAG"):
+        Workflow("bad", (
+            Task("a", deps=("b",)),
+            Task("b", deps=("a",)),
+        ))
+
+
+def test_unknown_dep_rejected():
+    with pytest.raises(ValueError, match="unknown deps"):
+        Workflow("bad", (Task("a", deps=("ghost",)),))
+
+
+def test_duplicate_names_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        Workflow("bad", (Task("a"), Task("a")))
+
+
+def test_topological_order_valid():
+    wf = random_layered_workflow(30, seed=1)
+    order = topological_order(wf.tasks)
+    seen = set()
+    for idx in order:
+        for d in wf.tasks[idx].deps:
+            assert any(wf.tasks[s].name == d for s in seen), "dep after task"
+        seen.add(idx)
+
+
+def test_mri_w1_matches_table5():
+    wf = mri_w1()
+    assert wf.num_tasks == 3
+    t2 = wf.tasks[1]
+    assert t2.cores == 12 and t2.data == 5 and t2.deps == ("T1",)
+    assert t2.features == {"F1", "F2"}
+    assert t2.durations["N2"] == 5.0
+
+
+def test_mri_w2_diamond():
+    wf = mri_w2()
+    t4 = wf.tasks[3]
+    assert set(t4.deps) == {"T2", "T3"}
+
+
+def test_build_problem_topo_and_transfer():
+    prob = build_problem(mri_system(), Workload((mri_w1(),)))
+    assert prob.num_tasks == 3 and prob.num_nodes == 3
+    # transfer time for T1's 2 GB at 100 GB/s = 0.02 (Table V last column)
+    assert prob.data[0] / prob.dtr[0, 1] == pytest.approx(0.02)
+    # feasibility: T2 (F1,F2) only on N2/N3 (Eq. 1) and cores fit (Eq. 2)
+    assert list(prob.feasible[1]) == [False, True, True]
+
+
+def test_workload_json_roundtrip():
+    wl = Workload((mri_w1(), mri_w2()))
+    obj = json.loads(json.dumps(workload_to_json(wl)))
+    wl2 = workload_from_json(obj)
+    assert wl2.num_tasks == wl.num_tasks
+    prob1 = build_problem(mri_system(), wl)
+    prob2 = build_problem(mri_system(), wl2)
+    np.testing.assert_allclose(prob1.durations, prob2.durations)
+    np.testing.assert_array_equal(prob1.pred_matrix, prob2.pred_matrix)
+
+
+def test_fig8_example_parses():
+    obj = {
+        "Workflow 1": {
+            "tasks": {
+                "T1": {
+                    "cores": [4], "memory_required": [1024], "features": ["F1"],
+                    "data": 1024, "duration": [10], "dependencies": [],
+                }
+            }
+        }
+    }
+    wl = workload_from_json(obj)
+    assert wl.workflows[0].tasks[0].work == 10.0
+    assert wl.workflows[0].tasks[0].cores == 4
+
+
+def test_testcase1_sizes_match_table8():
+    wls = tc1_workloads()
+    sizes = {k: wl.num_tasks for k, wl in wls.items()}
+    assert sizes["W1_Se_(3Nx3T)"] == 3
+    assert sizes["W2_Pa_(3Nx4T)"] == 4
+    assert sizes["W3_Ra_(3Nx5T)"] == 5
+    assert sizes["W4_Ra_(3Nx10T)"] == 10
+    assert sizes["W5_STGS1_(3Nx11T)"] == 11
+    assert sizes["W6_STGS2_(3Nx12T)"] == 12
+    assert sizes["W7_STGS3_(3Nx11T)"] == 11
+    # W5 has no communication cost; W6/W7 do
+    assert all(t.data == 0 for t in wls["W5_STGS1_(3Nx11T)"].tasks)
+    assert any(t.data > 0 for t in wls["W6_STGS2_(3Nx12T)"].tasks)
+
+
+def test_synthetic_workload_scales():
+    wl = synthetic_workload(200, seed=0)
+    assert wl.num_tasks == 200
+    prob = build_problem(mri_system(), wl)
+    assert prob.feasible.any(axis=1).all()  # F1-only pool keeps all feasible
+
+
+def test_release_times_respected():
+    wf1 = Workflow("w1", (Task("a", work=1.0),), submission=0.0)
+    wf2 = Workflow("w2", (Task("a", work=1.0),), submission=5.0)
+    prob = build_problem(mri_system(), Workload((wf1, wf2)))
+    assert prob.release[0] == 0.0 and prob.release[1] == 5.0
