@@ -10,7 +10,9 @@ is the §Perf "beyond-paper" evidence.  Default sizes cap at 500×500 to keep
 
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -21,11 +23,14 @@ from repro.core.milp import MilpSizeError, solve_milp
 
 SIZES = [(5, 5), (50, 50), (500, 500)]
 FULL_SIZES = SIZES + [(5000, 5000)]
+SMOKE_SIZES = [(5, 5), (50, 50)]  # CI-sized subset — seconds, not minutes
 
 
-def run(full: bool = False) -> list[tuple]:
+def run(full: bool = False, sizes: list[tuple[int, int]] | None = None) -> list[tuple]:
     rows = []
-    for n_nodes, n_tasks in (FULL_SIZES if full else SIZES):
+    if sizes is None:
+        sizes = FULL_SIZES if full else SIZES
+    for n_nodes, n_tasks in sizes:
         system = synthetic_system(n_nodes, seed=n_nodes)
         workload = synthetic_workload(n_tasks, seed=n_tasks)
         prob = build_problem(system, workload)
@@ -56,8 +61,24 @@ def run(full: bool = False) -> list[tuple]:
     return rows
 
 
+def run_smoke(out_path: str | Path = "BENCH_table9.json") -> list[tuple]:
+    """Small Table IX sizes + machine-readable ``BENCH_table9.json`` so every
+    PR leaves a perf-trajectory data point behind (`benchmarks.run --smoke`)."""
+    rows = run(sizes=SMOKE_SIZES)
+    payload = {
+        name: {"us_per_call": None if us != us else float(us), "derived": derived}
+        for name, us, derived in rows
+    }
+    Path(out_path).write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return rows
+
+
 if __name__ == "__main__":
     import sys
 
-    for r in run(full="--full" in sys.argv):
+    if "--smoke" in sys.argv:
+        rows = run_smoke()
+    else:
+        rows = run(full="--full" in sys.argv)
+    for r in rows:
         print(",".join(str(x) for x in r))

@@ -3,6 +3,12 @@ reader and kernel microbenches.  Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run            # bounded default set
     PYTHONPATH=src python -m benchmarks.run --full     # + 5000x5000 scale row
+    PYTHONPATH=src python -m benchmarks.run --smoke    # small Table IX sizes
+                                                       # → BENCH_table9.json
+
+``--smoke`` is the CI mode: it runs only the small Table IX scale points and
+writes a machine-readable ``BENCH_table9.json`` so successive PRs leave a
+perf trajectory behind.
 """
 
 from __future__ import annotations
@@ -13,6 +19,15 @@ import time
 
 def main() -> None:
     full = "--full" in sys.argv
+    if "--smoke" in sys.argv:
+        from benchmarks import bench_table9_scale
+
+        print("name,us_per_call,derived")
+        t0 = time.perf_counter()
+        for row in bench_table9_scale.run_smoke():
+            print(",".join(str(x) for x in row), flush=True)
+        print(f"table9_smoke_suite_total,{(time.perf_counter() - t0) * 1e6:.0f},")
+        return
     from benchmarks import (
         bench_autoshard_calibration,
         bench_fig11_quality,

@@ -16,10 +16,36 @@ import time
 from pathlib import Path
 from typing import Any
 
+import zlib
+
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # zstd preferred; zlib fallback keeps checkpoints working without it
+    import zstandard
+except ImportError:  # pragma: no cover - environment dependent
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(buf: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.compress(buf, 3)
+    return zlib.compress(buf, 3)
+
+
+def _decompress(buf: bytes) -> bytes:
+    # dispatch on the frame magic so either writer's files restore anywhere
+    if buf[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise ModuleNotFoundError(
+                "checkpoint leaf is zstd-compressed but the 'zstandard' module "
+                "is not installed"
+            )
+        return zstandard.decompress(buf)
+    return zlib.decompress(buf)
 
 
 def _encode_leaf(arr) -> bytes:
@@ -29,11 +55,11 @@ def _encode_leaf(arr) -> bytes:
         "shape": list(a.shape),
         "data": (a.view(np.uint16) if a.dtype == jax.numpy.bfloat16 else a).tobytes(),
     }
-    return zstandard.compress(msgpack.packb(payload), 3)
+    return _compress(msgpack.packb(payload))
 
 
 def _decode_leaf(buf: bytes):
-    payload = msgpack.unpackb(zstandard.decompress(buf))
+    payload = msgpack.unpackb(_decompress(buf))
     if payload["dtype"] == "bfloat16":
         a = np.frombuffer(payload["data"], dtype=np.uint16).reshape(payload["shape"])
         return a.view(jax.numpy.bfloat16)

@@ -20,21 +20,49 @@ W1/T2 and W2/T3 overlap on node N2 (12 + 32 ≤ 48 cores).
 Three implementations with identical semantics:
 
 * :func:`evaluate_assignment` — numpy oracle (ground truth for tests),
-* :func:`make_fitness_fn` — JAX ``vmap``-over-population / ``lax.scan``-over-
-  tasks evaluator used by the metaheuristics (the TPU adaptation),
+* :func:`make_fitness_fn` — JAX evaluator used by the metaheuristics
+  (rank-select core selection, no per-step sort; the TPU adaptation),
 * ``repro.kernels.makespan`` — the Pallas kernel with the same contract.
+
+Fast-path architecture (the paper's Table IX bottleneck):
+
+* one *shared* jitted fitness core per usage mode, taking the problem arrays
+  as arguments — XLA caches by shape, so GA/PSO/SA/ACO on the same instance
+  (or any instances with equal padded shapes) reuse one compiled program
+  instead of re-jitting per technique,
+* a *batched multi-instance* API (:func:`make_batched_fitness_fn`,
+  :func:`evaluate_population_batch`): a list of :class:`ScheduleProblem`\\ s is
+  padded into power-of-two shape buckets and ``vmap``-ed across instances, so
+  scenario sweeps (Table IX sizes, Fig. 11 grids) evaluate whole families in
+  one XLA program with at most one compile per bucket.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+import functools
+from typing import Callable, Sequence
 
 import numpy as np
 
 from repro.core.workload_model import BIG_PENALTY, ScheduleProblem
 
 _INF = 1e30  # finite stand-in for +inf inside JAX code (avoids inf*0 = nan)
+
+#: arrays consumed by the jitted fitness cores (order-insensitive dict pytree)
+FITNESS_ARRAY_KEYS = (
+    "durations",
+    "cores",
+    "data",
+    "feasible",
+    "release",
+    "pred_matrix",
+    "dtr",
+    "init_free",
+    "node_cores",
+    "usage_fixed",
+    "usage_weighted",
+)
 
 
 @dataclasses.dataclass
@@ -88,6 +116,20 @@ class Schedule:
         }
 
 
+def commit_sorted(row: np.ndarray, c: int, fill) -> np.ndarray:
+    """Replace the ``c`` smallest entries of an ascending-sorted ``row`` with
+    ``fill`` (≥ row[c-1] by construction) and return the row still sorted —
+    the O(len) merge-insert shared by the numpy oracle and the heuristics'
+    core state (no re-sort)."""
+    rest = row[c:]
+    pos = int(np.searchsorted(rest, fill))
+    merged = np.empty_like(row)
+    merged[:pos] = rest[:pos]
+    merged[pos : pos + c] = fill
+    merged[pos + c :] = rest[pos:]
+    return merged
+
+
 def _usage_of(problem: ScheduleProblem, assignment: np.ndarray, weights: ObjectiveWeights) -> float:
     if weights.usage_mode == "weighted":
         u = problem.weighted_usage()
@@ -100,36 +142,58 @@ def evaluate_assignment(
     assignment: np.ndarray,
     weights: ObjectiveWeights = ObjectiveWeights(),
     technique: str = "",
+    *,
+    dtype=np.float64,
 ) -> Schedule:
-    """Numpy oracle. ``assignment[j]`` = node index for topo-ordered task j."""
+    """Numpy oracle. ``assignment[j]`` = node index for topo-ordered task j.
+
+    The per-node core state is kept *sorted ascending* at all times, so the
+    "earliest time c cores are free" is an O(1) lookup (``row[c-1]``) and the
+    commit is an O(cap) merge-insert — no per-task sort.  Predecessors walk a
+    CSR view of the dependency DAG (no padded-matrix scan).
+
+    ``dtype=np.float32`` evaluates with f32 arithmetic in the same operation
+    order as the JAX evaluator / Pallas kernel — bit-for-bit identical
+    makespans (the equivalence-sweep tests rely on this).
+    """
     assignment = np.asarray(assignment, dtype=np.int64)
     T, N = problem.num_tasks, problem.num_nodes
     caps = problem.node_cores.astype(np.int64)
-    core_free: list[np.ndarray] = [np.zeros(max(int(c), 1), dtype=np.float64) for c in caps]
-    start = np.zeros(T)
-    finish = np.zeros(T)
+    durations = problem.durations.astype(dtype, copy=False)
+    data = problem.data.astype(dtype, copy=False)
+    release = problem.release.astype(dtype, copy=False)
+    dtr = problem.dtr.astype(dtype, copy=False)
+    indptr, indices = problem.pred_csr
+    # sorted core-free rows: real cores start free (0.0)
+    rows: list[np.ndarray] = [np.zeros(max(int(c), 1), dtype=dtype) for c in caps]
+    start = np.zeros(T, dtype=dtype)
+    finish = np.zeros(T, dtype=dtype)
+    inf = dtype(_INF)
     violations = 0
 
     for j in range(T):
         i = int(assignment[j])
         if not problem.feasible[j, i]:
             violations += 1
-        ready = problem.release[j]
-        for p in problem.pred_matrix[j]:
-            if p < 0:
-                continue
-            ip = int(assignment[p])
-            transfer = 0.0
-            if ip != i:
-                rate = problem.dtr[ip, i]
-                transfer = problem.data[p] / rate if np.isfinite(rate) and rate > 0 else _INF
-            ready = max(ready, finish[p] + transfer)
-        c = int(max(1, min(problem.cores[j], caps[i])))  # clamp to keep schedule total
-        free = core_free[i]
-        idx = np.argsort(free, kind="stable")[:c]
-        s = max(ready, float(free[idx[-1]]))
-        f = s + problem.durations[j, i]
-        free[idx] = f
+        ready = release[j]
+        lo, hi = indptr[j], indptr[j + 1]
+        if hi > lo:
+            ps = indices[lo:hi]
+            ips = assignment[ps]
+            rates = dtr[ips, i]
+            ok = np.isfinite(rates) & (rates > 0)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                transfer = np.where(
+                    ips == i, dtype(0.0), np.where(ok, data[ps] / np.where(ok, rates, 1), inf)
+                )
+            ready = np.maximum(ready, (finish[ps] + transfer).max())
+        row = rows[i]
+        c = int(max(1, min(problem.cores[j], caps[i])))
+        c = min(c, row.size)
+        kth = row[c - 1]
+        s = np.maximum(ready, kth)
+        f = s + durations[j, i]
+        rows[i] = commit_sorted(row, c, f)
         start[j], finish[j] = s, f
 
     makespan = float(finish.max(initial=0.0))
@@ -172,6 +236,7 @@ def problem_to_jax(problem: ScheduleProblem, core_cap: int | None = None):
     init_free = np.full((problem.num_nodes, cmax), _INF, dtype=np.float32)
     for i, c in enumerate(caps):
         init_free[i, : min(int(c), cmax)] = 0.0
+    node_cores = np.minimum(np.maximum(caps, 1), cmax)
 
     dtr = np.where(np.isfinite(problem.dtr), problem.dtr, _INF)
     return {
@@ -182,12 +247,86 @@ def problem_to_jax(problem: ScheduleProblem, core_cap: int | None = None):
         "release": jnp.asarray(problem.release, dtype=jnp.float32),
         "pred_matrix": jnp.asarray(problem.pred_matrix, dtype=jnp.int32),
         "dtr": jnp.asarray(dtr, dtype=jnp.float32),
-        "node_cores": jnp.asarray(caps, dtype=jnp.int32),
+        "node_cores": jnp.asarray(node_cores, dtype=jnp.int32),
         "init_free": jnp.asarray(init_free),
         "usage_fixed": jnp.asarray(problem.usage, dtype=jnp.float32),
         "usage_weighted": jnp.asarray(problem.weighted_usage(), dtype=jnp.float32),
         "cmax": cmax,
     }
+
+
+def _fitness_arrays(arrays: dict) -> dict:
+    return {k: arrays[k] for k in FITNESS_ARRAY_KEYS}
+
+
+def _usage_term(arrays, assignments, usage_mode: str):
+    import jax.numpy as jnp
+
+    if usage_mode == "weighted":
+        T = arrays["usage_weighted"].shape[0]
+        return arrays["usage_weighted"][jnp.arange(T)[None, :], assignments].sum(axis=-1)
+    return jnp.broadcast_to(arrays["usage_fixed"].sum(), assignments.shape[:1])
+
+
+def fitness_from_arrays(assignments, arrays: dict, alpha, beta, usage_mode: str):
+    """Unjitted fitness over packed problem arrays:
+    ``(assignments [P, T]) -> (objective [P], makespan [P])``.
+
+    The single implementation behind the jitted single-instance core, the
+    vmapped batched core, and the batched metaheuristic sweeps.
+    """
+    from repro.kernels import ref
+
+    makespan, violations = ref.population_makespan_ref(
+        assignments,
+        durations=arrays["durations"],
+        cores=arrays["cores"],
+        data=arrays["data"],
+        feasible=arrays["feasible"],
+        release=arrays["release"],
+        pred_matrix=arrays["pred_matrix"],
+        dtr=arrays["dtr"],
+        init_free=arrays["init_free"],
+        node_cores=arrays["node_cores"],
+    )
+    usage = _usage_term(arrays, assignments, usage_mode)
+    obj = alpha * usage + beta * makespan + BIG_PENALTY * violations
+    return obj, makespan
+
+
+@functools.lru_cache(maxsize=None)
+def _fitness_core(usage_mode: str) -> Callable:
+    """Shared jitted ``(assignments, arrays, alpha, beta) -> (obj, mk)``.
+
+    Problem arrays are *arguments*, not closure captures — XLA's jit cache
+    keys on shapes, so every technique / sweep point with equal array shapes
+    hits the same compiled executable (no per-instance re-jit)."""
+    import jax
+
+    return jax.jit(functools.partial(fitness_from_arrays, usage_mode=usage_mode))
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_fitness_core(usage_mode: str) -> Callable:
+    """Jitted ``vmap`` of the fitness core across a stacked instance axis:
+    ``(assignments [B, P, T], arrays [B, ...], alpha, beta) -> ([B, P], [B, P])``."""
+    import jax
+
+    return jax.jit(
+        jax.vmap(
+            functools.partial(fitness_from_arrays, usage_mode=usage_mode),
+            in_axes=(0, 0, None, None),
+        )
+    )
+
+
+def fitness_cache_sizes(usage_mode: str = "fixed") -> tuple[int, int]:
+    """(single-instance, batched) XLA compile counts for the shared fitness
+    cores — the recompile telemetry the sweep tests assert on."""
+    return (
+        _fitness_core(usage_mode)._cache_size(),
+        _batched_fitness_core(usage_mode)._cache_size(),
+    )
 
 
 def make_fitness_fn(
@@ -196,25 +335,24 @@ def make_fitness_fn(
     core_cap: int | None = None,
     backend: str = "jnp",
 ) -> Callable:
-    """Returns jitted ``fitness(assignments[P, T]) -> (objective[P], makespan[P])``.
+    """Returns ``fitness(assignments[P, T]) -> (objective[P], makespan[P])``.
 
     ``backend='pallas'`` routes the per-candidate schedule evaluation through
     the Pallas kernel (interpret mode on CPU, TPU-compiled on device);
-    ``'jnp'`` uses the pure-JAX scan (also the kernel's oracle).
+    ``'jnp'`` uses the shared jitted rank-select evaluator (also the kernel's
+    oracle).
     """
-    import jax
     import jax.numpy as jnp
 
     jp = problem_to_jax(problem, core_cap)
-    T = problem.num_tasks
-    cmax = jp["cmax"]
+    arrays = _fitness_arrays(jp)
 
     if backend == "pallas":
         from repro.kernels import ops as kops
 
         def fitness(assignments):
             makespan, violations = kops.population_makespan(
-                assignments.astype(jnp.int32),
+                jnp.asarray(assignments).astype(jnp.int32),
                 durations=jp["durations"],
                 cores=jp["cores"],
                 data=jp["data"],
@@ -224,59 +362,178 @@ def make_fitness_fn(
                 dtr=jp["dtr"],
                 init_free=jp["init_free"],
             )
-            usage = _population_usage(jp, assignments, weights)
+            usage = _usage_term(jp, assignments, weights.usage_mode)
             obj = weights.alpha * usage + weights.beta * makespan + BIG_PENALTY * violations
             return obj, makespan
 
-        return jax.jit(fitness)
+        return fitness
 
-    def eval_one(assignment):
-        def step(carry, j):
-            core_free, fin = carry
-            i = assignment[j]
-            ps = jp["pred_matrix"][j]
-            valid = ps >= 0
-            psafe = jnp.where(valid, ps, 0)
-            p_nodes = assignment[psafe]
-            rate = jp["dtr"][p_nodes, i]
-            transfer = jnp.where(p_nodes == i, 0.0, jp["data"][psafe] / rate)
-            ready_terms = jnp.where(valid, fin[psafe] + transfer, -_INF)
-            ready = jnp.maximum(jp["release"][j], jnp.max(ready_terms, initial=-_INF))
-            row = core_free[i]
-            order = jnp.argsort(row)
-            srow = row[order]
-            c = jnp.minimum(jp["cores"][j], jp["node_cores"][i])
-            c = jnp.maximum(c, 1)
-            kth = srow[c - 1]
-            s = jnp.maximum(ready, kth)
-            f = s + jp["durations"][j, i]
-            newvals = jnp.where(jnp.arange(cmax) < c, f, srow)
-            row = row.at[order].set(newvals)
-            core_free = core_free.at[i].set(row)
-            fin = fin.at[j].set(f)
-            return (core_free, fin), None
-
-        (core_free, fin), _ = jax.lax.scan(
-            step, (jp["init_free"], jnp.zeros(T, dtype=jnp.float32)), jnp.arange(T)
-        )
-        makespan = jnp.max(fin, initial=0.0)
-        feas = jp["feasible"][jnp.arange(T), assignment]
-        violations = jnp.sum(~feas).astype(jnp.float32)
-        return makespan, violations
+    core = _fitness_core(weights.usage_mode)
 
     def fitness(assignments):
-        makespan, violations = jax.vmap(eval_one)(assignments)
-        usage = _population_usage(jp, assignments, weights)
-        obj = weights.alpha * usage + weights.beta * makespan + BIG_PENALTY * violations
-        return obj, makespan
+        return core(jnp.asarray(assignments), arrays, weights.alpha, weights.beta)
 
-    return jax.jit(fitness)
+    return fitness
 
 
-def _population_usage(jp, assignments, weights: ObjectiveWeights):
+# -----------------------------------------------------------------------------
+# Batched multi-instance evaluation (scenario sweeps in one XLA program)
+# -----------------------------------------------------------------------------
+
+
+def _round_up_pow2(x: int, floor: int = 4) -> int:
+    x = max(int(x), 1)
+    out = floor
+    while out < x:
+        out *= 2
+    return out
+
+
+def bucket_of(problem: ScheduleProblem, core_cap: int | None = None) -> tuple[int, int, int, int]:
+    """Shape bucket ``(T, N, CMAX, MAXP)`` for this problem — each dim rounded
+    to the next power of two so unequal instances share compiled programs."""
+    caps = problem.node_cores.astype(np.int64)
+    cmax = int(core_cap if core_cap is not None else min(caps.max(initial=1), 512))
+    cmax = max(cmax, int(problem.cores.max(initial=1)), 1)
+    return (
+        _round_up_pow2(problem.num_tasks),
+        _round_up_pow2(problem.num_nodes),
+        _round_up_pow2(cmax),
+        _round_up_pow2(problem.pred_matrix.shape[1], floor=1),
+    )
+
+
+def common_bucket(problems: Sequence[ScheduleProblem]) -> tuple[int, int, int, int]:
+    """Elementwise-max bucket covering every problem in the list."""
+    buckets = [bucket_of(p) for p in problems]
+    return tuple(max(b[d] for b in buckets) for d in range(4))  # type: ignore[return-value]
+
+
+def problem_to_numpy_padded(problem: ScheduleProblem, bucket: tuple[int, int, int, int]) -> dict:
+    """Pad a problem's arrays to ``bucket`` such that padding is *objective
+    neutral*:
+
+    * padded tasks have zero duration/data/usage, no predecessors, release 0
+      and are feasible only on node 0 — assigned to any *real* node they
+      finish at that node's current earliest core-free time (≤ makespan) and
+      leave the core state untouched; assignments for them must stay in
+      ``[0, N_real)`` (pad assignment rows with 0),
+    * padded nodes are infeasible for every real task and own no cores
+      (``init_free`` all +INF), so a correct sampler never selects them.
+    """
+    Tb, Nb, Cb, Pb = bucket
+    T, N = problem.num_tasks, problem.num_nodes
+    maxp = problem.pred_matrix.shape[1]
+    if T > Tb or N > Nb or maxp > Pb:
+        raise ValueError(f"problem {T}x{N} (maxp={maxp}) exceeds bucket {bucket}")
+    caps = problem.node_cores.astype(np.int64)
+    if int(problem.cores.max(initial=1)) > Cb:
+        raise ValueError(f"task core request exceeds bucket cmax {Cb}")
+
+    durations = np.zeros((Tb, Nb), np.float32)
+    durations[:T, :N] = problem.durations
+    cores = np.ones(Tb, np.int32)
+    cores[:T] = np.maximum(problem.cores, 1.0).astype(np.int32)
+    data = np.zeros(Tb, np.float32)
+    data[:T] = problem.data
+    feasible = np.zeros((Tb, Nb), bool)
+    feasible[:T, :N] = problem.feasible
+    feasible[T:, 0] = True  # padded tasks live on node 0
+    release = np.zeros(Tb, np.float32)
+    release[:T] = problem.release
+    pred_matrix = -np.ones((Tb, Pb), np.int32)
+    pred_matrix[:T, :maxp] = problem.pred_matrix
+    dtr = np.ones((Nb, Nb), np.float32)
+    dtr[:N, :N] = np.where(np.isfinite(problem.dtr), problem.dtr, _INF)
+    init_free = np.full((Nb, Cb), _INF, np.float32)
+    for i, c in enumerate(caps):
+        init_free[i, : min(int(c), Cb)] = 0.0
+    node_cores = np.ones(Nb, np.int32)
+    node_cores[:N] = np.minimum(np.maximum(caps, 1), Cb)
+    usage_fixed = np.zeros(Tb, np.float32)
+    usage_fixed[:T] = problem.usage
+    usage_weighted = np.zeros((Tb, Nb), np.float32)
+    usage_weighted[:T, :N] = problem.weighted_usage()
+    return {
+        "durations": durations,
+        "cores": cores,
+        "data": data,
+        "feasible": feasible,
+        "release": release,
+        "pred_matrix": pred_matrix,
+        "dtr": dtr,
+        "init_free": init_free,
+        "node_cores": node_cores,
+        "usage_fixed": usage_fixed,
+        "usage_weighted": usage_weighted,
+    }
+
+
+def stack_problems(problems: Sequence[ScheduleProblem], bucket=None):
+    """Stack padded instances along a leading batch axis → jnp array dict."""
     import jax.numpy as jnp
 
-    if weights.usage_mode == "weighted":
-        T = jp["usage_weighted"].shape[0]
-        return jp["usage_weighted"][jnp.arange(T)[None, :], assignments].sum(axis=-1)
-    return jnp.broadcast_to(jp["usage_fixed"].sum(), assignments.shape[:1])
+    bucket = common_bucket(problems) if bucket is None else bucket
+    padded = [problem_to_numpy_padded(p, bucket) for p in problems]
+    return {k: jnp.asarray(np.stack([pp[k] for pp in padded])) for k in FITNESS_ARRAY_KEYS}, bucket
+
+
+def make_batched_fitness_fn(
+    problems: Sequence[ScheduleProblem],
+    weights: ObjectiveWeights = ObjectiveWeights(),
+) -> Callable:
+    """Batched fitness over a family of instances (one shape bucket):
+    ``fitness(assignments [B, P, T_bucket]) -> (objective [B, P], makespan [B, P])``.
+
+    Assignment rows for padded tasks must be 0 (see
+    :func:`problem_to_numpy_padded`); :func:`evaluate_population_batch` does
+    this padding for you.  All calls with the same bucket — across sweeps,
+    techniques, and problem families — share one compiled XLA program.
+    """
+    import jax.numpy as jnp
+
+    arrays, bucket = stack_problems(problems)
+    core = _batched_fitness_core(weights.usage_mode)
+
+    def fitness(assignments):
+        return core(jnp.asarray(assignments), arrays, weights.alpha, weights.beta)
+
+    fitness.bucket = bucket  # type: ignore[attr-defined]
+    fitness.num_instances = len(problems)  # type: ignore[attr-defined]
+    return fitness
+
+
+def evaluate_population_batch(
+    problems: Sequence[ScheduleProblem],
+    populations: Sequence[np.ndarray],
+    weights: ObjectiveWeights = ObjectiveWeights(),
+) -> list[tuple[np.ndarray, np.ndarray]]:
+    """Evaluate per-instance candidate populations for a list of problems.
+
+    Instances are grouped into shape buckets; each bucket group is padded,
+    stacked and evaluated by one vmapped XLA call (one compile per bucket,
+    ever — the jit cache is module-global).  Returns, per instance, the
+    ``(objective [P_i], makespan [P_i])`` pair in the input order.
+    """
+    if len(problems) != len(populations):
+        raise ValueError("need one population per problem")
+    groups: dict[tuple[int, int, int, int], list[int]] = {}
+    pops = [np.asarray(p) for p in populations]
+    for idx, problem in enumerate(problems):
+        groups.setdefault(bucket_of(problem), []).append(idx)
+
+    out: list[tuple[np.ndarray, np.ndarray] | None] = [None] * len(problems)
+    for bucket, members in groups.items():
+        Tb = bucket[0]
+        pb = _round_up_pow2(max(pops[m].shape[0] for m in members))
+        batch = np.zeros((len(members), pb, Tb), np.int32)
+        for row, m in enumerate(members):
+            pop = pops[m]
+            batch[row, : pop.shape[0], : pop.shape[1]] = pop
+        fitness = make_batched_fitness_fn([problems[m] for m in members], weights)
+        obj, mk = fitness(batch)
+        obj, mk = np.asarray(obj), np.asarray(mk)
+        for row, m in enumerate(members):
+            P = pops[m].shape[0]
+            out[m] = (obj[row, :P], mk[row, :P])
+    return out  # type: ignore[return-value]

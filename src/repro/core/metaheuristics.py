@@ -17,11 +17,13 @@ numpy oracle so every technique is scored under identical semantics.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Callable
+from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.core import evaluator
 from repro.core.evaluator import (
     ObjectiveWeights,
     Schedule,
@@ -39,17 +41,21 @@ class MHResult:
     history: np.ndarray  # best objective per iteration
 
 
-def _mask_logits(problem: ScheduleProblem):
-    import jax.numpy as jnp
-
-    mask = problem.feasible
-    # Guarantee at least one "samplable" node per task even if infeasible
-    # (the fitness penalty then dominates and the candidate dies off).
-    safe = mask.copy()
+def _safe_feasible(problem: ScheduleProblem) -> np.ndarray:
+    """Feasibility mask with at least one "samplable" node per task even if
+    infeasible (the fitness penalty then dominates and the candidate dies
+    off)."""
+    safe = problem.feasible.copy()
     dead = ~safe.any(axis=1)
     if dead.any():
         safe[dead, 0] = True
-    return jnp.where(jnp.asarray(safe), 0.0, _NEG)
+    return safe
+
+
+def _mask_logits(problem: ScheduleProblem):
+    import jax.numpy as jnp
+
+    return jnp.where(jnp.asarray(_safe_feasible(problem)), 0.0, _NEG)
 
 
 def _finish(
@@ -69,26 +75,25 @@ def _finish(
 # GA — Genetic Algorithm [24]
 # -----------------------------------------------------------------------------
 
-def ga(
-    problem: ScheduleProblem,
-    weights: ObjectiveWeights = ObjectiveWeights(),
+def _ga_loop(
+    fitness: Callable,
+    logits,
+    key,
     *,
-    pop_size: int = 64,
-    generations: int = 60,
-    tournament: int = 4,
-    mutation_rate: float = 0.08,
-    elite: int = 2,
-    seed: int = 0,
-    backend: str = "jnp",
-) -> MHResult:
+    pop_size: int,
+    generations: int,
+    tournament: int,
+    mutation_rate,
+    elite: int,
+):
+    """Pure-JAX GA generation loop → ``(best_assignment [T], history [G])``.
+
+    Traceable end-to-end (no host round-trips), so it runs standalone for a
+    single instance *and* under ``jit(vmap(...))`` for batched sweeps."""
     import jax
     import jax.numpy as jnp
 
-    t0 = time.perf_counter()
-    T = problem.num_tasks
-    fitness = make_fitness_fn(problem, weights, backend=backend)
-    logits = _mask_logits(problem)
-    key = jax.random.PRNGKey(seed)
+    T = logits.shape[0]
     key, k0 = jax.random.split(key)
     pop = jax.random.categorical(k0, logits, axis=-1, shape=(pop_size, T)).astype(jnp.int32)
 
@@ -119,8 +124,111 @@ def ga(
 
     (pop, _), hist = jax.lax.scan(gen_step, (pop, key), None, length=generations)
     obj, _ = fitness(pop)
-    best = np.asarray(pop[int(jnp.argmin(obj))])
-    return _finish(problem, weights, best, "ga", t0, np.asarray(hist))
+    return pop[jnp.argmin(obj)], hist
+
+
+def ga(
+    problem: ScheduleProblem,
+    weights: ObjectiveWeights = ObjectiveWeights(),
+    *,
+    pop_size: int = 64,
+    generations: int = 60,
+    tournament: int = 4,
+    mutation_rate: float = 0.08,
+    elite: int = 2,
+    seed: int = 0,
+    backend: str = "jnp",
+) -> MHResult:
+    import jax
+
+    t0 = time.perf_counter()
+    fitness = make_fitness_fn(problem, weights, backend=backend)
+    logits = _mask_logits(problem)
+    best, hist = _ga_loop(
+        fitness,
+        logits,
+        jax.random.PRNGKey(seed),
+        pop_size=pop_size,
+        generations=generations,
+        tournament=tournament,
+        mutation_rate=mutation_rate,
+        elite=elite,
+    )
+    return _finish(problem, weights, np.asarray(best), "ga", t0, np.asarray(hist))
+
+
+@functools.lru_cache(maxsize=None)
+def _ga_sweep_core(
+    usage_mode: str, pop_size: int, generations: int, tournament: int, elite: int
+) -> Callable:
+    """Jitted ``vmap`` of the whole GA over a stacked instance axis — one XLA
+    program per shape bucket evaluates an entire scenario family."""
+    import jax
+
+    def one(arrays, logits, key, alpha, beta, mutation_rate):
+        def fitness(pop):
+            return evaluator.fitness_from_arrays(pop, arrays, alpha, beta, usage_mode)
+
+        return _ga_loop(
+            fitness,
+            logits,
+            key,
+            pop_size=pop_size,
+            generations=generations,
+            tournament=tournament,
+            mutation_rate=mutation_rate,
+            elite=elite,
+        )
+
+    return jax.jit(jax.vmap(one, in_axes=(0, 0, 0, None, None, None)))
+
+
+def ga_sweep(
+    problems: Sequence[ScheduleProblem],
+    weights: ObjectiveWeights = ObjectiveWeights(),
+    *,
+    pop_size: int = 64,
+    generations: int = 60,
+    tournament: int = 4,
+    mutation_rate: float = 0.08,
+    elite: int = 2,
+    seed: int = 0,
+) -> list[MHResult]:
+    """Run the GA on a whole family of instances in ONE compiled XLA program.
+
+    Instances are padded into a common shape bucket (see
+    ``evaluator.bucket_of``) and the generation loop is ``vmap``-ed across
+    them — a Table IX size sweep or Fig. 11 quality grid no longer pays one
+    trace/compile per point.  Per-result ``solve_time`` is the sweep wall
+    time (the instances ran concurrently)."""
+    import jax
+    import jax.numpy as jnp
+
+    t0 = time.perf_counter()
+    arrays, bucket = evaluator.stack_problems(problems)
+    Tb, Nb = bucket[0], bucket[1]
+    logits = np.full((len(problems), Tb, Nb), _NEG, dtype=np.float32)
+    for b, problem in enumerate(problems):
+        mask = _safe_feasible(problem)
+        logits[b, : problem.num_tasks, : problem.num_nodes][mask] = 0.0
+        logits[b, problem.num_tasks :, 0] = 0.0  # padded tasks pin to node 0
+    run = _ga_sweep_core(weights.usage_mode, pop_size, generations, tournament, elite)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(problems))
+    best, hist = run(
+        arrays, jnp.asarray(logits), keys, weights.alpha, weights.beta, mutation_rate
+    )
+    best, hist = np.asarray(best), np.asarray(hist)
+    return [
+        _finish(
+            problem,
+            weights,
+            best[b, : problem.num_tasks].astype(np.int64),
+            "ga",
+            t0,
+            hist[b],
+        )
+        for b, problem in enumerate(problems)
+    ]
 
 
 # -----------------------------------------------------------------------------

@@ -41,7 +41,7 @@ import numpy as np
 import scipy.sparse as sp
 from scipy.optimize import Bounds, LinearConstraint, milp as scipy_milp
 
-from repro.core.evaluator import ObjectiveWeights, Schedule
+from repro.core.evaluator import ObjectiveWeights, Schedule, evaluate_assignment
 from repro.core.workload_model import ScheduleProblem
 
 _EPS = 1e-4
@@ -311,6 +311,27 @@ def solve_milp(
     )
     if res.status == 1 and res.x is not None:
         status = "feasible(time_limit)"
+    # Canonical rescoring: the event-capacity linearization separates start
+    # events by ε (1e-4), which leaks into the reported C_max (e.g. Table VI
+    # MRI solves to 10.0001 instead of 10.0).  Re-time the MILP's assignment
+    # under the shared oracle semantics — every technique is scored
+    # identically — and keep the oracle timing whenever it is at least as
+    # good (it strips the ε slack; the assignment itself stays optimal).
+    if status.startswith(("optimal", "feasible")):
+        oracle = evaluate_assignment(problem, assignment, weights)
+        if oracle.violations == 0 and oracle.makespan <= makespan + 1e-6:
+            return Schedule(
+                assignment=assignment,
+                start=oracle.start,
+                finish=oracle.finish,
+                makespan=oracle.makespan,
+                usage=oracle.usage,
+                objective=oracle.objective,
+                violations=0,
+                technique=f"milp[{capacity_mode}]",
+                solve_time=solve_time,
+                status=status,
+            )
     return Schedule(
         assignment=assignment,
         start=start,

@@ -107,6 +107,31 @@ def solve(
     return solve_problem(problem, technique, weights, **kwargs)
 
 
+def solve_problems(
+    problems: list[ScheduleProblem],
+    technique: str = "ga",
+    weights: ObjectiveWeights = ObjectiveWeights(),
+    **kwargs: Any,
+) -> list[SolveReport]:
+    """Solve a whole scenario family at once.
+
+    For the JAX metaheuristic GA this dispatches to the *batched* sweep
+    (``metaheuristics.ga_sweep``): every instance is padded into a common
+    shape bucket and the full generation loop runs as ONE compiled XLA
+    program — a Table IX scale sweep or Fig. 11 grid no longer recompiles
+    per point.  Other techniques run per-instance."""
+    # the sweep evaluates through the shared jnp fitness core; a 'pallas'
+    # backend request (or any other per-instance-only kwarg) runs unbatched
+    sweep_kwargs = {k: v for k, v in kwargs.items() if k != "backend"}
+    if technique == "ga" and len(problems) > 1 and kwargs.get("backend", "jnp") == "jnp":
+        results = metaheuristics.ga_sweep(problems, weights, **sweep_kwargs)
+        return [
+            SolveReport(schedule=r.schedule, problem=p, history=r.history)
+            for r, p in zip(results, problems)
+        ]
+    return [solve_problem(p, technique, weights, **kwargs) for p in problems]
+
+
 def compare_techniques(
     system: System,
     workload: Workload,

@@ -14,6 +14,7 @@ JSON I/O follows the paper's Fig. 8 workflow format.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import math
 from typing import Any, Mapping, Sequence
@@ -151,6 +152,47 @@ class ScheduleProblem:
     @property
     def num_nodes(self) -> int:
         return int(self.durations.shape[1])
+
+    @functools.cached_property
+    def pred_csr(self) -> tuple[np.ndarray, np.ndarray]:
+        """CSR view of the dependency DAG: ``(indptr [T+1], indices [E])``.
+
+        ``indices[indptr[j]:indptr[j+1]]`` are task j's predecessors in the
+        same order as the padded ``pred_matrix`` rows — the evaluators' inner
+        loops walk this instead of scanning -1 padding.
+        """
+        valid = self.pred_matrix >= 0
+        indptr = np.zeros(self.num_tasks + 1, dtype=np.int64)
+        np.cumsum(valid.sum(axis=1), out=indptr[1:])
+        return indptr, self.pred_matrix[valid].astype(np.int64)
+
+    @functools.cached_property
+    def transfer_factor(self) -> np.ndarray:
+        """[N, N] f32 reciprocal-rate matrix for Eq. (5):
+        ``transfer_time(p, i→i') = data[p] * transfer_factor[i, i']``
+        (+ ``transfer_penalty`` for dead links).
+
+        Precomputing the reciprocal once turns the heuristics' per-task
+        ready-time pass into a fused multiply-add over [preds, N] — no
+        division, no finiteness test in the hot loop.  The diagonal is 0
+        (intra-node migration is free)."""
+        ok = np.isfinite(self.dtr) & (self.dtr > 0)
+        fac = np.where(ok, 1.0 / np.maximum(self.dtr, 1e-30), 0.0).astype(np.float32)
+        np.fill_diagonal(fac, 0.0)
+        return fac
+
+    @functools.cached_property
+    def transfer_penalty(self) -> np.ndarray | None:
+        """[N, N] f32 additive penalty: a huge constant on off-diagonal dead
+        links (non-finite / zero rate), else 0 — additive so that even a
+        zero-data dependency cannot cross a dead link.  ``None`` when every
+        off-diagonal rate is usable (the common case; lets the hot loop skip
+        the extra gather+add)."""
+        ok = np.isfinite(self.dtr) & (self.dtr > 0)
+        np.fill_diagonal(ok, True)  # intra-node is always free
+        if ok.all():
+            return None
+        return np.where(ok, 0.0, 1e30).astype(np.float32)
 
     @property
     def usage(self) -> np.ndarray:

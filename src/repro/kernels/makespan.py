@@ -11,18 +11,27 @@ took 6513 s) re-thought for the TPU execution model rather than ported:
 * the sequential task loop (a true dependency chain — list scheduling) runs
   in-kernel over VMEM-resident state: ``core_free [TILE, N, CMAX]`` and
   ``finish [TILE, T]`` never leave VMEM;
-* the k-th-smallest-core selection uses an O(CMAX²) comparison-rank trick
-  (no sort primitive needed on the VPU).
+* the k-th-smallest-core selection uses the O(CMAX²) comparison-rank trick
+  from :mod:`repro.kernels.select` — the same primitive as the jnp oracle,
+  so the two agree bit-for-bit (no sort primitive needed on the VPU).
 
-VMEM budget: task-static arrays (durations [T,N], dtr [N,N], preds) are
-placed wholly in VMEM, which bounds the kernel to roughly
-``T·N + N² + TILE·(N·CMAX + T) ≲ 3M`` f32 words (≈12 MB on a 16 MB v5e
-core) — e.g. T=2048, N=256, CMAX=64, TILE=8.  Larger instances fall back to
-the jnp oracle (``ref.population_makespan_ref``), which XLA streams from
-HBM.  The ``ops.population_makespan`` wrapper performs this dispatch.
+Two placement modes for the task-static arrays:
+
+* **resident** — durations ``[T, N]`` / feasibility ``[T, N]`` live wholly in
+  VMEM (fastest; bounded by the VMEM budget),
+* **streamed** — the two big ``[T, N]`` arrays stay in HBM (``ANY`` memory
+  space) and each task step double-buffers its ``[1, N]`` row into VMEM via
+  async DMA, prefetching row ``j+1`` while computing row ``j``.  This drops
+  the VMEM footprint from O(T·N) to O(N), widening the kernel's envelope to
+  instances whose VMEM-resident placement would bust the budget.
+
+``TILE`` is autotuned by ``ops.population_makespan`` (largest tile whose
+state fits the budget) rather than fixed.  Instances beyond even the
+streamed envelope fall back to the jnp oracle
+(``ref.population_makespan_ref``), which XLA streams from HBM.
 
 Validated in interpret mode on CPU against the oracle over shape/dtype
-sweeps (tests/test_kernels_makespan.py).
+sweeps (tests/test_kernels_makespan.py, tests/test_fastpath_equivalence.py).
 """
 
 from __future__ import annotations
@@ -34,16 +43,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.select import kth_from_ranks, stable_ranks, update_from_ranks
+
 _NEG = -1e30
 DEFAULT_TILE = 8
 
 
 def _kernel(
     assign_ref,  # [TILE, T] int32
-    durations_ref,  # [T, N] f32
+    durations_ref,  # [T, N] f32 (VMEM block, or ANY/HBM when streaming)
     cores_ref,  # [T, 1] f32
     data_ref,  # [T, 1] f32
-    feasible_ref,  # [T, N] f32 (1.0 = feasible)
+    feasible_ref,  # [T, N] f32 (1.0 = feasible; ANY/HBM when streaming)
     release_ref,  # [T, 1] f32
     preds_ref,  # [T, MAXP] int32
     dtr_ref,  # [N, N] f32
@@ -53,9 +64,10 @@ def _kernel(
     viol_ref,  # [TILE, 1] f32 out
     core_free,  # scratch [TILE, N, CMAX] f32
     finish,  # scratch [TILE, T] f32
-    *,
+    *stream_scratch,  # streamed mode: row bufs [2, N] ×2 + DMA sems (2,) ×2
     tasks: int,
     maxp: int,
+    stream: bool,
 ):
     tile, n, cmax = core_free.shape
     core_free[...] = jnp.broadcast_to(init_free_ref[...][None], (tile, n, cmax))
@@ -64,11 +76,43 @@ def _kernel(
 
     assign = assign_ref[...]  # [TILE, T]
     iota_n = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)  # [1, N]
-    iota_c = jax.lax.broadcasted_iota(jnp.float32, (cmax,), 0)
     node_cores = node_cores_ref[...]  # [1, N]
     dtr = dtr_ref[...]
 
+    if stream:
+        dur_buf, feas_buf, dur_sem, feas_sem = stream_scratch
+
+        def row_dma(slot, j):
+            return (
+                pltpu.make_async_copy(
+                    durations_ref.at[pl.ds(j, 1)], dur_buf.at[pl.ds(slot, 1)], dur_sem.at[slot]
+                ),
+                pltpu.make_async_copy(
+                    feasible_ref.at[pl.ds(j, 1)], feas_buf.at[pl.ds(slot, 1)], feas_sem.at[slot]
+                ),
+            )
+
+        for dma in row_dma(0, 0):  # warm-up: task 0's rows
+            dma.start()
+
     def body(j, _):
+        if stream:
+            slot = jax.lax.rem(j, 2)
+            nxt = jax.lax.rem(j + 1, 2)
+
+            @pl.when(j + 1 < tasks)
+            def _prefetch():
+                for dma in row_dma(nxt, j + 1):
+                    dma.start()
+
+            for dma in row_dma(slot, j):
+                dma.wait()
+            dur_row = pl.load(dur_buf, (pl.dslice(slot, 1), slice(None)))[0]  # [N]
+            feas_row = pl.load(feas_buf, (pl.dslice(slot, 1), slice(None)))[0]
+        else:
+            dur_row = pl.load(durations_ref, (pl.dslice(j, 1), slice(None)))[0]
+            feas_row = pl.load(feasible_ref, (pl.dslice(j, 1), slice(None)))[0]
+
         i = jax.lax.dynamic_index_in_dim(assign, j, axis=1, keepdims=False)  # [TILE]
         onehot_i = (iota_n == i[:, None]).astype(jnp.float32)  # [TILE, N]
 
@@ -77,8 +121,8 @@ def _kernel(
         ready = jnp.full((tile,), rel, jnp.float32)
         fin_all = finish[...]
         preds_j = pl.load(preds_ref, (pl.dslice(j, 1), slice(None)))[0]  # [MAXP]
-        for slot in range(maxp):  # static unroll over max in-degree
-            p = preds_j[slot]
+        for slot_p in range(maxp):  # static unroll over max in-degree
+            p = preds_j[slot_p]
             valid = p >= 0
             psafe = jnp.maximum(p, 0)
             fp = jax.lax.dynamic_index_in_dim(fin_all, psafe, axis=1, keepdims=False)
@@ -98,24 +142,17 @@ def _kernel(
         cap = jnp.sum(onehot_i * node_cores, axis=1)  # [TILE]
         c_j = pl.load(cores_ref, (pl.dslice(j, 1), slice(None)))[0, 0]
         c = jnp.maximum(jnp.minimum(c_j, cap), 1.0)  # [TILE] f32 core counts
-        # comparison rank (stable): rank[m] = #{m' : row[m'] < row[m] ∨ tie ∧ m'<m}
-        less = row[:, None, :] < row[:, :, None]
-        tie = (row[:, None, :] == row[:, :, None]) & (
-            iota_c[None, None, :] < iota_c[None, :, None]
-        )
-        rank = jnp.sum((less | tie).astype(jnp.float32), axis=2)  # [TILE, CMAX]
-        kth = jnp.sum(jnp.where(rank == (c[:, None] - 1.0), row, 0.0), axis=1)
-        dur_row = pl.load(durations_ref, (pl.dslice(j, 1), slice(None)))[0]  # [N]
+        ranks = stable_ranks(row)  # [TILE, CMAX] — shared rank-select primitive
+        kth = kth_from_ranks(row, ranks, c)
         dur = jnp.sum(onehot_i * dur_row[None, :], axis=1)
         start = jnp.maximum(ready, kth)
         fin_j = start + dur
 
         # --- state updates -----------------------------------------------------
-        new_row = jnp.where(rank < c[:, None], fin_j[:, None], row)
+        new_row = update_from_ranks(row, ranks, c, fin_j)
         core_free[...] = jnp.where(onehot_i[:, :, None] > 0, new_row[:, None, :], cf)
         finish[...] = jax.lax.dynamic_update_index_in_dim(fin_all, fin_j, j, axis=1)
 
-        feas_row = pl.load(feasible_ref, (pl.dslice(j, 1), slice(None)))[0]  # [N]
         feas = jnp.sum(onehot_i * feas_row[None, :], axis=1)
         viol_ref[...] += (1.0 - feas)[:, None]
         return 0
@@ -124,7 +161,7 @@ def _kernel(
     makespan_ref[...] = jnp.max(finish[...], axis=1, keepdims=True)
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tile", "stream", "interpret"))
 def population_makespan_pallas(
     assignments: jax.Array,  # [P, T] int32
     durations: jax.Array,  # [T, N] f32
@@ -137,10 +174,12 @@ def population_makespan_pallas(
     init_free: jax.Array,  # [N, CMAX] f32
     *,
     tile: int = DEFAULT_TILE,
+    stream: bool = False,
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
     """Returns ``(makespan[P], violations[P])``.  ``P % tile == 0`` (the ops
-    wrapper pads the population)."""
+    wrapper pads the population).  ``stream=True`` keeps the two [T, N]
+    task-static arrays in HBM and DMA-streams rows per task step."""
     P, T = assignments.shape
     N = durations.shape[1]
     maxp = pred_matrix.shape[1]
@@ -150,20 +189,35 @@ def population_makespan_pallas(
     node_cores = jnp.sum(init_free < 1e29, axis=1).astype(jnp.float32)
     node_cores = jnp.maximum(node_cores, 1.0).reshape(1, N)
 
-    kernel = functools.partial(_kernel, tasks=T, maxp=maxp)
+    kernel = functools.partial(_kernel, tasks=T, maxp=maxp, stream=stream)
 
     def static(*block):
         return pl.BlockSpec(block, lambda g: tuple(0 for _ in block))
+
+    big = (
+        pl.BlockSpec(memory_space=pltpu.ANY) if stream else None
+    )  # [T, N] arrays stay in HBM when streaming
+    scratch = [
+        pltpu.VMEM((tile, N, cmax), jnp.float32),
+        pltpu.VMEM((tile, T), jnp.float32),
+    ]
+    if stream:
+        scratch += [
+            pltpu.VMEM((2, N), jnp.float32),  # durations row double-buffer
+            pltpu.VMEM((2, N), jnp.float32),  # feasibility row double-buffer
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ]
 
     mk, viol = pl.pallas_call(
         kernel,
         grid=(P // tile,),
         in_specs=[
             pl.BlockSpec((tile, T), lambda g: (g, 0)),
-            static(T, N),
+            big or static(T, N),
             static(T, 1),
             static(T, 1),
-            static(T, N),
+            big or static(T, N),
             static(T, 1),
             static(T, maxp),
             static(N, N),
@@ -178,10 +232,7 @@ def population_makespan_pallas(
             jax.ShapeDtypeStruct((P, 1), jnp.float32),
             jax.ShapeDtypeStruct((P, 1), jnp.float32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((tile, N, cmax), jnp.float32),
-            pltpu.VMEM((tile, T), jnp.float32),
-        ],
+        scratch_shapes=scratch,
         interpret=interpret,
     )(
         assignments.astype(jnp.int32),

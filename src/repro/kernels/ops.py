@@ -59,9 +59,40 @@ def kernel_config() -> KernelConfig:
 _MAKESPAN_VMEM_WORDS = 3_000_000
 
 
-def _makespan_fits(T: int, N: int, cmax: int, tile: int) -> bool:
-    words = T * N * 2 + N * N + N * cmax + tile * (N * cmax + T) + T * 4
-    return words <= _MAKESPAN_VMEM_WORDS
+def _makespan_words(T: int, N: int, cmax: int, maxp: int, tile: int, stream: bool) -> int:
+    """f32-word VMEM footprint of one grid step of the makespan kernel."""
+    words = N * N + N * cmax + tile * (N * cmax + 2 * T) + T * (3 + maxp)
+    # the two big [T, N] task-static arrays: VMEM-resident, or 2×[2, N]
+    # double-buffered rows when DMA-streamed from HBM
+    words += 4 * N if stream else 2 * T * N
+    return words
+
+
+def _makespan_fits(T: int, N: int, cmax: int, maxp: int, tile: int, stream: bool) -> bool:
+    return _makespan_words(T, N, cmax, maxp, tile, stream) <= _MAKESPAN_VMEM_WORDS
+
+
+def _autotune_makespan(
+    P: int, T: int, N: int, cmax: int, maxp: int, tile: int | None
+) -> tuple[int, bool] | None:
+    """Pick ``(tile, stream)`` for the kernel, or None → jnp fallback.
+
+    Preference order: VMEM-resident task arrays with the widest tile, then
+    streamed with the widest tile (streaming re-reads T·N per grid step, so
+    a wide tile amortizes the HBM traffic), then narrow tiles.  Tiles wider
+    than the (pow2-rounded) population only pad wasted lanes — skipped."""
+    if tile is None:
+        pop_cap = 1
+        while pop_cap < min(P, 32):
+            pop_cap *= 2
+        tiles = tuple(t for t in (32, 16, 8, 4, 2, 1) if t <= pop_cap)
+    else:
+        tiles = (tile,)
+    for stream in (False, True):
+        for t in tiles:
+            if _makespan_fits(T, N, cmax, maxp, t, stream):
+                return t, stream
+    return None
 
 
 def population_makespan(
@@ -75,12 +106,18 @@ def population_makespan(
     pred_matrix: jax.Array,
     dtr: jax.Array,
     init_free: jax.Array,
-    tile: int = 8,
+    tile: int | None = None,
 ) -> tuple[jax.Array, jax.Array]:
+    """Dispatch: autotuned Pallas kernel (resident → streamed) when enabled
+    and within the VMEM envelope, else the jnp oracle.  ``tile=None`` picks
+    the widest tile that fits."""
     P, T = assignments.shape
     N = durations.shape[1]
     cmax = init_free.shape[1]
-    if _CONFIG.use_pallas and _makespan_fits(T, N, cmax, tile):
+    maxp = pred_matrix.shape[1]
+    choice = _autotune_makespan(P, T, N, cmax, maxp, tile) if _CONFIG.use_pallas else None
+    if choice is not None:
+        tile, stream = choice
         pad = (-P) % tile
         if pad:
             assignments = jnp.concatenate(
@@ -97,6 +134,7 @@ def population_makespan(
             dtr,
             init_free,
             tile=tile,
+            stream=stream,
             interpret=_CONFIG.resolve_interpret(),
         )
         return mk[:P], viol[:P]

@@ -13,6 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.select import kth_from_ranks, stable_ranks, update_from_ranks
+
 _NEG = -1e30
 
 
@@ -37,7 +39,6 @@ def population_makespan_ref(
     ``repro.core.evaluator`` for the semantics).  Returns
     ``(makespan[P], violations[P])``."""
     T = durations.shape[0]
-    cmax = init_free.shape[1]
     if node_cores is None:
         # padding entries are "never free" (+1e30); real cores start ≤ horizon
         node_cores = jnp.sum(init_free < 1e29, axis=1).astype(jnp.int32)
@@ -53,17 +54,18 @@ def population_makespan_ref(
             p_nodes = assignment[psafe]
             rate = dtr[p_nodes, i]
             transfer = jnp.where(p_nodes == i, 0.0, data[psafe] / rate)
-            ready_terms = jnp.where(valid, fin[psafe] + transfer, -_NEG * 0 - 1e30)
+            ready_terms = jnp.where(valid, fin[psafe] + transfer, _NEG)
             ready = jnp.maximum(release[j], jnp.max(ready_terms, initial=-1e30))
             row = core_free[i]
-            order = jnp.argsort(row)
-            srow = row[order]
+            # O(CMAX²) comparison-rank select — no sort, no gather/scatter;
+            # shares the primitive (and thus bit-exact values) with the
+            # Pallas kernel.
+            ranks = stable_ranks(row)
             c = jnp.maximum(jnp.minimum(cores[j], node_cores[i]), 1)
-            kth = srow[c - 1]
+            kth = kth_from_ranks(row, ranks, c)
             s = jnp.maximum(ready, kth)
             f = s + durations[j, i]
-            newvals = jnp.where(jnp.arange(cmax) < c, f, srow)
-            row = row.at[order].set(newvals)
+            row = update_from_ranks(row, ranks, c, f)
             core_free = core_free.at[i].set(row)
             fin = fin.at[j].set(f)
             return (core_free, fin), None

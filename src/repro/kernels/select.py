@@ -1,0 +1,70 @@
+"""Stable k-th-smallest selection via comparison ranks — *the* core-selection
+primitive of the schedule evaluators.
+
+List scheduling needs, per task step, the time at which ``c`` cores of the
+assigned node are simultaneously free: the ``c``-th smallest entry of that
+node's core-free row, followed by replacing the ``c`` stably-smallest entries
+with the task's finish time.  A sort gives both, but the TPU VPU has no sort
+primitive and XLA's ``argsort`` inside the innermost T-step scan costs
+O(CMAX log CMAX) *plus* a gather/scatter pair.  The comparison-rank trick
+used here is branch-free, gather-free, and purely elementwise:
+
+    rank[m] = #{m' : row[m'] < row[m]  or  (row[m'] == row[m] and m' < m)}
+
+``rank`` is a permutation of ``0..C-1`` (ties broken by index — the same
+stable order ``np.argsort(kind="stable")`` produces), so the value with
+``rank == c-1`` is the stable c-th smallest, and ``rank < c`` masks the
+stably-smallest ``c`` entries for the update.  O(CMAX²) compares, but they
+vectorize perfectly on the VPU / in XLA — and since the *values* written are
+identical to the sort-based formulation, results match the numpy oracle
+bit-for-bit.
+
+Shared by ``repro.kernels.makespan`` (inside the Pallas kernel),
+``repro.kernels.ref`` (the jnp oracle), and through it every metaheuristic
+fitness function.  Ranks are returned as f32 (exact for C < 2²⁴) so the
+kernel can keep its core counts in vector registers as f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stable_ranks(row: jax.Array) -> jax.Array:
+    """Comparison rank of every entry along the last axis.
+
+    ``row [..., C]`` → ``ranks [..., C]`` (f32), a permutation of ``0..C-1``
+    matching stable ascending sort order.
+    """
+    c = row.shape[-1]
+    # 2D iotas (TPU requires ≥2D); axis 0 indexes m, axis 1 indexes m'.
+    im = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    imp = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    at_m = row[..., :, None]
+    at_mp = row[..., None, :]
+    before = (at_mp < at_m) | ((at_mp == at_m) & (imp < im))
+    return jnp.sum(before.astype(jnp.float32), axis=-1)
+
+
+def kth_from_ranks(row: jax.Array, ranks: jax.Array, c) -> jax.Array:
+    """Stable ``c``-th smallest (1-indexed) along the last axis.
+
+    ``c`` must broadcast against ``row``'s leading dims and satisfy
+    ``1 <= c <= C`` (exactly one entry has ``rank == c-1``).
+    """
+    cf = jnp.asarray(c, jnp.float32)
+    hit = ranks == (cf[..., None] - 1.0)
+    return jnp.sum(jnp.where(hit, row, 0.0), axis=-1)
+
+
+def update_from_ranks(row: jax.Array, ranks: jax.Array, c, fill) -> jax.Array:
+    """Replace the ``c`` stably-smallest entries of ``row`` with ``fill``."""
+    cf = jnp.asarray(c, jnp.float32)
+    fillf = jnp.asarray(fill, row.dtype)
+    return jnp.where(ranks < cf[..., None], fillf[..., None], row)
+
+
+def kth_smallest(row: jax.Array, c) -> jax.Array:
+    """Convenience: stable c-th smallest without reusing the ranks."""
+    return kth_from_ranks(row, stable_ranks(row), c)
