@@ -5,10 +5,13 @@ reader and kernel microbenches.  Prints ``name,us_per_call,derived`` CSV.
     PYTHONPATH=src python -m benchmarks.run --full     # + 5000x5000 scale row
     PYTHONPATH=src python -m benchmarks.run --smoke    # small Table IX sizes
                                                        # → BENCH_table9.json
+    PYTHONPATH=src python -m benchmarks.run --scenario f.json  # time one
+                                                       # orchestrated Scenario
 
 ``--smoke`` is the CI mode: it runs only the small Table IX scale points and
 writes a machine-readable ``BENCH_table9.json`` so successive PRs leave a
-perf trajectory behind.
+perf trajectory behind.  ``--scenario`` times a declarative
+:class:`repro.core.api.Scenario` end to end through the Fig. 4 orchestrator.
 """
 
 from __future__ import annotations
@@ -17,8 +20,31 @@ import sys
 import time
 
 
+def _run_scenario(path: str) -> None:
+    from repro.core import api
+
+    scenario = api.load_scenario(path)
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    result = api.run_scenario(scenario)
+    us = (time.perf_counter() - t0) * 1e6
+    summary = result.summary()
+    derived = (
+        f"rounds={summary['rounds']};adapted={summary['adapted']};"
+        f"technique={summary['technique']};"
+        f"makespan={summary.get('observed_makespan', summary['predicted_makespan'])}"
+    )
+    print(f"scenario_{scenario.name},{us:.0f},{derived}")
+
+
 def main() -> None:
     full = "--full" in sys.argv
+    if "--scenario" in sys.argv:
+        idx = sys.argv.index("--scenario") + 1
+        if idx >= len(sys.argv):
+            raise SystemExit("usage: python -m benchmarks.run --scenario <scenario.json>")
+        _run_scenario(sys.argv[idx])
+        return
     if "--smoke" in sys.argv:
         from benchmarks import bench_table9_scale
 

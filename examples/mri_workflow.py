@@ -9,8 +9,8 @@ import tempfile
 from pathlib import Path
 
 from repro.core import ObjectiveWeights, Workload, build_problem, system_from_json
+from repro.core.api import solve_problem
 from repro.core.snakemake_io import dump_schedule, parse_rules
-from repro.core.solver import solve_problem
 
 SNAKEFILE = """
 rule reconstruct:

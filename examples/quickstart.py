@@ -3,24 +3,26 @@
     PYTHONPATH=src python examples/quickstart.py
 
 1. Build the Table IV system and Table V workload models.
-2. Solve the mapping/scheduling problem with MILP (Algorithm 1) and the
-   approximate techniques (Table VII).
-3. Emit the executor JSON (Fig. 4 step 3), replay it on the discrete-event
-   executor, and close the digital-twin loop (monitor updates node P).
+2. Compare the solver techniques (Table VII) through the registry.
+3. Declare the whole closed loop as ONE ``Scenario`` — weights, technique
+   policy, executor backend, and a perturbation (N2 degraded to 60% speed) —
+   and let the ``Orchestrator`` run Fig. 4: solve → execute → monitor →
+   re-solve on drift.
 """
 
 import json
 
 from repro.core import (
-    ObjectiveWeights,
+    Orchestrator,
+    Perturbation,
+    OrchestrationConfig,
+    Scenario,
     build_problem,
     compare_techniques,
     mri_system,
     mri_workload,
     verify_schedule,
 )
-from repro.core.monitor import MonitorState
-from repro.core.simulator import execute
 
 
 def main() -> None:
@@ -42,27 +44,31 @@ def main() -> None:
     print("\n=== Optimal schedule (executor JSON, Fig. 4 step 3) ===")
     print(json.dumps(best.to_json(problem, node_names), indent=2)[:1200])
 
-    print("\n=== Execute on the digital twin, N2 degraded to 60% speed ===")
-    import numpy as np
-
-    report = execute(problem, best, speed_factors=np.array([1.0, 0.6, 1.0]))
-    print(f"predicted makespan {report.predicted_makespan:.2f} s, "
-          f"observed {report.makespan:.2f} s (slowdown {report.slowdown:.2f}x)")
-
-    monitor = MonitorState(smoothing=1.0)
-    monitor.update(system, problem, report)
-    refreshed = monitor.refreshed_system(system)
+    print("\n=== The Fig. 4 closed loop as one declarative Scenario ===")
+    scenario = Scenario(
+        name="mri-quickstart",
+        system=system,
+        workload=workload,
+        technique="auto",  # §VII hybrid policy: MILP small / GA mid / HEFT large
+        perturbation=Perturbation(speed_factors={"N2": 0.6}),  # N2 at 60% speed
+        orchestration=OrchestrationConfig(max_rounds=3, drift_threshold=0.05,
+                                          smoothing=1.0),
+    )
+    result = Orchestrator(scenario).run()
+    for ev in result.adaptations:
+        print(f"round {ev.round}: technique={ev.technique} "
+              f"predicted {ev.predicted_makespan:.2f} s, "
+              f"observed {ev.observed_makespan:.2f} s "
+              f"(slowdown {ev.slowdown:.2f}x, re-solve={ev.resolved})")
     print("monitor learned node speeds:",
-          {n.name: round(n.processing_speed, 3) for n in refreshed.nodes})
+          {k: round(v, 3) for k, v in result.speed_estimates.items()})
+    print(f"adapted={result.adapted}: observed makespan "
+          f"{result.reports[0].makespan:.2f} s → {result.reports[-1].makespan:.2f} s")
 
-    # re-solve with the refreshed model — the Fig. 4 loop
-    problem2 = build_problem(refreshed, workload)
-    from repro.core.milp import solve_milp
-
-    best2 = solve_milp(problem2)
-    report2 = execute(problem2, best2, speed_factors=np.array([1.0, 0.6, 1.0]))
-    print(f"after feedback: predicted {report2.predicted_makespan:.2f} s, "
-          f"observed {report2.makespan:.2f} s (slowdown {report2.slowdown:.2f}x)")
+    # the same scenario is one JSON file, runnable as
+    #   python -m repro run mri_scenario.json
+    path = scenario.save("/tmp/mri_scenario.json")
+    print(f"\nscenario spec written to {path}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,71 @@
+"""Scenario runner CLI (paper Fig. 4 end-to-end from one JSON file).
+
+    PYTHONPATH=src python -m repro run scenario.json [--technique heft]
+                                                     [--backend simulate]
+                                                     [--out result.json]
+                                                     [--out-dir /tmp/exec]
+    PYTHONPATH=src python -m repro techniques
+
+``run`` loads a declarative :class:`repro.core.api.Scenario`, drives the
+:class:`repro.core.api.Orchestrator` closed loop, and prints (optionally
+saves) the :class:`repro.core.api.RunResult` summary JSON.  ``techniques``
+lists the solver registry with capability metadata.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(prog="repro", description=__doc__)
+    sub = parser.add_subparsers(dest="cmd", required=True)
+
+    run_p = sub.add_parser("run", help="run a scenario through the orchestrator")
+    run_p.add_argument("scenario", help="path to a Scenario JSON file")
+    run_p.add_argument("--technique", help="override the scenario's technique")
+    run_p.add_argument("--backend", help="override the executor backend "
+                       "(simulate | slurm | kubernetes)")
+    run_p.add_argument("--out", help="also write the summary JSON here")
+    run_p.add_argument("--out-dir", default="/tmp/repro_executor",
+                       help="artifact directory for render backends")
+
+    sub.add_parser("techniques", help="list registered solver techniques")
+
+    args = parser.parse_args(argv)
+
+    from repro.core import api
+
+    if args.cmd == "techniques":
+        for entry in sorted(api.REGISTRY, key=lambda e: e.name):
+            caps = entry.capabilities
+            flags = ", ".join(
+                s for s, on in (
+                    ("exact", caps.exact),
+                    (f"max_tasks={caps.max_tasks}", caps.max_tasks is not None),
+                    ("batch", caps.supports_batch),
+                    ("time-limited", caps.needs_time_limit),
+                ) if on
+            ) or "heuristic/approximate"
+            print(f"{entry.name:12s} {flags}")
+        return 0
+
+    scenario = api.load_scenario(args.scenario)
+    if args.technique:
+        scenario = scenario.replace(technique=args.technique)
+    if args.backend:
+        scenario = scenario.replace(backend=args.backend)
+
+    result = api.run_scenario(scenario, out_dir=args.out_dir)
+    summary = json.dumps(result.summary(), indent=2)
+    print(summary)
+    if args.out:
+        Path(args.out).write_text(summary + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,10 +8,24 @@ from repro.core.evaluator import (
     evaluate_population_batch,
     make_batched_fitness_fn,
 )
-from repro.core.solver import (
-    ALL_TECHNIQUES,
+from repro.core.api import (
+    REGISTRY,
+    AdaptationEvent,
+    OrchestrationConfig,
+    Orchestrator,
+    Perturbation,
+    Policy,
+    PolicyRule,
+    RunResult,
+    Scenario,
     SolveReport,
+    SolverCapabilities,
+    SolverRegistry,
     compare_techniques,
+    load_scenario,
+    register_solver,
+    run_scenario,
+    scenario_from_json,
     solve,
     solve_problem,
     solve_problems,
@@ -47,19 +61,34 @@ from repro.core.workload_model import (
 
 __all__ = [
     "ALL_TECHNIQUES",
+    "AdaptationEvent",
     "Cluster",
     "DataCenter",
     "Node",
     "ObjectiveWeights",
+    "OrchestrationConfig",
+    "Orchestrator",
+    "Perturbation",
+    "Policy",
+    "PolicyRule",
+    "REGISTRY",
+    "RunResult",
+    "Scenario",
     "Schedule",
     "ScheduleProblem",
     "SolveReport",
+    "SolverCapabilities",
+    "SolverRegistry",
     "System",
     "Task",
     "Workflow",
     "Workload",
     "build_problem",
     "compare_techniques",
+    "load_scenario",
+    "register_solver",
+    "run_scenario",
+    "scenario_from_json",
     "evaluate_assignment",
     "evaluate_population_batch",
     "make_batched_fitness_fn",
@@ -82,3 +111,12 @@ __all__ = [
     "workload_from_json",
     "workload_to_json",
 ]
+
+
+def __getattr__(name: str):
+    if name == "ALL_TECHNIQUES":
+        # live view: includes techniques registered after package import
+        from repro.core.api import REGISTRY as _reg
+
+        return _reg.names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

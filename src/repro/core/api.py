@@ -1,0 +1,872 @@
+"""Scenario-first public API (paper Fig. 4): registry, policy, scenario, loop.
+
+The paper's headline contribution is *automated orchestration* — model →
+optimize → dispatch → monitor → re-solve.  This module makes that loop the
+product surface:
+
+* :class:`SolverRegistry` / :func:`register_solver` — every technique of
+  Table VII is a registered plugin carrying capability metadata (exactness,
+  size ceiling, batch support).  Out-of-tree solvers register with one
+  decorator and are immediately routable by ``technique=`` or by policy.
+* :class:`Policy` — the §VII hybrid (exact MILP when small, meta-heuristic in
+  the mid range, heuristic at scale) as an inspectable, user-overridable rule
+  chain instead of hard-coded thresholds.
+* :class:`Scenario` — one declarative spec (system + workload + weights +
+  technique/policy + executor backend + perturbation model) with JSON
+  round-trip, sharing the Fig. 7/8 file format via
+  :func:`repro.core.snakemake_io.load_config`.
+* :class:`Orchestrator` — the full Fig. 4 closed loop: build problem, solve
+  via the registry, dispatch (simulate / slurm / kubernetes), fold
+  :mod:`repro.core.monitor` speed feedback into node properties, and re-solve
+  while observed drift exceeds the threshold.  Returns a structured
+  :class:`RunResult`.
+
+Fig. 4 step → class mapping:
+
+====  =========================  =========================================
+step  paper                      here
+====  =========================  =========================================
+1     modeling                   ``Scenario`` (system/workload spec)
+2     optimization               ``SolverRegistry`` + ``Policy``
+3     sorted JSON schedule       ``Schedule.to_json`` (unchanged contract)
+4     deploy & execution         ``executor.dispatch`` backends
+4→1   monitoring feedback        ``MonitorState`` inside ``Orchestrator``
+====  =========================  =========================================
+
+The legacy free functions (``solve``, ``solve_problem``, ``solve_problems``,
+``compare_techniques``) live here too; :mod:`repro.core.solver` re-exports
+them as deprecation shims.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Any, Callable, Mapping, Sequence
+
+import numpy as np
+
+from repro.core import heuristics, metaheuristics
+from repro.core.evaluator import ObjectiveWeights, Schedule
+from repro.core.milp import MilpSizeError, solve_milp
+from repro.core.monitor import MonitorState
+from repro.core.simulator import ExecutionReport, execute
+from repro.core.snakemake_io import load_config
+from repro.core.system_model import System, system_to_json
+from repro.core.workload_model import (
+    ScheduleProblem,
+    Workload,
+    build_problem,
+    workload_to_json,
+)
+
+
+@dataclasses.dataclass
+class SolveReport:
+    """One solve: the chosen schedule plus provenance (Fig. 4 step 2 → 3)."""
+
+    schedule: Schedule
+    problem: ScheduleProblem
+    history: np.ndarray | None = None
+    fallbacks: tuple[str, ...] = ()
+
+
+# -----------------------------------------------------------------------------
+# Solver registry
+# -----------------------------------------------------------------------------
+
+SolverFn = Callable[..., SolveReport]
+BatchSolverFn = Callable[..., "list[SolveReport] | None"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverCapabilities:
+    """Routing metadata a technique declares at registration time.
+
+    ``max_tasks`` is the size ceiling above which the technique must not be
+    *routed to* by a policy (it may still raise on direct calls, like MILP's
+    own ``max_tasks`` guard).  ``supports_batch`` advertises a family solver
+    (one compiled program over many instances, e.g. the PR 1 ``ga_sweep``).
+    """
+
+    exact: bool = False
+    max_tasks: int | None = None
+    supports_batch: bool = False
+    needs_time_limit: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverEntry:
+    name: str
+    fn: SolverFn
+    capabilities: SolverCapabilities
+    batch_fn: BatchSolverFn | None = None
+
+
+class SolverRegistry:
+    """Name → solver mapping with capability metadata.
+
+    Replaces the old hard-coded ``_DISPATCH`` dict: techniques self-describe,
+    policies route over the metadata, and plugins register without touching
+    core code."""
+
+    def __init__(self) -> None:
+        self._entries: dict[str, SolverEntry] = {}
+
+    # ---- registration -------------------------------------------------------
+    def register(
+        self,
+        name: str,
+        fn: SolverFn | None = None,
+        *,
+        exact: bool = False,
+        max_tasks: int | None = None,
+        supports_batch: bool = False,
+        needs_time_limit: bool = False,
+        batch_fn: BatchSolverFn | None = None,
+        overwrite: bool = False,
+    ):
+        """Register ``fn`` under ``name``; usable directly or as a decorator.
+
+        ``fn(problem, weights=..., **kwargs) -> SolveReport``.
+        """
+
+        caps = SolverCapabilities(
+            exact=exact,
+            max_tasks=max_tasks,
+            supports_batch=supports_batch or batch_fn is not None,
+            needs_time_limit=needs_time_limit,
+        )
+
+        def _add(f: SolverFn) -> SolverFn:
+            if name in self._entries and not overwrite:
+                raise ValueError(f"technique {name!r} already registered")
+            self._entries[name] = SolverEntry(name, f, caps, batch_fn)
+            return f
+
+        return _add if fn is None else _add(fn)
+
+    def unregister(self, name: str) -> None:
+        self._entries.pop(name, None)
+
+    # ---- lookup -------------------------------------------------------------
+    def get(self, name: str) -> SolverEntry:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown technique {name!r}; options {sorted(self._entries)}"
+            ) from None
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(self._entries)
+
+    def capabilities(self, name: str) -> SolverCapabilities:
+        return self.get(name).capabilities
+
+    def __contains__(self, name: object) -> bool:
+        return name in self._entries
+
+    def __iter__(self):
+        return iter(self._entries.values())
+
+    # ---- solving ------------------------------------------------------------
+    def solve(
+        self,
+        name: str,
+        problem: ScheduleProblem,
+        weights: ObjectiveWeights = ObjectiveWeights(),
+        **kwargs: Any,
+    ) -> SolveReport:
+        return self.get(name).fn(problem, weights, **kwargs)
+
+    def solve_batch(
+        self,
+        name: str,
+        problems: Sequence[ScheduleProblem],
+        weights: ObjectiveWeights = ObjectiveWeights(),
+        **kwargs: Any,
+    ) -> list[SolveReport]:
+        """Solve a family; uses the technique's batch fast path when it can.
+
+        A ``batch_fn`` may decline (return ``None``) — e.g. the GA sweep only
+        batches through the jnp fitness backend — in which case instances run
+        one by one."""
+        entry = self.get(name)
+        if entry.batch_fn is not None and len(problems) > 1:
+            reports = entry.batch_fn(problems, weights, **kwargs)
+            if reports is not None:
+                return reports
+        return [entry.fn(p, weights, **kwargs) for p in problems]
+
+
+REGISTRY = SolverRegistry()
+"""The default process-wide registry (built-ins below; plugins welcome)."""
+
+
+def register_solver(
+    name: str,
+    *,
+    registry: SolverRegistry | None = None,
+    **caps: Any,
+):
+    """Decorator: register a solver in the default (or given) registry.
+
+    >>> @register_solver("my-greedy", exact=False)
+    ... def my_greedy(problem, weights=ObjectiveWeights(), **kw) -> SolveReport:
+    ...     ...
+    """
+    return (registry if registry is not None else REGISTRY).register(name, **caps)
+
+
+# ---- built-in techniques (paper Table VII) ----------------------------------
+
+def _milp_solver(capacity_mode: str) -> SolverFn:
+    def run(problem, weights=ObjectiveWeights(), **kw) -> SolveReport:
+        sched = solve_milp(problem, weights, capacity_mode=capacity_mode, **kw)
+        return SolveReport(schedule=sched, problem=problem)
+
+    return run
+
+
+def _heuristic_solver(fn) -> SolverFn:
+    def run(problem, weights=ObjectiveWeights(), **kw) -> SolveReport:
+        return SolveReport(schedule=fn(problem, weights), problem=problem)
+
+    return run
+
+
+def _mh_solver(name: str) -> SolverFn:
+    def run(problem, weights=ObjectiveWeights(), **kw) -> SolveReport:
+        res = metaheuristics.TECHNIQUES[name](problem, weights, **kw)
+        return SolveReport(schedule=res.schedule, problem=problem, history=res.history)
+
+    return run
+
+
+def _ga_batch(problems, weights=ObjectiveWeights(), **kw) -> list[SolveReport] | None:
+    # the sweep evaluates through the shared jnp fitness core; a 'pallas'
+    # backend request (or any other per-instance-only mode) declines batching
+    if kw.get("backend", "jnp") != "jnp":
+        return None
+    sweep_kw = {k: v for k, v in kw.items() if k != "backend"}
+    results = metaheuristics.ga_sweep(list(problems), weights, **sweep_kw)
+    return [
+        SolveReport(schedule=r.schedule, problem=p, history=r.history)
+        for r, p in zip(results, problems)
+    ]
+
+
+REGISTRY.register("milp", _milp_solver("event"), exact=True, max_tasks=60,
+                  needs_time_limit=True)
+REGISTRY.register("milp-static", _milp_solver("static"), exact=True, max_tasks=60,
+                  needs_time_limit=True)
+REGISTRY.register("heft", _heuristic_solver(heuristics.heft))
+REGISTRY.register("olb", _heuristic_solver(heuristics.olb))
+REGISTRY.register("ga", _mh_solver("ga"), batch_fn=_ga_batch)
+REGISTRY.register("pso", _mh_solver("pso"))
+REGISTRY.register("sa", _mh_solver("sa"))
+REGISTRY.register("aco", _mh_solver("aco"))
+
+
+def __getattr__(name: str):
+    if name == "ALL_TECHNIQUES":
+        # live view over the open registry: plugins registered after import
+        # are included (repro.core and repro.core.solver forward here)
+        return REGISTRY.names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+# -----------------------------------------------------------------------------
+# Routing policy (the §VII hybrid, data-driven)
+# -----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyRule:
+    """One step of a routing chain: try ``technique`` when the size gate
+    matches; fall through when the result misses the acceptance bar.
+
+    ``accept_status`` are status *prefixes* (empty = any status accepted);
+    ``forward_kwargs`` controls whether caller kwargs reach this technique
+    (MILP, say, should not see GA population knobs)."""
+
+    technique: str
+    max_tasks: int | None = None
+    min_tasks: int | None = None
+    accept_status: tuple[str, ...] = ()
+    require_valid: bool = True
+    forward_kwargs: bool = True
+    options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def applies(self, problem: ScheduleProblem) -> bool:
+        t = problem.num_tasks
+        if self.max_tasks is not None and t > self.max_tasks:
+            return False
+        if self.min_tasks is not None and t < self.min_tasks:
+            return False
+        return True
+
+    def to_json(self) -> dict:
+        return {
+            "technique": self.technique,
+            "max_tasks": self.max_tasks,
+            "min_tasks": self.min_tasks,
+            "accept_status": list(self.accept_status),
+            "require_valid": self.require_valid,
+            "forward_kwargs": self.forward_kwargs,
+            "options": dict(self.options),
+        }
+
+    @classmethod
+    def from_json(cls, obj: Mapping[str, Any]) -> "PolicyRule":
+        return cls(
+            technique=obj["technique"],
+            max_tasks=obj.get("max_tasks"),
+            min_tasks=obj.get("min_tasks"),
+            accept_status=tuple(obj.get("accept_status", ())),
+            require_valid=bool(obj.get("require_valid", True)),
+            forward_kwargs=bool(obj.get("forward_kwargs", True)),
+            options=dict(obj.get("options", {})),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """An ordered rule chain plus an unconditional fallback technique.
+
+    ``Policy.paper_hybrid()`` reproduces the paper's conclusion (§VII):
+    exact MILP under a size/time threshold, meta-heuristic in the mid range,
+    heuristic at scale — but as data the user can inspect and override."""
+
+    rules: tuple[PolicyRule, ...]
+    final: str = "heft"
+
+    @staticmethod
+    def paper_hybrid(
+        milp_task_threshold: int = 25,
+        mh_task_threshold: int = 600,
+        milp_time_limit: float = 30.0,
+    ) -> "Policy":
+        return Policy(
+            rules=(
+                PolicyRule(
+                    "milp",
+                    max_tasks=milp_task_threshold,
+                    accept_status=("optimal", "feasible"),
+                    require_valid=False,
+                    forward_kwargs=False,
+                    options={"time_limit": milp_time_limit},
+                ),
+                PolicyRule("ga", max_tasks=mh_task_threshold),
+            ),
+            final="heft",
+        )
+
+    def route(
+        self,
+        problem: ScheduleProblem,
+        weights: ObjectiveWeights = ObjectiveWeights(),
+        *,
+        registry: SolverRegistry | None = None,
+        **kwargs: Any,
+    ) -> SolveReport:
+        """Route through the rule chain.
+
+        Kwargs reach a rule's technique when the rule opts in
+        (``forward_kwargs``).  A kwarg named after a registered technique
+        whose value is a mapping is *scoped*: it goes only to that technique
+        (overriding the rule's own defaults) — e.g.
+        ``route(p, milp={"time_limit": 60.0})`` adjusts the MILP budget
+        without leaking an unknown kwarg into the GA or HEFT steps."""
+        reg = registry if registry is not None else REGISTRY
+        scoped = {
+            k: v for k, v in kwargs.items()
+            if k in reg and isinstance(v, Mapping)
+        }
+        flat = {k: v for k, v in kwargs.items() if k not in scoped}
+        fallbacks: list[str] = []
+        for rule in self.rules:
+            if not rule.applies(problem):
+                continue
+            caps = reg.capabilities(rule.technique)
+            if caps.max_tasks is not None and problem.num_tasks > caps.max_tasks:
+                fallbacks.append(f"{rule.technique}:size")
+                continue
+            kw = dict(rule.options)
+            if rule.forward_kwargs:
+                kw.update(flat)
+            kw.update(scoped.get(rule.technique, {}))
+            try:
+                rep = reg.solve(rule.technique, problem, weights, **kw)
+            except MilpSizeError as e:
+                fallbacks.append(f"{rule.technique}:{e}")
+                continue
+            except ValueError as e:
+                # only exact solvers get the wide defensive net (infeasible
+                # models raise); approximate techniques' errors are real bugs
+                if not caps.exact:
+                    raise
+                fallbacks.append(f"{rule.technique}:{e}")
+                continue
+            if rule.accept_status and not rep.schedule.status.startswith(
+                tuple(rule.accept_status)
+            ):
+                fallbacks.append(f"{rule.technique}:{rep.schedule.status}")
+                continue
+            if rule.require_valid and rep.schedule.violations != 0:
+                fallbacks.append(f"{rule.technique}:violations")
+                continue
+            rep.fallbacks = tuple(fallbacks)
+            return rep
+        rep = reg.solve(self.final, problem, weights, **scoped.get(self.final, {}))
+        rep.fallbacks = tuple(fallbacks)
+        return rep
+
+    def to_json(self) -> dict:
+        return {"rules": [r.to_json() for r in self.rules], "final": self.final}
+
+    @classmethod
+    def from_json(cls, obj: Mapping[str, Any]) -> "Policy":
+        return cls(
+            rules=tuple(PolicyRule.from_json(r) for r in obj.get("rules", ())),
+            final=obj.get("final", "heft"),
+        )
+
+
+# -----------------------------------------------------------------------------
+# Declarative Scenario
+# -----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Perturbation:
+    """Ground-truth deviation model for the digital twin: per-node *true*
+    speed multipliers (name → factor; 0.5 = node runs at half the modeled
+    speed) plus optional lognormal per-task jitter."""
+
+    speed_factors: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    jitter: float = 0.0
+    seed: int | None = None
+
+    def to_json(self) -> dict:
+        return {
+            "speed_factors": {k: float(v) for k, v in self.speed_factors.items()},
+            "jitter": float(self.jitter),
+            "seed": self.seed,
+        }
+
+    @classmethod
+    def from_json(cls, obj: Mapping[str, Any]) -> "Perturbation":
+        return cls(
+            speed_factors=dict(obj.get("speed_factors", {})),
+            jitter=float(obj.get("jitter", 0.0)),
+            seed=obj.get("seed"),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class OrchestrationConfig:
+    """Closed-loop knobs: how many solve→execute rounds, the observed-drift
+    threshold that triggers a re-solve, and the monitor's EMA smoothing."""
+
+    max_rounds: int = 3
+    drift_threshold: float = 0.1
+    smoothing: float = 1.0
+
+    def to_json(self) -> dict:
+        return {
+            "max_rounds": int(self.max_rounds),
+            "drift_threshold": float(self.drift_threshold),
+            "smoothing": float(self.smoothing),
+        }
+
+    @classmethod
+    def from_json(cls, obj: Mapping[str, Any]) -> "OrchestrationConfig":
+        return cls(
+            max_rounds=int(obj.get("max_rounds", 3)),
+            drift_threshold=float(obj.get("drift_threshold", 0.1)),
+            smoothing=float(obj.get("smoothing", 1.0)),
+        )
+
+
+def _weights_to_json(w: ObjectiveWeights) -> dict:
+    return {"alpha": float(w.alpha), "beta": float(w.beta), "usage_mode": w.usage_mode}
+
+
+def _weights_from_json(obj: Mapping[str, Any]) -> ObjectiveWeights:
+    return ObjectiveWeights(
+        alpha=float(obj.get("alpha", 1.0)),
+        beta=float(obj.get("beta", 1.0)),
+        usage_mode=obj.get("usage_mode", "fixed"),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One declarative end-to-end run: what to schedule, how to solve it,
+    where to dispatch it, and how reality may deviate from the model.
+
+    Serializes to a single JSON file sharing the paper's Fig. 7 (``nodes``)
+    and Fig. 8 (workflow) sections, with everything scenario-specific under a
+    ``"scenario"`` header — so the same file still loads through
+    :func:`repro.core.snakemake_io.load_config`.
+
+    ``solver_options`` reach the solver(s): flat keys are forwarded to the
+    chosen technique (for ``"auto"``/``"policy"``, only to rules that opt
+    into caller kwargs), while a key named after a technique whose value is
+    a dict is scoped to that technique alone — e.g.
+    ``{"milp": {"time_limit": 60.0}}`` tunes the MILP budget without leaking
+    into GA/HEFT fallbacks."""
+
+    name: str
+    system: System
+    workload: Workload
+    weights: ObjectiveWeights = ObjectiveWeights()
+    technique: str = "auto"
+    policy: Policy | None = None
+    backend: str = "simulate"
+    perturbation: Perturbation = Perturbation()
+    orchestration: OrchestrationConfig = OrchestrationConfig()
+    solver_options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    _RESERVED_SECTIONS = ("scenario", "nodes", "dtr_matrix")
+
+    def to_json(self) -> dict:
+        for wf in self.workload.workflows:
+            if wf.name in self._RESERVED_SECTIONS:
+                raise ValueError(
+                    f"workflow name {wf.name!r} collides with a reserved "
+                    f"scenario-file section {self._RESERVED_SECTIONS}"
+                )
+        header: dict[str, Any] = {
+            "name": self.name,
+            "technique": self.technique,
+            "backend": self.backend,
+            "weights": _weights_to_json(self.weights),
+            "perturbation": self.perturbation.to_json(),
+            "orchestration": self.orchestration.to_json(),
+            "solver_options": dict(self.solver_options),
+        }
+        if self.policy is not None:
+            header["policy"] = self.policy.to_json()
+        out: dict[str, Any] = {"scenario": header}
+        out.update(system_to_json(self.system))
+        out.update(workload_to_json(self.workload))
+        return out
+
+    def save(self, path: str | Path) -> Path:
+        path = Path(path)
+        path.write_text(json.dumps(self.to_json(), indent=2) + "\n")
+        return path
+
+    def replace(self, **changes: Any) -> "Scenario":
+        return dataclasses.replace(self, **changes)
+
+
+def scenario_from_json(obj: Mapping[str, Any] | str) -> Scenario:
+    """Parse a scenario file/dict (the Fig. 7/8 config plus a ``scenario``
+    header).  The system/workload sections go through the exact same
+    :func:`snakemake_io.load_config` path as plain config files."""
+    if isinstance(obj, str):
+        obj = json.loads(obj)
+    system, workload = load_config(obj)
+    if system is None or workload is None:
+        missing = "nodes" if system is None else "workflow"
+        raise ValueError(f"scenario config is missing its {missing} section")
+    header = obj.get("scenario", {})
+    return Scenario(
+        name=header.get("name", "scenario"),
+        system=system,
+        workload=workload,
+        weights=_weights_from_json(header.get("weights", {})),
+        technique=header.get("technique", "auto"),
+        policy=Policy.from_json(header["policy"]) if "policy" in header else None,
+        backend=header.get("backend", "simulate"),
+        perturbation=Perturbation.from_json(header.get("perturbation", {})),
+        orchestration=OrchestrationConfig.from_json(header.get("orchestration", {})),
+        solver_options=dict(header.get("solver_options", {})),
+    )
+
+
+def load_scenario(path: str | Path) -> Scenario:
+    return scenario_from_json(Path(path).read_text())
+
+
+# -----------------------------------------------------------------------------
+# Orchestrator — the Fig. 4 closed loop as a first-class object
+# -----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AdaptationEvent:
+    """One solve→execute→monitor round of the loop."""
+
+    round: int
+    technique: str
+    predicted_makespan: float
+    observed_makespan: float
+    slowdown: float
+    drift: float
+    resolved: bool  # did this round's drift trigger a re-solve?
+    speed_estimates: dict[str, float]
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Structured outcome of an orchestrated run."""
+
+    scenario: str
+    backend: str
+    schedules: list[Schedule] = dataclasses.field(default_factory=list)
+    reports: list[ExecutionReport] = dataclasses.field(default_factory=list)
+    adaptations: list[AdaptationEvent] = dataclasses.field(default_factory=list)
+    artifacts: list[Path] = dataclasses.field(default_factory=list)
+    speed_estimates: dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def final_schedule(self) -> Schedule:
+        return self.schedules[-1]
+
+    @property
+    def final_report(self) -> ExecutionReport | None:
+        return self.reports[-1] if self.reports else None
+
+    @property
+    def adapted(self) -> bool:
+        return any(a.resolved for a in self.adaptations)
+
+    def summary(self) -> dict:
+        out: dict[str, Any] = {
+            "scenario": self.scenario,
+            "backend": self.backend,
+            "rounds": len(self.schedules),
+            "adapted": self.adapted,
+            "technique": self.final_schedule.technique if self.schedules else None,
+            "predicted_makespan": float(self.final_schedule.makespan)
+            if self.schedules
+            else None,
+            "adaptations": [a.to_json() for a in self.adaptations],
+            "speed_estimates": dict(self.speed_estimates),
+        }
+        if self.reports:
+            out["observed_makespan"] = float(self.reports[-1].makespan)
+            out["initial_observed_makespan"] = float(self.reports[0].makespan)
+            out["slowdown"] = float(self.reports[-1].slowdown)
+        if self.artifacts:
+            out["artifacts"] = [str(p) for p in self.artifacts]
+        return out
+
+
+class Orchestrator:
+    """Owns the closed loop: solve via registry/policy, dispatch, fold
+    monitor feedback into node properties ``P``, re-solve on drift.
+
+    Render backends (``slurm`` / ``kubernetes``) produce artifacts and stop
+    after one round — there is no feedback channel without a live cluster."""
+
+    def __init__(
+        self,
+        scenario: Scenario,
+        *,
+        registry: SolverRegistry | None = None,
+        out_dir: str | Path = "/tmp/repro_executor",
+    ) -> None:
+        self.scenario = scenario
+        self.registry = registry if registry is not None else REGISTRY
+        self.out_dir = Path(out_dir)
+        self.monitor = MonitorState(smoothing=scenario.orchestration.smoothing)
+
+    # ---- pieces -------------------------------------------------------------
+    def solve(self, problem: ScheduleProblem) -> SolveReport:
+        sc = self.scenario
+        opts = dict(sc.solver_options)
+        if sc.policy is not None or sc.technique in ("auto", "policy"):
+            policy = sc.policy if sc.policy is not None else Policy.paper_hybrid()
+            return policy.route(problem, sc.weights, registry=self.registry, **opts)
+        # direct technique: apply the same technique-scoping as Policy.route
+        # (flat keys pass through; {"<technique>": {...}} dicts are unpacked
+        # for the matching technique and dropped for others)
+        kw = {
+            k: v for k, v in opts.items()
+            if not (k in self.registry and isinstance(v, Mapping))
+        }
+        scoped = opts.get(sc.technique)
+        if isinstance(scoped, Mapping):
+            kw.update(scoped)
+        return self.registry.solve(sc.technique, problem, sc.weights, **kw)
+
+    def _effective_factors(self, system: System) -> np.ndarray:
+        """Speed multipliers to replay the *current model* under ground truth.
+
+        Ground-truth speed is ``base × perturbation``; the current model
+        already bakes in the monitor's learned factor, so the residual the
+        simulator must apply is ``perturbation / learned``.  Once the monitor
+        has converged the residual is 1 — observed matches predicted."""
+        truth = self.scenario.perturbation.speed_factors
+        learned = self.monitor.factors
+        return np.array(
+            [
+                truth.get(n.name, 1.0) / max(learned.get(n.name, 1.0), 1e-9)
+                for n in system.nodes
+            ]
+        )
+
+    # ---- the loop -----------------------------------------------------------
+    def run(self) -> RunResult:
+        sc = self.scenario
+        from repro.core.executor import dispatch  # local: executor → api users
+
+        result = RunResult(scenario=sc.name, backend=sc.backend)
+        system = sc.system
+        rounds = max(1, int(sc.orchestration.max_rounds))
+        for rnd in range(rounds):
+            problem = build_problem(system, sc.workload)
+            rep = self.solve(problem)
+            result.schedules.append(rep.schedule)
+
+            if sc.backend != "simulate":
+                artifacts = dispatch(
+                    problem, rep.schedule, system,
+                    backend=sc.backend, out_dir=self.out_dir,
+                )
+                result.artifacts = list(artifacts)
+                break
+
+            baked = dict(self.monitor.factors)
+            xrep = execute(
+                problem,
+                rep.schedule,
+                speed_factors=self._effective_factors(system),
+                jitter=sc.perturbation.jitter,
+                seed=sc.perturbation.seed,
+            )
+            result.reports.append(xrep)
+            self.monitor.update(system, problem, xrep, baked=baked)
+
+            drift = abs(xrep.slowdown - 1.0)
+            resolve = (
+                drift > sc.orchestration.drift_threshold and rnd + 1 < rounds
+            )
+            result.adaptations.append(
+                AdaptationEvent(
+                    round=rnd,
+                    technique=rep.schedule.technique,
+                    predicted_makespan=float(xrep.predicted_makespan),
+                    observed_makespan=float(xrep.makespan),
+                    slowdown=float(xrep.slowdown),
+                    drift=float(drift),
+                    resolved=resolve,
+                    speed_estimates=dict(self.monitor.factors),
+                )
+            )
+            if not resolve:
+                break
+            # refresh node properties P from the *base* model with the
+            # absolute learned factors (Fig. 4 step 4 → step 1)
+            system = self.monitor.refreshed_system(sc.system)
+        result.speed_estimates = dict(self.monitor.factors)
+        return result
+
+
+def run_scenario(
+    scenario: Scenario,
+    *,
+    registry: SolverRegistry | None = None,
+    out_dir: str | Path = "/tmp/repro_executor",
+) -> RunResult:
+    """One-call entry point: ``Scenario`` in, ``RunResult`` out."""
+    return Orchestrator(scenario, registry=registry, out_dir=out_dir).run()
+
+
+# -----------------------------------------------------------------------------
+# Legacy free-function surface (re-exported by repro.core.solver as shims)
+# -----------------------------------------------------------------------------
+
+
+def solve_problem(
+    problem: ScheduleProblem,
+    technique: str = "auto",
+    weights: ObjectiveWeights = ObjectiveWeights(),
+    *,
+    milp_task_threshold: int = 25,
+    mh_task_threshold: int = 600,
+    milp_time_limit: float = 30.0,
+    policy: Policy | None = None,
+    registry: SolverRegistry | None = None,
+    **kwargs: Any,
+) -> SolveReport:
+    reg = registry if registry is not None else REGISTRY
+    if policy is not None or technique in ("auto", "policy"):
+        pol = policy if policy is not None else Policy.paper_hybrid(
+            milp_task_threshold, mh_task_threshold, milp_time_limit
+        )
+        return pol.route(problem, weights, registry=reg, **kwargs)
+    return reg.solve(technique, problem, weights, **kwargs)
+
+
+def solve(
+    system: System,
+    workload: Workload,
+    technique: str = "auto",
+    weights: ObjectiveWeights = ObjectiveWeights(),
+    **kwargs: Any,
+) -> SolveReport:
+    problem = build_problem(system, workload)
+    return solve_problem(problem, technique, weights, **kwargs)
+
+
+def solve_problems(
+    problems: Sequence[ScheduleProblem],
+    technique: str = "ga",
+    weights: ObjectiveWeights = ObjectiveWeights(),
+    *,
+    registry: SolverRegistry | None = None,
+    **kwargs: Any,
+) -> list[SolveReport]:
+    """Solve a whole scenario family at once.
+
+    Routed through the registry's batch capability: a technique advertising
+    ``supports_batch`` (the JAX GA and its ``ga_sweep`` fast path) runs the
+    entire family as ONE compiled XLA program — a Table IX scale sweep or
+    Fig. 11 grid no longer recompiles per point.  Others run per-instance."""
+    reg = registry if registry is not None else REGISTRY
+    if technique in reg and reg.capabilities(technique).supports_batch:
+        return reg.solve_batch(technique, list(problems), weights, **kwargs)
+    return [solve_problem(p, technique, weights, registry=reg, **kwargs) for p in problems]
+
+
+def compare_techniques(
+    system: System,
+    workload: Workload,
+    techniques: tuple[str, ...] = ("milp", "heft", "olb", "ga", "pso", "sa", "aco"),
+    weights: ObjectiveWeights = ObjectiveWeights(),
+    *,
+    registry: SolverRegistry | None = None,
+    **kwargs: Any,
+) -> dict[str, Schedule]:
+    """Run several techniques on one problem — the engine behind the
+    Fig. 11 / Table IX benchmarks."""
+    reg = registry if registry is not None else REGISTRY
+    problem = build_problem(system, workload)
+    out: dict[str, Schedule] = {}
+    for t in techniques:
+        try:
+            out[t] = solve_problem(problem, t, weights, registry=reg, **kwargs).schedule
+        except MilpSizeError:
+            out[t] = Schedule(
+                assignment=np.zeros(problem.num_tasks, dtype=np.int64),
+                start=np.zeros(problem.num_tasks),
+                finish=np.zeros(problem.num_tasks),
+                makespan=float("nan"),
+                usage=float("nan"),
+                objective=float("nan"),
+                violations=-1,
+                technique=t,
+                status="skipped(size)",
+            )
+    return out

@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.configs.shapes import SHAPES
 from repro.core import autoshard
-from repro.core.solver import SolveReport, solve_problem
+from repro.core.api import Scenario, SolveReport, solve_problem
 from repro.core.system_model import System, tpu_fleet
 from repro.core.workload_model import (
     ScheduleProblem,
@@ -132,6 +132,30 @@ def schedule_jobs(
     problem = build_problem(system, workload)
     report = solve_problem(problem, technique, weights, **kwargs)
     return report, system
+
+
+def jobs_scenario(
+    jobs: tuple[Job, ...] | None = None,
+    *,
+    num_pods: int = 2,
+    slices_per_pod: int = 4,
+    technique: str = "auto",
+    weights: ObjectiveWeights = ObjectiveWeights(),
+    name: str = "tpu-jobmix",
+) -> Scenario:
+    """The job mix as a declarative :class:`~repro.core.api.Scenario` —
+    runnable via ``Orchestrator``/``run_scenario`` or saved to one JSON file
+    for ``python -m repro run``."""
+    jobs = jobs or default_job_mix()
+    system = tpu_fleet(num_pods=num_pods, slices_per_pod=slices_per_pod)
+    workload = jobs_to_workload(jobs, system)
+    return Scenario(
+        name=name,
+        system=system,
+        workload=workload,
+        weights=weights,
+        technique=technique,
+    )
 
 
 # -----------------------------------------------------------------------------

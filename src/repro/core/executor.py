@@ -15,6 +15,7 @@ paper's DECICE executor consumes) while remaining runnable offline.
 from __future__ import annotations
 
 import json
+import re
 from pathlib import Path
 
 from repro.core.evaluator import Schedule
@@ -44,30 +45,58 @@ def dispatch(
 
 
 def _render_slurm(problem, schedule, system, out: Path) -> list[Path]:
+    """One ``.sbatch`` per task plus a ``submit_all.sh`` driver.
+
+    ``#SBATCH --dependency`` lines cannot reference other jobs by name before
+    those jobs exist, so dependencies are wired at submit time: the driver
+    submits in topological order (the problem's task order), captures each
+    real job id via ``sbatch --parsable`` into a ``JOB_<name>`` variable, and
+    passes ``--dependency=afterok:<ids>`` on the command line."""
     node_names = [n.name for n in system.nodes]
-    order = sorted(range(problem.num_tasks), key=lambda j: schedule.start[j])
-    job_ids = {}  # task index -> placeholder job name
     paths = []
-    for j in order:
-        name = problem.task_names[j].replace("/", "_")
-        deps = [int(p) for p in problem.pred_matrix[j] if p >= 0]
-        dep_line = ""
-        if deps:
-            tokens = ":".join(f"$JOB_{problem.task_names[p].replace('/', '_')}" for p in deps)
-            dep_line = f"#SBATCH --dependency=afterok:{tokens}\n"
+    submit = [
+        "#!/bin/bash",
+        "# submit the schedule in dependency (topological) order, capturing",
+        "# real sbatch job ids so --dependency chains reference them",
+        "set -euo pipefail",
+        'DIR="$(cd "$(dirname "$0")" && pwd)"',
+    ]
+    # task names become bash variable names and filenames: restrict to
+    # [A-Za-z0-9_] and uniquify collisions ('a/b' vs 'a_b')
+    safe_names: dict[int, str] = {}
+    used: set[str] = set()
+    for j in range(problem.num_tasks):
+        s = re.sub(r"[^A-Za-z0-9_]", "_", problem.task_names[j])
+        if s in used:
+            s = f"{s}_{j}"
+        used.add(s)
+        safe_names[j] = s
+    # problem task indices are already topologically ordered (build_problem),
+    # so every JOB_<dep> variable is defined before it is referenced
+    for j in range(problem.num_tasks):
+        name = safe_names[j]
         script = (
             "#!/bin/bash\n"
             f"#SBATCH --job-name={name}\n"
             f"#SBATCH --nodelist={node_names[int(schedule.assignment[j])]}\n"
             f"#SBATCH --cpus-per-task={int(problem.cores[j])}\n"
-            f"{dep_line}"
             f"# planned window: [{schedule.start[j]:.2f}, {schedule.finish[j]:.2f}] s\n"
             "srun run_task.sh\n"
         )
         p = out / f"{name}.sbatch"
         p.write_text(script)
         paths.append(p)
-        job_ids[j] = name
+        deps = [int(pp) for pp in problem.pred_matrix[j] if pp >= 0]
+        dep_flag = ""
+        if deps:
+            ids = ":".join("${JOB_%s}" % safe_names[pp] for pp in deps)
+            dep_flag = f" --dependency=afterok:{ids}"
+        submit.append(f'JOB_{name}=$(sbatch --parsable{dep_flag} "$DIR/{name}.sbatch")')
+    submit.append(f'echo "submitted {problem.num_tasks} jobs"')
+    driver = out / "submit_all.sh"
+    driver.write_text("\n".join(submit) + "\n")
+    driver.chmod(0o755)
+    paths.append(driver)
     return paths
 
 

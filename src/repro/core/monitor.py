@@ -24,10 +24,26 @@ class MonitorState:
     smoothing: float = 0.5
     factors: dict[str, float] = dataclasses.field(default_factory=dict)
 
-    def update(self, system: System, problem: ScheduleProblem, report: ExecutionReport) -> None:
+    def update(
+        self,
+        system: System,
+        problem: ScheduleProblem,
+        report: ExecutionReport,
+        *,
+        baked: dict[str, float] | None = None,
+    ) -> None:
+        """Fold one execution's observed speeds into the estimates.
+
+        ``observed_speed_factors`` are *relative to the model that produced*
+        ``problem``; when that model already carried learned factors (a
+        refreshed system inside the orchestrator loop), pass them as
+        ``baked`` so the update composes to an absolute multiplier over the
+        base system rather than drifting relatively."""
         observed = report.observed_speed_factors(problem)
         for i, f in observed.items():
             name = system.nodes[i].name
+            if baked:
+                f *= baked.get(name, 1.0)
             prev = self.factors.get(name, 1.0)
             self.factors[name] = (1 - self.smoothing) * prev + self.smoothing * f
 

@@ -43,8 +43,12 @@ class ExecutionReport:
         """Per-node observed speed multiplier (1.0 = as modeled)."""
         num = {}
         den = {}
+        # one name→index map instead of list.index per log: the orchestrator
+        # calls this every feedback round, and at 5000 tasks the repeated
+        # linear scans were O(T²)
+        index = {name: j for j, name in enumerate(problem.task_names)}
         for log in self.logs:
-            j = problem.task_names.index(log.task)
+            j = index[log.task]
             pred = problem.durations[j, log.node]
             obs = log.finish - log.start
             if obs > 0 and pred > 0:

@@ -117,12 +117,22 @@ def parse_rules(text: str) -> Workflow:
     return Workflow(name="snakefile", tasks=tuple(tasks))
 
 
-def load_config(path: str | Path) -> tuple[System | None, Workload | None]:
-    """Load a combined JSON config file holding Fig. 7 ``nodes`` and/or
-    Fig. 8 workflow sections (Snakemake ``configfile:`` style)."""
-    obj = json.loads(Path(path).read_text())
+def load_config(source: str | Path | Mapping[str, Any]) -> tuple[System | None, Workload | None]:
+    """Load a combined JSON config holding Fig. 7 ``nodes`` and/or Fig. 8
+    workflow sections (Snakemake ``configfile:`` style).
+
+    Accepts a path or an already-parsed mapping — scenario files
+    (:func:`repro.core.api.scenario_from_json`) route their system/workload
+    sections through this same parser; their ``"scenario"`` header is ignored
+    here."""
+    obj = source if isinstance(source, Mapping) else json.loads(Path(source).read_text())
     system = system_from_json(obj) if "nodes" in obj else None
-    wf_obj = {k: v for k, v in obj.items() if k != "nodes" and isinstance(v, dict) and "tasks" in v}
+    wf_obj = {
+        k: v
+        for k, v in obj.items()
+        if k not in ("nodes", "dtr_matrix", "scenario")
+        and isinstance(v, Mapping) and "tasks" in v
+    }
     workload = workload_from_json(wf_obj) if wf_obj else None
     return system, workload
 

@@ -1,161 +1,50 @@
-"""Unified solver API over every technique of the paper's Table VII.
+"""Deprecated shim — the solver surface moved to :mod:`repro.core.api`.
 
-``solve(system, workload, technique=...)`` builds the dense
-:class:`ScheduleProblem` and dispatches; ``technique="auto"`` implements the
-paper's recommended hybrid (conclusion §VII): exact MILP under a size/time
-threshold, meta-heuristic in the mid range, heuristic at scale — "balancing
-optimality and computational efficiency".
+The old free-function entry points (``solve``, ``solve_problem``,
+``solve_problems``, ``compare_techniques``) and :class:`SolveReport` remain
+importable from here, but they are the *same objects* as the scenario-first
+API in ``repro.core.api``; new code should import from there (or use
+:class:`repro.core.api.Scenario` + :class:`repro.core.api.Orchestrator` for
+the full Fig. 4 loop).
+
+The hard-coded ``_DISPATCH`` dict is gone: techniques live in
+``repro.core.api.REGISTRY`` (a :class:`~repro.core.api.SolverRegistry`), and
+the ``technique="auto"`` hybrid is the data-driven
+``repro.core.api.Policy.paper_hybrid()`` rule chain.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Any, Callable
+import warnings
 
-import numpy as np
+from repro.core import api as _api
 
-from repro.core import heuristics, metaheuristics
-from repro.core.evaluator import ObjectiveWeights, Schedule
-from repro.core.milp import MilpSizeError, solve_milp
-from repro.core.workload_model import ScheduleProblem, Workload, build_problem
-from repro.core.system_model import System
+_SHIMMED = (
+    "SolveReport",
+    "solve",
+    "solve_problem",
+    "solve_problems",
+    "compare_techniques",
+    "ALL_TECHNIQUES",
+)
 
-
-@dataclasses.dataclass
-class SolveReport:
-    schedule: Schedule
-    problem: ScheduleProblem
-    history: np.ndarray | None = None
-    fallbacks: tuple[str, ...] = ()
+__all__ = list(_SHIMMED)
 
 
-def _run_heuristic(name: str, problem, weights, **kw) -> SolveReport:
-    fn = {"heft": heuristics.heft, "olb": heuristics.olb}[name]
-    return SolveReport(schedule=fn(problem, weights), problem=problem)
+def __getattr__(name: str):
+    if name == "ALL_TECHNIQUES":
+        # live view: plugins registered after import are included
+        return _api.REGISTRY.names()
+    if name in _SHIMMED:
+        warnings.warn(
+            f"repro.core.solver.{name} is deprecated; import it from "
+            "repro.core.api (or use the Scenario/Orchestrator surface)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return getattr(_api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def _run_mh(name: str, problem, weights, **kw) -> SolveReport:
-    res = metaheuristics.TECHNIQUES[name](problem, weights, **kw)
-    return SolveReport(schedule=res.schedule, problem=problem, history=res.history)
-
-
-def _run_milp(name: str, problem, weights, **kw) -> SolveReport:
-    capacity_mode = "static" if name == "milp-static" else "event"
-    sched = solve_milp(problem, weights, capacity_mode=capacity_mode, **kw)
-    return SolveReport(schedule=sched, problem=problem)
-
-
-_DISPATCH: dict[str, Callable[..., SolveReport]] = {
-    "milp": _run_milp,
-    "milp-static": _run_milp,
-    "heft": _run_heuristic,
-    "olb": _run_heuristic,
-    "ga": _run_mh,
-    "pso": _run_mh,
-    "sa": _run_mh,
-    "aco": _run_mh,
-}
-
-ALL_TECHNIQUES = tuple(_DISPATCH)
-
-
-def solve_problem(
-    problem: ScheduleProblem,
-    technique: str = "auto",
-    weights: ObjectiveWeights = ObjectiveWeights(),
-    *,
-    milp_task_threshold: int = 25,
-    mh_task_threshold: int = 600,
-    milp_time_limit: float = 30.0,
-    **kwargs: Any,
-) -> SolveReport:
-    if technique != "auto":
-        if technique not in _DISPATCH:
-            raise KeyError(f"unknown technique {technique!r}; options {sorted(_DISPATCH)}")
-        return _DISPATCH[technique](technique, problem, weights, **kwargs)
-
-    # paper-style hybrid: exact when small, approximate when large
-    fallbacks: list[str] = []
-    if problem.num_tasks <= milp_task_threshold:
-        try:
-            rep = _run_milp("milp", problem, weights, time_limit=milp_time_limit)
-            if rep.schedule.status.startswith(("optimal", "feasible")):
-                return rep
-            fallbacks.append(f"milp:{rep.schedule.status}")
-        except (MilpSizeError, ValueError) as e:  # pragma: no cover - defensive
-            fallbacks.append(f"milp:{e}")
-    if problem.num_tasks <= mh_task_threshold:
-        rep = _run_mh("ga", problem, weights, **kwargs)
-        if rep.schedule.violations == 0:
-            rep.fallbacks = tuple(fallbacks)
-            return rep
-        fallbacks.append("ga:violations")
-    rep = _run_heuristic("heft", problem, weights)
-    rep.fallbacks = tuple(fallbacks)
-    return rep
-
-
-def solve(
-    system: System,
-    workload: Workload,
-    technique: str = "auto",
-    weights: ObjectiveWeights = ObjectiveWeights(),
-    **kwargs: Any,
-) -> SolveReport:
-    problem = build_problem(system, workload)
-    return solve_problem(problem, technique, weights, **kwargs)
-
-
-def solve_problems(
-    problems: list[ScheduleProblem],
-    technique: str = "ga",
-    weights: ObjectiveWeights = ObjectiveWeights(),
-    **kwargs: Any,
-) -> list[SolveReport]:
-    """Solve a whole scenario family at once.
-
-    For the JAX metaheuristic GA this dispatches to the *batched* sweep
-    (``metaheuristics.ga_sweep``): every instance is padded into a common
-    shape bucket and the full generation loop runs as ONE compiled XLA
-    program — a Table IX scale sweep or Fig. 11 grid no longer recompiles
-    per point.  Other techniques run per-instance."""
-    # the sweep evaluates through the shared jnp fitness core; a 'pallas'
-    # backend request (or any other per-instance-only kwarg) runs unbatched
-    sweep_kwargs = {k: v for k, v in kwargs.items() if k != "backend"}
-    if technique == "ga" and len(problems) > 1 and kwargs.get("backend", "jnp") == "jnp":
-        results = metaheuristics.ga_sweep(problems, weights, **sweep_kwargs)
-        return [
-            SolveReport(schedule=r.schedule, problem=p, history=r.history)
-            for r, p in zip(results, problems)
-        ]
-    return [solve_problem(p, technique, weights, **kwargs) for p in problems]
-
-
-def compare_techniques(
-    system: System,
-    workload: Workload,
-    techniques: tuple[str, ...] = ("milp", "heft", "olb", "ga", "pso", "sa", "aco"),
-    weights: ObjectiveWeights = ObjectiveWeights(),
-    **kwargs: Any,
-) -> dict[str, Schedule]:
-    """Run several techniques on one problem — the engine behind the
-    Fig. 11 / Table IX benchmarks."""
-    problem = build_problem(system, workload)
-    out: dict[str, Schedule] = {}
-    for t in techniques:
-        try:
-            out[t] = solve_problem(problem, t, weights, **kwargs).schedule
-        except MilpSizeError:
-            out[t] = Schedule(
-                assignment=np.zeros(problem.num_tasks, dtype=np.int64),
-                start=np.zeros(problem.num_tasks),
-                finish=np.zeros(problem.num_tasks),
-                makespan=float("nan"),
-                usage=float("nan"),
-                objective=float("nan"),
-                violations=-1,
-                technique=t,
-                status="skipped(size)",
-            )
-    return out
+def __dir__():
+    return sorted(set(globals()) | set(_SHIMMED))

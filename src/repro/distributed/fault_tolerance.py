@@ -106,7 +106,7 @@ def replacement_schedule(jobs: list[dict], surviving_pods: int):
     (arch × shape) cells that were running on the lost pod."""
     import numpy as np
 
-    from repro.core.solver import solve
+    from repro.core.api import solve
     from repro.core.system_model import tpu_fleet
     from repro.core.workload_model import Task, Workflow, Workload
 

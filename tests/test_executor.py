@@ -3,8 +3,8 @@
 import json
 
 from repro.core import build_problem, mri_system, mri_workload
+from repro.core.api import solve_problem
 from repro.core.executor import dispatch
-from repro.core.solver import solve_problem
 
 
 def _solved():
@@ -23,13 +23,65 @@ def test_simulate_backend_default():
 def test_slurm_rendering(tmp_path):
     system, problem, schedule = _solved()
     paths = dispatch(problem, schedule, system, backend="slurm", out_dir=tmp_path)
-    assert len(paths) == problem.num_tasks
+    assert len(paths) == problem.num_tasks + 1  # per-task scripts + driver
     t2 = next(p for p in paths if "T2" in p.name and "W1" in p.name)
     text = t2.read_text()
-    assert "--dependency=afterok" in text  # T2 depends on T1
     assert "--cpus-per-task=12" in text
     node = [n.name for n in system.nodes][int(schedule.assignment[problem.task_names.index("W1/T2")])]
     assert f"--nodelist={node}" in text
+
+
+def test_slurm_driver_captures_real_job_ids(tmp_path):
+    """Dependencies are wired at submit time: the driver captures real job
+    ids via ``sbatch --parsable`` and every ``JOB_<name>`` variable is
+    defined before it is referenced (topological submit order)."""
+    system, problem, schedule = _solved()
+    paths = dispatch(problem, schedule, system, backend="slurm", out_dir=tmp_path)
+    driver = paths[-1]
+    assert driver.name == "submit_all.sh"
+    text = driver.read_text()
+    # W1/T2 depends on W1/T1 — the dependency references the captured id
+    assert "JOB_W1_T2=$(sbatch --parsable --dependency=afterok:${JOB_W1_T1}" in text
+    # no per-script #SBATCH dependency lines with undefined placeholders
+    for p in paths[:-1]:
+        assert "--dependency" not in p.read_text()
+    # every referenced JOB_ variable is defined on an earlier line
+    defined = set()
+    for line in text.splitlines():
+        if line.startswith("JOB_"):
+            name = line.split("=", 1)[0]
+            import re
+
+            for ref in re.findall(r"\$\{(JOB_[A-Za-z0-9_]+)\}", line):
+                assert ref in defined, f"{ref} referenced before definition"
+            defined.add(name)
+    assert len(defined) == problem.num_tasks
+
+
+def test_slurm_names_sanitized_to_bash_identifiers(tmp_path):
+    """Task names with characters outside [A-Za-z0-9_] must still yield
+    valid JOB_ variable assignments, and near-colliding names stay unique."""
+    from repro.core import Task, Workflow, Workload, mri_system
+
+    wl = Workload((Workflow("w-1.x", (
+        Task("pre-proc.v2", features=frozenset({"F1"})),
+        Task("pre_proc_v2", features=frozenset({"F1"})),
+        Task("fit", features=frozenset({"F1"}), deps=("pre-proc.v2",)),
+    )),))
+    system = mri_system()
+    problem = build_problem(system, wl)
+    schedule = solve_problem(problem, "heft").schedule
+    paths = dispatch(problem, schedule, system, backend="slurm", out_dir=tmp_path)
+    text = paths[-1].read_text()
+    import re
+
+    assigned = [line.split("=", 1)[0] for line in text.splitlines()
+                if line.startswith("JOB_")]
+    assert len(assigned) == len(set(assigned)) == problem.num_tasks
+    for var in assigned:
+        assert re.fullmatch(r"JOB_[A-Za-z0-9_]+", var), var
+    referenced = set(re.findall(r"\$\{(JOB_[A-Za-z0-9_]+)\}", text))
+    assert referenced <= set(assigned)
 
 
 def test_k8s_rendering(tmp_path):

@@ -1,0 +1,397 @@
+"""Scenario-first API: solver registry + plugins, policy routing, Scenario
+JSON round-trip, orchestrator closed-loop adaptation, deprecation shims,
+and the ``python -m repro`` CLI."""
+
+import json
+import subprocess
+import sys
+import warnings
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import build_problem, mri_system, mri_workload, synthetic_system, synthetic_workload
+from repro.core import api
+from repro.core.api import (
+    REGISTRY,
+    ObjectiveWeights,
+    OrchestrationConfig,
+    Orchestrator,
+    Perturbation,
+    Policy,
+    PolicyRule,
+    Scenario,
+    SolveReport,
+    SolverRegistry,
+    register_solver,
+    run_scenario,
+    scenario_from_json,
+    solve_problem,
+    solve_problems,
+)
+from repro.core.evaluator import evaluate_assignment
+
+
+def _mri_problem():
+    return build_problem(mri_system(), mri_workload())
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_builtins_and_capabilities():
+    names = REGISTRY.names()
+    for t in ("milp", "milp-static", "heft", "olb", "ga", "pso", "sa", "aco"):
+        assert t in names
+    assert REGISTRY.capabilities("milp").exact
+    assert REGISTRY.capabilities("milp").needs_time_limit
+    assert REGISTRY.capabilities("milp").max_tasks == 60
+    assert REGISTRY.capabilities("ga").supports_batch
+    assert not REGISTRY.capabilities("heft").exact
+
+
+def test_unknown_technique_message_lists_options():
+    with pytest.raises(KeyError, match="unknown technique"):
+        REGISTRY.get("quantum")
+
+
+def test_out_of_tree_plugin_routable_by_technique_and_policy():
+    """A solver registered from test code (no core edits) must be routable
+    both by ``technique=`` and by a policy rule chain."""
+
+    @register_solver("all-on-n2", exact=False)
+    def _all_on_n2(problem, weights=ObjectiveWeights(), **kw) -> SolveReport:
+        assignment = np.full(problem.num_tasks, 1, dtype=np.int64)
+        sched = evaluate_assignment(problem, assignment, weights, technique="all-on-n2")
+        return SolveReport(schedule=sched, problem=problem)
+
+    try:
+        prob = _mri_problem()
+        # direct technique= routing
+        rep = solve_problem(prob, "all-on-n2")
+        assert rep.schedule.technique == "all-on-n2"
+        assert (rep.schedule.assignment == 1).all()
+        # policy routing
+        policy = Policy(rules=(PolicyRule("all-on-n2", max_tasks=100),), final="heft")
+        rep2 = solve_problem(prob, "policy", policy=policy)
+        assert rep2.schedule.technique == "all-on-n2"
+        # and through the registry's own route
+        rep3 = policy.route(prob)
+        assert rep3.schedule.technique == "all-on-n2"
+    finally:
+        REGISTRY.unregister("all-on-n2")
+    assert "all-on-n2" not in REGISTRY
+
+
+def test_plugin_registry_isolation():
+    """A private registry does not leak into the default one."""
+    mine = SolverRegistry()
+
+    @register_solver("mine-only", registry=mine)
+    def _fn(problem, weights=ObjectiveWeights(), **kw):
+        return SolveReport(schedule=None, problem=problem)
+
+    assert "mine-only" in mine
+    assert "mine-only" not in REGISTRY
+    with pytest.raises(ValueError, match="already registered"):
+        mine.register("mine-only", _fn)
+
+
+def test_policy_size_gates_and_fallback_chain():
+    """The paper_hybrid policy reproduces §VII: MILP small, GA mid, HEFT
+    large — and capability max_tasks gates MILP out of oversized problems."""
+    hybrid = Policy.paper_hybrid()
+    small = _mri_problem()
+    rep = hybrid.route(small)
+    assert rep.schedule.technique.startswith("milp")
+
+    mid = build_problem(synthetic_system(4, seed=0), synthetic_workload(40, seed=0))
+    rep = hybrid.route(mid, generations=4, pop_size=16)
+    assert rep.schedule.technique == "ga"
+
+    big = build_problem(synthetic_system(8, seed=1), synthetic_workload(700, seed=1))
+    rep = hybrid.route(big)
+    assert rep.schedule.technique == "heft"
+
+
+def test_policy_scoped_options_target_one_technique():
+    """``milp={"time_limit": ...}`` tunes the MILP rule without leaking an
+    unknown kwarg into GA/HEFT, and flat kwargs still reach opted-in rules."""
+    hybrid = Policy.paper_hybrid()
+    small = _mri_problem()
+    rep = hybrid.route(small, milp={"time_limit": 60.0})
+    assert rep.schedule.technique.startswith("milp")
+
+    # mid-size: MILP is size-gated out; the scoped milp dict must NOT crash
+    # the GA rule, while flat GA knobs still apply
+    mid = build_problem(synthetic_system(4, seed=0), synthetic_workload(40, seed=0))
+    rep = hybrid.route(mid, milp={"time_limit": 60.0}, generations=4, pop_size=16)
+    assert rep.schedule.technique == "ga"
+
+
+def test_orchestrator_scoped_solver_options():
+    s = Scenario(
+        name="scoped", system=mri_system(), workload=mri_workload(),
+        technique="auto",
+        solver_options={"milp": {"time_limit": 10.0}},
+    )
+    r = run_scenario(s)
+    assert r.final_schedule.technique.startswith("milp")
+    # direct-technique path drops other techniques' scoped dicts cleanly
+    s2 = s.replace(technique="heft")
+    r2 = run_scenario(s2)
+    assert r2.final_schedule.technique == "heft"
+
+
+def test_policy_json_roundtrip():
+    pol = Policy.paper_hybrid(milp_task_threshold=10, mh_task_threshold=99)
+    obj = pol.to_json()
+    assert Policy.from_json(obj).to_json() == obj
+    assert Policy.from_json(obj) == pol
+
+
+# ---------------------------------------------------------------------------
+# batch routing (ga_sweep fast path reachable from the new API)
+# ---------------------------------------------------------------------------
+
+def test_solve_problems_batch_via_registry():
+    problems = [
+        build_problem(synthetic_system(3, seed=s), synthetic_workload(12, seed=s))
+        for s in (0, 1, 2)
+    ]
+    reports = solve_problems(problems, "ga", generations=4, pop_size=16, seed=0)
+    assert len(reports) == 3
+    for rep, prob in zip(reports, problems):
+        assert rep.problem is prob
+        assert rep.schedule.violations == 0
+        assert rep.history is not None  # the sweep returns per-instance history
+
+
+def test_solve_problems_pallas_backend_declines_batch():
+    """A per-instance-only kwarg (backend='pallas') must fall back to the
+    unbatched path without crashing the sweep."""
+    problems = [
+        build_problem(synthetic_system(3, seed=s), synthetic_workload(8, seed=s))
+        for s in (0, 1)
+    ]
+    entry = REGISTRY.get("ga")
+    assert entry.batch_fn(problems, backend="pallas") is None
+
+
+# ---------------------------------------------------------------------------
+# Scenario JSON round-trip
+# ---------------------------------------------------------------------------
+
+def _scenario() -> Scenario:
+    return Scenario(
+        name="mri-loop",
+        system=mri_system(),
+        workload=mri_workload(),
+        weights=ObjectiveWeights(alpha=2.0, beta=1.0, usage_mode="weighted"),
+        technique="policy",
+        policy=Policy.paper_hybrid(milp_task_threshold=10),
+        backend="simulate",
+        perturbation=Perturbation(speed_factors={"N2": 0.5}, jitter=0.0, seed=7),
+        orchestration=OrchestrationConfig(max_rounds=4, drift_threshold=0.05,
+                                          smoothing=1.0),
+        solver_options={"time_limit": 5.0},
+    )
+
+
+def test_scenario_json_roundtrip_bit_exact(tmp_path):
+    s = _scenario()
+    obj = s.to_json()
+    s2 = scenario_from_json(obj)
+    assert s2.to_json() == obj  # bit-exact
+    # and through a file + load_scenario
+    p = s.save(tmp_path / "scenario.json")
+    s3 = api.load_scenario(p)
+    assert s3.to_json() == obj
+    assert s3.name == "mri-loop"
+    assert s3.policy == s.policy
+    assert s3.perturbation == s.perturbation
+    assert s3.weights == s.weights
+
+
+def test_scenario_file_is_a_valid_snakemake_config(tmp_path):
+    """One file specifies the end-to-end run AND still parses through the
+    plain Fig. 7/8 config loader."""
+    from repro.core.snakemake_io import load_config
+
+    p = _scenario().save(tmp_path / "scenario.json")
+    system, workload = load_config(p)
+    assert system.num_nodes == 3
+    assert workload.num_tasks == 7
+
+
+def test_scenario_missing_sections_rejected():
+    with pytest.raises(ValueError, match="missing"):
+        scenario_from_json({"scenario": {"name": "x"}})
+
+
+def test_scenario_reserved_workflow_name_rejected():
+    """A workflow named like a scenario-file section would silently clobber
+    the header on serialization — reject it loudly instead."""
+    from repro.core.workload_model import Task, Workflow, Workload
+
+    wl = Workload((Workflow("scenario", (Task("T1"),)),))
+    s = Scenario(name="bad", system=mri_system(), workload=wl)
+    with pytest.raises(ValueError, match="reserved"):
+        s.to_json()
+
+
+def test_all_techniques_is_live_view():
+    """Plugins registered after import appear in ALL_TECHNIQUES (package,
+    api module, and deprecated shim all agree)."""
+    import repro.core as core
+
+    @register_solver("late-plugin")
+    def _fn(problem, weights=ObjectiveWeights(), **kw):
+        return SolveReport(schedule=None, problem=problem)
+
+    try:
+        assert "late-plugin" in core.ALL_TECHNIQUES
+        assert "late-plugin" in api.ALL_TECHNIQUES
+    finally:
+        REGISTRY.unregister("late-plugin")
+    assert "late-plugin" not in core.ALL_TECHNIQUES
+
+
+def test_policy_does_not_swallow_approximate_solver_errors():
+    """Only exact solvers get the defensive ValueError net; a crash inside
+    an approximate technique must propagate, not fall back silently."""
+
+    @register_solver("broken-mh")
+    def _broken(problem, weights=ObjectiveWeights(), **kw):
+        raise ValueError("real bug")
+
+    try:
+        pol = Policy(rules=(PolicyRule("broken-mh"),), final="heft")
+        with pytest.raises(ValueError, match="real bug"):
+            pol.route(_mri_problem())
+    finally:
+        REGISTRY.unregister("broken-mh")
+
+
+# ---------------------------------------------------------------------------
+# orchestrator closed loop
+# ---------------------------------------------------------------------------
+
+def test_orchestrator_converges_without_perturbation():
+    s = Scenario(name="calm", system=mri_system(), workload=mri_workload(),
+                 technique="heft")
+    r = run_scenario(s)
+    assert len(r.reports) == 1
+    assert not r.adapted
+    assert r.reports[0].slowdown == pytest.approx(1.0)
+
+
+def test_orchestrator_adapts_to_slow_node():
+    """Acceptance: under a ≥2× speed perturbation on one node, the re-solve
+    triggered by monitor feedback improves observed makespan vs. the
+    unadapted schedule."""
+    s = Scenario(
+        name="n2-degraded",
+        system=mri_system(),
+        workload=mri_workload(),
+        technique="heft",
+        perturbation=Perturbation(speed_factors={"N2": 0.4}),  # 2.5× slower
+        orchestration=OrchestrationConfig(max_rounds=3, drift_threshold=0.1,
+                                          smoothing=1.0),
+    )
+    r = run_scenario(s)
+    assert len(r.reports) >= 2
+    assert r.adapted
+    # the monitor learned N2's true speed ...
+    assert r.speed_estimates["N2"] == pytest.approx(0.4, rel=1e-6)
+    # ... and the re-solved schedule beats the unadapted one where it counts
+    assert r.reports[-1].makespan < r.reports[0].makespan
+    # converged: the refreshed model predicts observed reality
+    assert r.reports[-1].slowdown == pytest.approx(1.0, abs=1e-6)
+    assert r.adaptations[0].resolved and not r.adaptations[-1].resolved
+
+
+def test_orchestrator_render_backend_single_round(tmp_path):
+    s = Scenario(name="render", system=mri_system(), workload=mri_workload(),
+                 technique="heft", backend="slurm")
+    r = Orchestrator(s, out_dir=tmp_path).run()
+    assert len(r.schedules) == 1
+    assert not r.reports
+    assert any(p.name == "submit_all.sh" for p in r.artifacts)
+    assert (tmp_path / "submit_all.sh").exists()
+    assert "artifacts" in r.summary()
+
+
+def test_run_result_summary_is_json_serializable():
+    s = _scenario()
+    r = run_scenario(s)
+    text = json.dumps(r.summary())
+    obj = json.loads(text)
+    assert obj["scenario"] == "mri-loop"
+    assert obj["rounds"] == len(r.schedules)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_solver_shims_delegate_to_api():
+    import repro.core.solver as solver
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        assert solver.solve_problem is api.solve_problem
+        assert solver.solve is api.solve
+        assert solver.solve_problems is api.solve_problems
+        assert solver.compare_techniques is api.compare_techniques
+        assert solver.SolveReport is api.SolveReport
+        assert set(solver.ALL_TECHNIQUES) >= {"milp", "heft", "ga"}
+
+
+def test_solver_shim_warns_and_dispatch_is_gone():
+    import repro.core.solver as solver
+
+    with pytest.warns(DeprecationWarning, match="repro.core.api"):
+        solver.solve_problem
+    with pytest.raises(AttributeError):
+        solver._DISPATCH
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_run_scenario(tmp_path):
+    scen_path = Scenario(
+        name="cli-mri", system=mri_system(), workload=mri_workload(),
+        technique="olb",
+    ).save(tmp_path / "scenario.json")
+    out_path = tmp_path / "result.json"
+    env_src = str(Path(__file__).resolve().parents[1] / "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro", "run", str(scen_path),
+         "--technique", "heft", "--out", str(out_path)],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": env_src, "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"},
+    )
+    assert proc.returncode == 0, proc.stderr
+    summary = json.loads(proc.stdout)
+    assert summary["scenario"] == "cli-mri"
+    assert summary["technique"] == "heft"  # CLI override wins
+    assert summary["rounds"] == 1
+    saved = json.loads(out_path.read_text())
+    assert saved == summary
+
+
+def test_cli_lists_techniques(tmp_path):
+    env_src = str(Path(__file__).resolve().parents[1] / "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro", "techniques"],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": env_src, "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"},
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "milp" in proc.stdout and "exact" in proc.stdout
+    assert "ga" in proc.stdout and "batch" in proc.stdout
