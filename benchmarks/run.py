@@ -5,13 +5,18 @@ reader and kernel microbenches.  Prints ``name,us_per_call,derived`` CSV.
     PYTHONPATH=src python -m benchmarks.run --full     # + 5000x5000 scale row
     PYTHONPATH=src python -m benchmarks.run --smoke    # small Table IX sizes
                                                        # → BENCH_table9.json
+    PYTHONPATH=src python -m benchmarks.run --service  # 200-submission trace
+                                                       # → BENCH_service.json
     PYTHONPATH=src python -m benchmarks.run --scenario f.json  # time one
                                                        # orchestrated Scenario
 
-``--smoke`` is the CI mode: it runs only the small Table IX scale points and
-writes a machine-readable ``BENCH_table9.json`` so successive PRs leave a
-perf trajectory behind.  ``--scenario`` times a declarative
-:class:`repro.core.api.Scenario` end to end through the Fig. 4 orchestrator.
+``--smoke`` and ``--service`` are the CI modes: ``--smoke`` runs the small
+Table IX scale points into ``BENCH_table9.json``; ``--service`` replays a
+200-submission mixed-family arrival trace through the event-driven
+scheduling service into ``BENCH_service.json`` (throughput, p50/p95
+turnaround, cache hit rate) — together they leave a per-PR perf trajectory.
+``--scenario`` times a declarative :class:`repro.core.api.Scenario` end to
+end through the Fig. 4 orchestrator.
 """
 
 from __future__ import annotations
@@ -53,6 +58,15 @@ def main() -> None:
         for row in bench_table9_scale.run_smoke():
             print(",".join(str(x) for x in row), flush=True)
         print(f"table9_smoke_suite_total,{(time.perf_counter() - t0) * 1e6:.0f},")
+        return
+    if "--service" in sys.argv:
+        from benchmarks import bench_service
+
+        print("name,us_per_call,derived")
+        t0 = time.perf_counter()
+        for row in bench_service.run():
+            print(",".join(str(x) for x in row), flush=True)
+        print(f"service_suite_total,{(time.perf_counter() - t0) * 1e6:.0f},")
         return
     from benchmarks import (
         bench_autoshard_calibration,

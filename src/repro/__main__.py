@@ -1,15 +1,26 @@
-"""Scenario runner CLI (paper Fig. 4 end-to-end from one JSON file).
+"""Scenario runner + scheduling-service CLI.
 
     PYTHONPATH=src python -m repro run scenario.json [--technique heft]
                                                      [--backend simulate]
                                                      [--out result.json]
                                                      [--out-dir /tmp/exec]
     PYTHONPATH=src python -m repro techniques
+    PYTHONPATH=src python -m repro trace trace.json [-n 200] [--seed 0]
+                                                    [--rate 2.0]
+                                                    [--families mri,stgs]
+                                                    [--node-events]
+    PYTHONPATH=src python -m repro serve trace.json [--out result.json]
+                                                    [--batch-window 0.25]
+                                                    [--max-batch 32]
+                                                    [--records]
 
 ``run`` loads a declarative :class:`repro.core.api.Scenario`, drives the
 :class:`repro.core.api.Orchestrator` closed loop, and prints (optionally
 saves) the :class:`repro.core.api.RunResult` summary JSON.  ``techniques``
-lists the solver registry with capability metadata.
+lists the solver registry with capability metadata.  ``trace`` generates a
+seeded multi-tenant arrival trace (:mod:`repro.service.traces`); ``serve``
+replays one through the event-driven :class:`repro.service.SchedulingService`
+and prints throughput / turnaround / cache metrics.
 """
 
 from __future__ import annotations
@@ -35,7 +46,70 @@ def main(argv: list[str] | None = None) -> int:
 
     sub.add_parser("techniques", help="list registered solver techniques")
 
+    trace_p = sub.add_parser("trace", help="generate a service arrival trace")
+    trace_p.add_argument("out", help="path to write the trace JSON")
+    trace_p.add_argument("-n", "--num-submissions", type=int, default=200)
+    trace_p.add_argument("--seed", type=int, default=0)
+    trace_p.add_argument("--rate", type=float, default=2.0,
+                         help="mean arrivals per virtual second")
+    trace_p.add_argument("--families", default="mri,stgs,random,tpu",
+                         help="comma-separated workflow families")
+    trace_p.add_argument("--node-events", action="store_true",
+                         help="inject mid-trace drift/failure/recovery events")
+
+    serve_p = sub.add_parser("serve", help="run a trace through the "
+                             "event-driven scheduling service")
+    serve_p.add_argument("trace", help="path to a trace JSON file "
+                         "(python -m repro trace)")
+    serve_p.add_argument("--out", help="also write the summary JSON here")
+    serve_p.add_argument("--batch-window", type=float, default=0.25,
+                         help="admission batch window (virtual seconds)")
+    serve_p.add_argument("--max-batch", type=int, default=32)
+    serve_p.add_argument("--jitter", type=float, default=0.0,
+                         help="lognormal per-task duration noise sigma")
+    serve_p.add_argument("--seed", type=int, default=0,
+                         help="service seed (drives --jitter noise; "
+                         "replays are deterministic per seed)")
+    serve_p.add_argument("--records", action="store_true",
+                         help="include per-submission records in the output")
+
     args = parser.parse_args(argv)
+
+    if args.cmd == "trace":
+        from repro.service import generate_trace
+
+        trace = generate_trace(
+            args.num_submissions,
+            seed=args.seed,
+            rate=args.rate,
+            families=tuple(f.strip() for f in args.families.split(",") if f.strip()),
+            node_events=args.node_events,
+        )
+        path = trace.save(args.out)
+        print(f"wrote {len(trace.submissions)} submissions "
+              f"({len(trace.events)} node events) to {path}")
+        return 0
+
+    if args.cmd == "serve":
+        from repro.service import ServiceConfig, serve_trace
+
+        result = serve_trace(
+            args.trace,
+            config=ServiceConfig(
+                batch_window=args.batch_window,
+                max_batch=args.max_batch,
+                jitter=args.jitter,
+                seed=args.seed,
+            ),
+        )
+        payload = result.summary()
+        if args.records:
+            payload["records"] = [r.to_json() for r in result.records]
+        summary = json.dumps(payload, indent=2)
+        print(summary)
+        if args.out:
+            Path(args.out).write_text(summary + "\n")
+        return 0
 
     from repro.core import api
 

@@ -58,6 +58,7 @@ from repro.core.workload_model import (
     ScheduleProblem,
     Workload,
     build_problem,
+    canonical_hash,
     workload_to_json,
 )
 
@@ -564,6 +565,13 @@ class Scenario:
     def replace(self, **changes: Any) -> "Scenario":
         return dataclasses.replace(self, **changes)
 
+    def fingerprint(self) -> str:
+        """Canonical content hash of the scenario (dict-order- and
+        float-repr-invariant; see :func:`repro.core.workload_model.canonical_hash`).
+        Two scenario files that parse to the same spec share a fingerprint —
+        the service's dedup/cache identity for submissions."""
+        return canonical_hash(self.to_json())
+
 
 def scenario_from_json(obj: Mapping[str, Any] | str) -> Scenario:
     """Parse a scenario file/dict (the Fig. 7/8 config plus a ``scenario``
@@ -592,6 +600,54 @@ def scenario_from_json(obj: Mapping[str, Any] | str) -> Scenario:
 
 def load_scenario(path: str | Path) -> Scenario:
     return scenario_from_json(Path(path).read_text())
+
+
+def route_problem(
+    problem: ScheduleProblem,
+    weights: ObjectiveWeights = ObjectiveWeights(),
+    *,
+    technique: str = "auto",
+    policy: Policy | None = None,
+    options: Mapping[str, Any] | None = None,
+    registry: SolverRegistry | None = None,
+) -> SolveReport:
+    """One solve with the full option semantics of a :class:`Scenario`:
+    policy routing for ``"auto"``/``"policy"`` (or an explicit ``policy``),
+    direct registry dispatch otherwise, with technique-scoped option dicts
+    (``{"milp": {"time_limit": ...}}``) unpacked for the matching technique
+    and dropped for the rest.
+
+    This is the Fig. 4 step-2 kernel shared by :class:`Orchestrator` and the
+    event-driven :mod:`repro.service` scheduler — both face the same
+    "scenario says technique X with options O" contract."""
+    reg = registry if registry is not None else REGISTRY
+    opts = dict(options or {})
+    if policy is not None or technique in ("auto", "policy"):
+        pol = policy if policy is not None else Policy.paper_hybrid()
+        return pol.route(problem, weights, registry=reg, **opts)
+    return reg.solve(
+        technique, problem, weights, **technique_kwargs(reg, technique, opts)
+    )
+
+
+def technique_kwargs(
+    registry: SolverRegistry,
+    technique: str,
+    options: Mapping[str, Any] | None,
+) -> dict[str, Any]:
+    """Resolve scenario ``solver_options`` for a *direct* technique call:
+    flat keys pass through, ``{"<technique>": {...}}`` dicts are unpacked for
+    the matching technique and dropped for the rest (same contract as
+    :meth:`Policy.route`)."""
+    opts = dict(options or {})
+    kw = {
+        k: v for k, v in opts.items()
+        if not (k in registry and isinstance(v, Mapping))
+    }
+    scoped = opts.get(technique)
+    if isinstance(scoped, Mapping):
+        kw.update(scoped)
+    return kw
 
 
 # -----------------------------------------------------------------------------
@@ -684,21 +740,14 @@ class Orchestrator:
     # ---- pieces -------------------------------------------------------------
     def solve(self, problem: ScheduleProblem) -> SolveReport:
         sc = self.scenario
-        opts = dict(sc.solver_options)
-        if sc.policy is not None or sc.technique in ("auto", "policy"):
-            policy = sc.policy if sc.policy is not None else Policy.paper_hybrid()
-            return policy.route(problem, sc.weights, registry=self.registry, **opts)
-        # direct technique: apply the same technique-scoping as Policy.route
-        # (flat keys pass through; {"<technique>": {...}} dicts are unpacked
-        # for the matching technique and dropped for others)
-        kw = {
-            k: v for k, v in opts.items()
-            if not (k in self.registry and isinstance(v, Mapping))
-        }
-        scoped = opts.get(sc.technique)
-        if isinstance(scoped, Mapping):
-            kw.update(scoped)
-        return self.registry.solve(sc.technique, problem, sc.weights, **kw)
+        return route_problem(
+            problem,
+            sc.weights,
+            technique=sc.technique,
+            policy=sc.policy,
+            options=sc.solver_options,
+            registry=self.registry,
+        )
 
     def _effective_factors(self, system: System) -> np.ndarray:
         """Speed multipliers to replay the *current model* under ground truth.

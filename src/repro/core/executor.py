@@ -69,6 +69,8 @@ def _render_slurm(problem, schedule, system, out: Path) -> list[Path]:
         s = re.sub(r"[^A-Za-z0-9_]", "_", problem.task_names[j])
         if s in used:
             s = f"{s}_{j}"
+        while s in used:  # the indexed fallback may itself be a raw name
+            s += "_x"
         used.add(s)
         safe_names[j] = s
     # problem task indices are already topologically ordered (build_problem),
@@ -101,10 +103,31 @@ def _render_slurm(problem, schedule, system, out: Path) -> list[Path]:
 
 
 def _render_k8s(problem, schedule, system, out: Path) -> list[Path]:
+    """One Job manifest per task plus an ``apply_all.sh`` wave driver.
+
+    The ``repro/wait-for`` annotation documents dependencies but nothing in
+    stock Kubernetes *enforces* it — Jobs all start at apply time.  The
+    driver makes the dependency contract real (k8s parity with the SLURM
+    ``submit_all.sh``): manifests are applied in topological *waves* (tasks
+    whose predecessors all live in earlier waves), and each wave is gated on
+    ``kubectl wait --for=condition=complete`` of the previous one."""
     node_names = [n.name for n in system.nodes]
     paths = []
+    # DNS-1123 job names: lowercase alphanumerics and '-', ≤63 chars (base
+    # truncated to leave suffix room), uniquified
+    safe_names: dict[int, str] = {}
+    used: set[str] = set()
     for j in range(problem.num_tasks):
-        name = problem.task_names[j].replace("/", "-").lower()
+        s = re.sub(r"[^a-z0-9-]", "-", problem.task_names[j].lower())
+        s = s[:52].strip("-") or "task"
+        if s in used:
+            s = f"{s}-{j}"
+        while s in used:  # the indexed fallback may itself be a raw name
+            s += "-x"
+        used.add(s)
+        safe_names[j] = s
+    for j in range(problem.num_tasks):
+        name = safe_names[j]
         manifest = {
             "apiVersion": "batch/v1",
             "kind": "Job",
@@ -129,11 +152,44 @@ def _render_k8s(problem, schedule, system, out: Path) -> list[Path]:
                 }
             },
         }
-        deps = [problem.task_names[int(p)].replace("/", "-").lower()
-                for p in problem.pred_matrix[j] if p >= 0]
+        deps = [safe_names[int(p)] for p in problem.pred_matrix[j] if p >= 0]
         if deps:
             manifest["metadata"]["annotations"] = {"repro/wait-for": ",".join(deps)}
         p = out / f"{name}.json"
         p.write_text(json.dumps(manifest, indent=2))
         paths.append(p)
+
+    # topological waves: wave(j) = 1 + max(wave(pred)); problem task order is
+    # already topological (build_problem), so one forward pass suffices
+    wave = [0] * problem.num_tasks
+    for j in range(problem.num_tasks):
+        preds = [int(p) for p in problem.pred_matrix[j] if p >= 0]
+        if preds:
+            wave[j] = 1 + max(wave[p] for p in preds)
+    waves: dict[int, list[int]] = {}
+    for j, w in enumerate(wave):
+        waves.setdefault(w, []).append(j)
+
+    driver = [
+        "#!/bin/bash",
+        "# apply the schedule in dependency (topological) waves; each wave",
+        "# starts only after the previous wave's Jobs completed",
+        "set -euo pipefail",
+        'DIR="$(cd "$(dirname "$0")" && pwd)"',
+        'TIMEOUT="${REPRO_WAIT_TIMEOUT:-3600s}"',
+    ]
+    for w in sorted(waves):
+        members = waves[w]
+        driver.append(f"# wave {w}: {len(members)} job(s)")
+        apply_args = " ".join(f'-f "$DIR/{safe_names[j]}.json"' for j in members)
+        driver.append(f"kubectl apply {apply_args}")
+        wait_args = " ".join(f"job/{safe_names[j]}" for j in members)
+        driver.append(
+            f'kubectl wait --for=condition=complete --timeout="$TIMEOUT" {wait_args}'
+        )
+    driver.append(f'echo "completed {problem.num_tasks} jobs in {len(waves)} waves"')
+    drv = out / "apply_all.sh"
+    drv.write_text("\n".join(driver) + "\n")
+    drv.chmod(0o755)
+    paths.append(drv)
     return paths

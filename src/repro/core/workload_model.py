@@ -15,8 +15,10 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 import json
 import math
+import struct
 from typing import Any, Mapping, Sequence
 
 import numpy as np
@@ -281,6 +283,115 @@ def build_problem(system: System, workload: Workload) -> ScheduleProblem:
         task_names=name_of,
         workflow_of=np.asarray(wf_of, dtype=np.int32),
         workflow_names=[w.name for w in workload.workflows],
+    )
+
+
+# -----------------------------------------------------------------------------
+# Canonical content hashing
+# -----------------------------------------------------------------------------
+#
+# The scheduling service caches solves by *content*: two submissions whose
+# problems are semantically identical must produce the same key even when the
+# JSON they came from differs in dict ordering or number spelling ("1" vs
+# "1.0" vs "1.00").  The hash is therefore defined over a canonical traversal:
+# mappings by sorted key, all numbers through one float64 encoding, arrays by
+# normalized dtype + shape + bytes.
+
+
+def _float64_exact(i: int) -> bool:
+    """Does ``i`` survive an int → float64 → int round trip?  Such ints hash
+    through the float encoding (spelling-invariant with their float equal);
+    others take a decimal-string path (no float spelling exists for them)."""
+    try:
+        return int(float(i)) == i
+    except OverflowError:
+        return False
+
+
+def _hash_into(h: "hashlib._Hash", obj: Any) -> None:
+    if obj is None:
+        h.update(b"z")
+    elif isinstance(obj, (bool, np.bool_)):
+        h.update(b"b1" if obj else b"b0")
+    elif isinstance(obj, (int, np.integer)) and not _float64_exact(int(obj)):
+        data = str(int(obj)).encode()
+        h.update(b"I" + len(data).to_bytes(8, "big") + data)
+    elif isinstance(obj, (int, float, np.integer, np.floating)):
+        v = float(obj)
+        if v != v:
+            h.update(b"n#nan")  # one canonical NaN (payload/sign-invariant)
+        else:
+            if v == 0.0:
+                v = 0.0  # fold -0.0 into +0.0
+            h.update(b"n" + struct.pack(">d", v))
+    elif isinstance(obj, str):
+        data = obj.encode()
+        h.update(b"s" + len(data).to_bytes(8, "big") + data)
+    elif isinstance(obj, bytes):
+        h.update(b"y" + len(obj).to_bytes(8, "big") + obj)
+    elif isinstance(obj, np.ndarray):
+        if obj.dtype == bool:
+            tag, arr = b"aB", np.ascontiguousarray(obj, dtype=np.uint8)
+        elif np.issubdtype(obj.dtype, np.integer):
+            tag, arr = b"aI", np.ascontiguousarray(obj, dtype=np.int64)
+        else:
+            tag, arr = b"aF", np.ascontiguousarray(obj, dtype=np.float64)
+        h.update(tag + str(obj.shape).encode() + arr.tobytes())
+    elif isinstance(obj, Mapping):
+        h.update(b"{")
+        for k in sorted(obj, key=str):
+            _hash_into(h, str(k))
+            _hash_into(h, obj[k])
+        h.update(b"}")
+    elif isinstance(obj, (set, frozenset)):
+        h.update(b"<")
+        for k in sorted(obj, key=str):
+            _hash_into(h, k)
+        h.update(b">")
+    elif isinstance(obj, Sequence):
+        h.update(b"[")
+        for v in obj:
+            _hash_into(h, v)
+        h.update(b"]")
+    else:
+        raise TypeError(f"canonical_hash: unhashable type {type(obj).__name__}")
+
+
+def canonical_hash(obj: Any) -> str:
+    """Stable content hash of a JSON-like structure (dicts, sequences,
+    numbers, strings, numpy arrays).
+
+    Invariant under dict key ordering, int/float spelling of the same value,
+    tuple vs. list, and a ``json.dumps``/``loads`` round trip — the
+    properties a cache key needs so that resubmitting the same scenario file
+    (however it was serialized) hits the cache."""
+    h = hashlib.sha256()
+    _hash_into(h, obj)
+    return h.hexdigest()
+
+
+def problem_fingerprint(problem: "ScheduleProblem") -> str:
+    """Canonical content hash of the dense solver-facing problem.
+
+    Covers everything a technique can observe — durations (hence node speeds,
+    including monitor-refreshed ones), feasibility (hence node failures),
+    DTR, dependencies, releases, names — so any semantic change to the
+    problem changes the key and any byte-identical rebuild reuses it."""
+    return canonical_hash(
+        {
+            "node_cores": problem.node_cores,
+            "dtr": problem.dtr,
+            "durations": problem.durations,
+            "cores": problem.cores,
+            "data": problem.data,
+            "feasible": problem.feasible,
+            "release": problem.release,
+            "pred_matrix": problem.pred_matrix,
+            "edges": problem.edges,
+            "task_names": problem.task_names,
+            "workflow_of": problem.workflow_of,
+            "workflow_names": problem.workflow_names,
+        }
     )
 
 

@@ -1,0 +1,72 @@
+"""Event-driven, multi-tenant scheduling service over one shared continuum.
+
+The ROADMAP north star ("serve heavy traffic from millions of users") as a
+subsystem: a deterministic simulated-clock service that admits a *stream* of
+tenant workflow submissions, batches compatible solves, caches by content,
+executes on the digital twin with node contention, and folds monitoring
+feedback back into the model — the paper's Fig. 4 loop running continuously
+instead of once.
+
+Quickstart::
+
+    from repro.service import ServiceConfig, generate_trace, serve_trace
+
+    trace = generate_trace(200, seed=0, node_events=True)
+    result = serve_trace(trace, config=ServiceConfig(batch_window=0.25))
+    print(result.summary())
+
+or from the CLI::
+
+    python -m repro trace /tmp/trace.json -n 200 --seed 0
+    python -m repro serve /tmp/trace.json
+"""
+
+from repro.service.admission import AdmissionBatcher, AdmissionStats, PreparedSubmission
+from repro.service.cache import CacheStats, SolveCache, solve_cache_key
+from repro.service.events import Event, EventLoop
+from repro.service.service import (
+    SchedulingService,
+    ServiceConfig,
+    ServiceResult,
+    SubmissionRecord,
+    serve_trace,
+)
+from repro.service.state import ContinuumState, NodeStatus
+from repro.service.traces import (
+    FAMILIES,
+    NodeEvent,
+    Submission,
+    Trace,
+    arrival_times,
+    continuum_system,
+    generate_trace,
+    load_trace,
+    trace_from_json,
+)
+
+__all__ = [
+    "FAMILIES",
+    "AdmissionBatcher",
+    "AdmissionStats",
+    "CacheStats",
+    "ContinuumState",
+    "Event",
+    "EventLoop",
+    "NodeEvent",
+    "NodeStatus",
+    "PreparedSubmission",
+    "SchedulingService",
+    "ServiceConfig",
+    "ServiceResult",
+    "SolveCache",
+    "Submission",
+    "SubmissionRecord",
+    "Trace",
+    "arrival_times",
+    "continuum_system",
+    "generate_trace",
+    "load_trace",
+    "serve_trace",
+    "solve_cache_key",
+    "trace_from_json",
+]

@@ -1,0 +1,199 @@
+"""Admission batching: amortize solver work across concurrent tenants.
+
+The batcher is the service's step 2 (optimization), run once per admission
+window over everything queued.  Per submission it does the cheapest thing
+that yields a valid schedule:
+
+1. **cache** — a content-identical solve was done before: zero solver work
+   (:mod:`repro.service.cache`);
+2. **batched solve** — cache misses whose ``(technique, shape bucket,
+   weights, options)`` coincide and whose technique advertises a batch fast
+   path (registry ``supports_batch`` — the PR 1 ``ga_sweep``) are solved as
+   ONE compiled XLA program via :meth:`SolverRegistry.solve_batch`; padded
+   shape buckets (:func:`repro.core.evaluator.bucket_of`) make "coincide"
+   common, not lucky — every 11- and 12-task STGS submission lands in the
+   same bucket;
+3. **single solve** — everything else routes through
+   :func:`repro.core.api.route_problem` (policy or direct), exactly like a
+   one-shot Orchestrator run would.
+
+Solved schedules go back into the cache keyed by content, so the *next*
+window starts from step 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core.api import (
+    SolverRegistry,
+    route_problem,
+    technique_kwargs,
+)
+from repro.core.evaluator import Schedule, bucket_of
+from repro.core.milp import MilpSizeError
+from repro.core.workload_model import ScheduleProblem, canonical_hash
+from repro.service.cache import SolveCache
+from repro.service.traces import Submission
+
+
+@dataclasses.dataclass
+class PreparedSubmission:
+    """A queued submission bound to the continuum model it will solve
+    against (problem built from the *current* effective system)."""
+
+    submission: Submission
+    problem: ScheduleProblem
+    key: str  # solve-cache content key
+    baked: dict[str, float]  # monitor factors baked into ``problem``
+    schedule: Schedule | None = None
+    cache_hit: bool = False
+    batched: bool = False
+    error: str | None = None
+
+
+@dataclasses.dataclass
+class AdmissionStats:
+    solver_calls: int = 0  # problems that actually reached a solver
+    batched_groups: int = 0  # solve_batch invocations covering > 1 problem
+    batched_submissions: int = 0  # problems covered by those invocations
+
+    def merge(self, other: "AdmissionStats") -> None:
+        self.solver_calls += other.solver_calls
+        self.batched_groups += other.batched_groups
+        self.batched_submissions += other.batched_submissions
+
+
+class AdmissionBatcher:
+    def __init__(self, registry: SolverRegistry, cache: SolveCache) -> None:
+        self.registry = registry
+        self.cache = cache
+
+    def _group_key(self, prep: PreparedSubmission) -> tuple[Any, ...] | None:
+        """Batch-compatibility key, or None when the submission can only be
+        solved singly (policy routing, unknown technique, no batch path)."""
+        sub = prep.submission
+        if sub.technique in ("auto", "policy") or sub.technique not in self.registry:
+            return None
+        if self.registry.get(sub.technique).batch_fn is None:
+            return None
+        return (
+            sub.technique,
+            bucket_of(prep.problem),
+            canonical_hash(
+                {
+                    "alpha": sub.weights.alpha,
+                    "beta": sub.weights.beta,
+                    "usage_mode": sub.weights.usage_mode,
+                    "options": dict(sub.solver_options),
+                }
+            ),
+        )
+
+    def admit(self, prepared: list[PreparedSubmission]) -> AdmissionStats:
+        """Fill each ``PreparedSubmission.schedule`` in place; returns stats.
+
+        Deterministic: cache lookups, grouping, and solves all follow the
+        input (arrival) order."""
+        stats = AdmissionStats()
+
+        # 1. cache — one lookup per distinct content key; duplicates inside
+        # this window coalesce onto the first occurrence and resolve after
+        # the solves (a burst of identical submissions solves once)
+        first_of: dict[str, PreparedSubmission] = {}
+        twins: dict[str, list[PreparedSubmission]] = {}
+        misses: list[PreparedSubmission] = []
+        for prep in prepared:
+            if prep.key in first_of:
+                twins.setdefault(prep.key, []).append(prep)
+                continue
+            first_of[prep.key] = prep
+            cached = self.cache.get(prep.key)
+            if cached is not None:
+                prep.schedule = cached
+                prep.cache_hit = True
+            else:
+                misses.append(prep)
+
+        # 2. group compatible misses for the registry's batch fast path
+        groups: dict[tuple[Any, ...], list[PreparedSubmission]] = {}
+        singles: list[PreparedSubmission] = []
+        for prep in misses:
+            key = self._group_key(prep)
+            if key is None:
+                singles.append(prep)
+            else:
+                groups.setdefault(key, []).append(prep)
+
+        for members in groups.values():
+            if len(members) == 1:
+                singles.append(members[0])
+                continue
+            first = members[0].submission
+            kw = technique_kwargs(
+                self.registry, first.technique, first.solver_options
+            )
+            batch_fn = self.registry.get(first.technique).batch_fn
+            assert batch_fn is not None  # _group_key guarantees it
+            try:
+                # call the batch fn directly (not solve_batch) so a runtime
+                # decline (None — e.g. a per-instance-only backend option)
+                # is visible and routes to singles instead of being counted
+                # as a batch that never happened
+                reports = batch_fn(
+                    [m.problem for m in members], first.weights, **kw
+                )
+            except (MilpSizeError, ValueError, KeyError, TypeError):
+                # a bad member must not take the whole group down with it —
+                # retry one by one so only the culprit is rejected
+                singles.extend(members)
+                continue
+            if reports is None:
+                singles.extend(members)
+                continue
+            stats.solver_calls += len(members)
+            stats.batched_groups += 1
+            stats.batched_submissions += len(members)
+            for prep, rep in zip(members, reports):
+                prep.schedule = rep.schedule
+                prep.batched = True
+                self.cache.put(prep.key, rep.schedule)
+
+        # 3. per-submission solves (policy routing or no batch path)
+        for prep in singles:
+            sub = prep.submission
+            try:
+                rep = route_problem(
+                    prep.problem,
+                    sub.weights,
+                    technique=sub.technique,
+                    options=sub.solver_options,
+                    registry=self.registry,
+                )
+            except (MilpSizeError, ValueError, KeyError, TypeError) as e:
+                # TypeError covers misspelled solver_options — the techniques
+                # take keyword-only params, so a tenant typo must reject the
+                # one submission, not crash the multi-tenant service
+                prep.error = f"{type(e).__name__}: {e}"
+                continue
+            stats.solver_calls += 1
+            prep.schedule = rep.schedule
+            self.cache.put(prep.key, rep.schedule)
+
+        # 4. resolve coalesced duplicates: share the representative's
+        # outcome; only a *servable* result (what put() would have cached —
+        # a valid schedule) counts as a hit, else the twin is a miss that is
+        # about to be rejected alongside its representative
+        for key, dup in twins.items():
+            rep = first_of[key]
+            servable = rep.schedule is not None and rep.schedule.violations == 0
+            for prep in dup:
+                prep.schedule = rep.schedule
+                prep.error = rep.error
+                if servable:
+                    prep.cache_hit = True
+                    self.cache.stats.hits += 1
+                else:
+                    self.cache.stats.misses += 1
+        return stats

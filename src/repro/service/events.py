@@ -1,0 +1,103 @@
+"""Heap-ordered virtual-clock event loop — the service's backbone.
+
+The PR 2 :class:`~repro.core.api.Orchestrator` runs one scenario as a
+while-drift loop; a *service* instead reacts to a stream of timestamped
+events (cylc-style): workflow submissions arrive, admitted batches dispatch,
+tasks finish, nodes drift or fail.  Everything the service does is a handler
+for one of these kinds, driven off a deterministic simulated clock:
+
+* events are totally ordered by ``(time, seq)`` — ``seq`` is the push order,
+  so simultaneous events replay identically run over run;
+* the loop never consults wall time or global RNG state: given the same
+  trace and seed, the event *log* (every processed event, in order) is
+  bit-identical, which the tests assert.
+
+Event kinds (the ``kind`` field):
+
+==================  ========================================================
+``submission``      a tenant's workflow entered the admission queue
+``admit``           the admission batcher drains the queue (batch window end)
+``dispatch``        a solved submission started executing on the continuum
+``task-finished``   one task of an in-flight submission completed
+``completion``      the last task of a submission completed (monitor feeds
+                    observed speeds back into the model here)
+``node-drift``      ground-truth speed of a node changed (trace-injected)
+``node-failure``    a node dropped out of the continuum (trace-injected)
+``node-recovery``   a failed node came back (trace-injected)
+``rejected``        a submission could not be scheduled (infeasible)
+==================  ========================================================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Iterator
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One timestamped occurrence; ``payload`` is JSON-serializable."""
+
+    time: float
+    seq: int
+    kind: str
+    payload: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> dict[str, Any]:
+        out: dict[str, Any] = {"time": float(self.time), "seq": self.seq,
+                               "kind": self.kind}
+        out.update(self.payload)
+        return out
+
+
+class EventLoop:
+    """Priority queue of :class:`Event` on a monotonic virtual clock.
+
+    ``push`` schedules (past timestamps clamp to *now* — an event can never
+    be processed before the event that created it), ``pop`` advances the
+    clock.  ``record`` appends to the replayable log; handlers log the events
+    they process plus any synchronous occurrences (e.g. ``dispatch``) so the
+    log is a complete, ordered account of the run."""
+
+    def __init__(self) -> None:
+        self._heap: list[tuple[float, int, Event]] = []
+        self._seq = 0
+        self.now = 0.0
+        self.log: list[dict[str, Any]] = []
+
+    def push(self, time: float, kind: str, **payload: Any) -> Event:
+        t = max(float(time), self.now)
+        ev = Event(time=t, seq=self._seq, kind=kind, payload=payload)
+        self._seq += 1
+        heapq.heappush(self._heap, (t, ev.seq, ev))
+        return ev
+
+    def pop(self) -> Event | None:
+        if not self._heap:
+            return None
+        t, _, ev = heapq.heappop(self._heap)
+        self.now = t
+        return ev
+
+    def record(self, event: Event) -> None:
+        self.log.append(event.to_json())
+
+    def emit(self, kind: str, **payload: Any) -> None:
+        """Log a synchronous occurrence at the current clock (no scheduling)."""
+        ev = Event(time=self.now, seq=self._seq, kind=kind, payload=payload)
+        self._seq += 1
+        self.record(ev)
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def drain(self) -> Iterator[Event]:
+        """Iterate events in clock order until the heap is empty."""
+        while self._heap:
+            ev = self.pop()
+            assert ev is not None
+            yield ev

@@ -1,0 +1,420 @@
+"""The event-driven, multi-tenant scheduling service.
+
+This is the continuous counterpart of the PR 2
+:class:`~repro.core.api.Orchestrator`: instead of one scenario per process,
+a :class:`SchedulingService` multiplexes a *stream* of tenant submissions
+over one shared continuum :class:`~repro.core.system_model.System`, driven
+by the virtual-clock event loop of :mod:`repro.service.events`:
+
+* ``submission`` events queue work; an ``admit`` event fires one batch
+  window later and drains the queue through the
+  :class:`~repro.service.admission.AdmissionBatcher` (cache → batched solve
+  → single solve);
+* dispatched work executes on the digital twin
+  (:func:`repro.core.simulator.execute`) under the continuum's *true* node
+  speeds, shifted by the node-occupancy frontier
+  (:class:`~repro.service.state.ContinuumState`) so tenants contend for
+  nodes instead of simulating in parallel universes;
+* each ``completion`` folds observed speeds back into the model (Fig. 4
+  step 4 → 1), so later admissions — including queued resubmissions of the
+  same workflow — solve against reality.  Because cache keys are content
+  hashes of the *refreshed* problem, this feedback invalidates exactly the
+  cached solves it should, and no others;
+* ``node-drift`` / ``node-failure`` / ``node-recovery`` events mutate the
+  continuum mid-run; future admissions route around them.
+
+Everything is deterministic: same trace + seed ⇒ bit-identical event log
+and per-submission makespans (asserted in tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+import zlib
+from pathlib import Path
+from typing import Any
+
+import numpy as np
+
+from repro.core.api import REGISTRY, SolverRegistry
+from repro.core.simulator import ExecutionReport, execute
+from repro.core.system_model import System
+from repro.core.workload_model import Workload, build_problem
+from repro.service.admission import AdmissionBatcher, PreparedSubmission
+from repro.service.cache import SolveCache, solve_cache_key
+from repro.service.events import Event, EventLoop
+from repro.service.state import ContinuumState
+from repro.service.traces import Submission, Trace, load_trace
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Service knobs.  ``batch_window`` is how long (virtual seconds) the
+    admission queue holds a submission hoping for batchable company;
+    ``max_batch`` bounds one admission's size (the rest re-admit
+    immediately after, preserving order)."""
+
+    batch_window: float = 0.25
+    max_batch: int = 32
+    cache_capacity: int = 4096
+    smoothing: float = 1.0
+    jitter: float = 0.0
+    seed: int = 0
+    log_task_events: bool = True
+
+    def __post_init__(self) -> None:
+        if self.max_batch < 1:
+            # 0 would make every admit drain nothing and reschedule itself
+            # at the same virtual instant, forever
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.batch_window < 0:
+            raise ValueError(f"batch_window must be >= 0, got {self.batch_window}")
+        if self.cache_capacity < 1:
+            raise ValueError(
+                f"cache_capacity must be >= 1, got {self.cache_capacity}"
+            )
+        if self.jitter < 0:
+            raise ValueError(f"jitter must be >= 0, got {self.jitter}")
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class SubmissionRecord:
+    """Lifecycle + outcome of one submission (the per-tenant API object)."""
+
+    id: str
+    tenant: str
+    family: str
+    technique: str  # requested
+    arrival: float
+    technique_used: str = ""
+    admitted: float = math.nan
+    dispatched: float = math.nan
+    finished: float = math.nan
+    queue_delay: float = 0.0
+    predicted_makespan: float = math.nan
+    observed_makespan: float = math.nan
+    turnaround: float = math.nan
+    cache_hit: bool = False
+    batched: bool = False
+    status: str = "queued"  # queued | running | completed | rejected
+
+    def to_json(self) -> dict[str, Any]:
+        # NaN marks not-yet/never-happened timestamps internally; serialize
+        # as null so the output is strict JSON (bare NaN tokens are not)
+        return {
+            k: None if isinstance(v, float) and math.isnan(v) else v
+            for k, v in dataclasses.asdict(self).items()
+        }
+
+
+@dataclasses.dataclass
+class ServiceResult:
+    """Everything a run produced: per-submission records, the replayable
+    event log, and aggregate service metrics."""
+
+    trace: str
+    config: ServiceConfig
+    records: list[SubmissionRecord]
+    event_log: list[dict[str, Any]]
+    cache: dict[str, Any]
+    solver_calls: int
+    batched_groups: int
+    batched_submissions: int
+    clock_end: float
+    wall_seconds: float
+    nodes: list[dict[str, Any]]
+
+    def makespans(self) -> dict[str, float | None]:
+        """id → observed makespan (None when rejected/unfinished) — the
+        replay-determinism fingerprint used by the tests.  None, not NaN:
+        two identical runs must compare equal, and NaN != NaN."""
+        return {
+            r.id: None if math.isnan(r.observed_makespan) else r.observed_makespan
+            for r in self.records
+        }
+
+    def summary(self) -> dict[str, Any]:
+        completed = [r for r in self.records if r.status == "completed"]
+        turnaround = np.array([r.turnaround for r in completed], dtype=np.float64)
+        delays = np.array([r.queue_delay for r in completed], dtype=np.float64)
+        out: dict[str, Any] = {
+            "trace": self.trace,
+            "submissions": len(self.records),
+            "completed": len(completed),
+            "rejected": sum(1 for r in self.records if r.status == "rejected"),
+            "clock_end": self.clock_end,
+            "wall_seconds": self.wall_seconds,
+            "throughput_per_wall_s": (
+                len(completed) / self.wall_seconds if self.wall_seconds > 0 else 0.0
+            ),
+            "throughput_per_virtual_s": (
+                len(completed) / self.clock_end if self.clock_end > 0 else 0.0
+            ),
+            "cache": dict(self.cache),
+            "solver_calls": self.solver_calls,
+            "batched_groups": self.batched_groups,
+            "batched_submissions": self.batched_submissions,
+            "events": len(self.event_log),
+            "nodes": self.nodes,
+        }
+        if len(turnaround):
+            out["turnaround"] = {
+                "mean": float(turnaround.mean()),
+                "p50": float(np.percentile(turnaround, 50)),
+                "p95": float(np.percentile(turnaround, 95)),
+                "max": float(turnaround.max()),
+            }
+            out["queue_delay_mean"] = float(delays.mean())
+        return out
+
+
+@dataclasses.dataclass
+class _InFlight:
+    prepared: PreparedSubmission
+    report: ExecutionReport
+    t0: float
+
+
+class SchedulingService:
+    """One live service instance over one shared continuum."""
+
+    def __init__(
+        self,
+        system: System,
+        config: ServiceConfig = ServiceConfig(),
+        *,
+        registry: SolverRegistry | None = None,
+    ) -> None:
+        self.system = system
+        self.config = config
+        self.registry = registry if registry is not None else REGISTRY
+        self.state = ContinuumState(system, smoothing=config.smoothing)
+        self.cache = SolveCache(config.cache_capacity)
+        self.batcher = AdmissionBatcher(self.registry, self.cache)
+        self.loop = EventLoop()
+        self.records: dict[str, SubmissionRecord] = {}
+        self.solver_calls = 0
+        self.batched_groups = 0
+        self.batched_submissions = 0
+        self._submissions: dict[str, Submission] = {}
+        self._queue: list[str] = []  # submission ids awaiting admission
+        self._admit_scheduled = False
+        self._inflight: dict[str, _InFlight] = {}
+
+    # ---- event handlers -----------------------------------------------------
+    def _on_submission(self, ev: Event) -> None:
+        self._queue.append(ev.payload["id"])
+        if not self._admit_scheduled:
+            self.loop.push(self.loop.now + self.config.batch_window, "admit")
+            self._admit_scheduled = True
+
+    def _on_admit(self, _ev: Event) -> None:
+        self._admit_scheduled = False
+        if not self._queue:
+            return
+        batch_ids = self._queue[: self.config.max_batch]
+        del self._queue[: self.config.max_batch]
+        if self._queue:
+            # overflow re-admits at the same virtual instant, in order
+            self.loop.push(self.loop.now, "admit")
+            self._admit_scheduled = True
+        self._admit_batch(batch_ids)
+
+    def _on_task_finished(self, ev: Event) -> None:
+        pass  # occupancy was reserved at dispatch; the log entry is the point
+
+    def _on_completion(self, ev: Event) -> None:
+        sid = ev.payload["id"]
+        fl = self._inflight.pop(sid)
+        self.state.observe(fl.prepared.problem, fl.report, fl.prepared.baked)
+        rec = self.records[sid]
+        rec.finished = self.loop.now
+        rec.observed_makespan = float(fl.report.makespan)
+        rec.turnaround = rec.finished - rec.arrival
+        rec.status = "completed"
+
+    def _on_node_drift(self, ev: Event) -> None:
+        self.state.set_drift(ev.payload["node"], ev.payload["factor"])
+
+    def _on_node_failure(self, ev: Event) -> None:
+        self.state.fail(ev.payload["node"])
+
+    def _on_node_recovery(self, ev: Event) -> None:
+        self.state.recover(ev.payload["node"])
+
+    # ---- admission + dispatch -----------------------------------------------
+    def _admit_batch(self, batch_ids: list[str]) -> None:
+        now = self.loop.now
+        prepared: list[PreparedSubmission] = []
+        effective = self.state.effective_system()
+        baked = self.state.baked_factors()
+        for sid in batch_ids:
+            sub = self._submissions[sid]
+            problem = self.state.apply_health(
+                build_problem(effective, Workload((sub.workflow,)))
+            )
+            prepared.append(
+                PreparedSubmission(
+                    submission=sub,
+                    problem=problem,
+                    key=solve_cache_key(
+                        problem, sub.weights, sub.technique, sub.solver_options
+                    ),
+                    baked=baked,
+                )
+            )
+        stats = self.batcher.admit(prepared)
+        self.solver_calls += stats.solver_calls
+        self.batched_groups += stats.batched_groups
+        self.batched_submissions += stats.batched_submissions
+
+        for prep in prepared:
+            rec = self.records[prep.submission.id]
+            rec.admitted = now
+            rec.cache_hit = prep.cache_hit
+            rec.batched = prep.batched
+            sched = prep.schedule
+            if sched is None or sched.violations != 0:
+                rec.status = "rejected"
+                self.loop.emit(
+                    "rejected",
+                    id=prep.submission.id,
+                    reason=prep.error
+                    or f"violations={sched.violations if sched else 'unsolved'}",
+                )
+                continue
+            rec.technique_used = sched.technique
+            self._dispatch(prep)
+
+    def _dispatch(self, prep: PreparedSubmission) -> None:
+        sub = prep.submission
+        sched = prep.schedule
+        assert sched is not None
+        now = self.loop.now
+        delay = self.state.queue_delay(sched.assignment, now)
+        t0 = now + delay
+        # derived, stable per-submission seed — jitter replays identically
+        seed = zlib.crc32(f"{self.config.seed}:{sub.id}".encode()) & 0x7FFFFFFF
+        report = execute(
+            prep.problem,
+            sched,
+            speed_factors=self.state.residual_factors(),
+            jitter=self.config.jitter,
+            seed=seed,
+            strict=False,
+        )
+        self.state.reserve(report, t0)
+        rec = self.records[sub.id]
+        rec.dispatched = t0
+        rec.queue_delay = delay
+        rec.predicted_makespan = float(sched.makespan)
+        rec.status = "running"
+        self.loop.emit(
+            "dispatch",
+            id=sub.id,
+            start=t0,
+            queue_delay=delay,
+            technique=sched.technique,
+            predicted_makespan=float(sched.makespan),
+            cache_hit=prep.cache_hit,
+            batched=prep.batched,
+        )
+        if self.config.log_task_events:
+            for log in report.logs:
+                self.loop.push(
+                    t0 + log.finish,
+                    "task-finished",
+                    id=sub.id,
+                    task=log.task,
+                    node=self.state.node_names[log.node],
+                )
+        self.loop.push(t0 + report.makespan, "completion", id=sub.id)
+        self._inflight[sub.id] = _InFlight(prepared=prep, report=report, t0=t0)
+
+    # ---- the run loop -------------------------------------------------------
+    _HANDLERS = {
+        "submission": _on_submission,
+        "admit": _on_admit,
+        "task-finished": _on_task_finished,
+        "completion": _on_completion,
+        "node-drift": _on_node_drift,
+        "node-failure": _on_node_failure,
+        "node-recovery": _on_node_recovery,
+    }
+
+    def run(self, trace: Trace) -> ServiceResult:
+        wall0 = time.perf_counter()
+        for sub in trace.submissions:
+            if sub.id in self._submissions:
+                # ids key every lifecycle structure; a silent overwrite
+                # surfaces later as a KeyError on the twin's completion
+                raise ValueError(f"duplicate submission id {sub.id!r} in trace")
+            self._submissions[sub.id] = sub
+            self.records[sub.id] = SubmissionRecord(
+                id=sub.id,
+                tenant=sub.tenant,
+                family=sub.family,
+                technique=sub.technique,
+                arrival=sub.time,
+            )
+            self.loop.push(
+                sub.time, "submission",
+                id=sub.id, tenant=sub.tenant, family=sub.family,
+            )
+        known = set(self.state.node_names)
+        for nev in trace.events:
+            if nev.node not in known:
+                # fail fast and loud — deferring this surfaces as a baffling
+                # KeyError at some later admission instead of at the source
+                raise ValueError(
+                    f"trace event {nev.kind!r} at t={nev.time} names unknown "
+                    f"node {nev.node!r}; system has {sorted(known)}"
+                )
+            payload: dict[str, Any] = {"node": nev.node}
+            if nev.factor is not None:
+                payload["factor"] = nev.factor
+            self.loop.push(nev.time, nev.kind, **payload)
+
+        for ev in self.loop.drain():
+            self.loop.record(ev)
+            handler = self._HANDLERS.get(ev.kind)
+            if handler is None:
+                raise ValueError(f"unknown event kind {ev.kind!r}")
+            handler(self, ev)
+
+        return ServiceResult(
+            trace=trace.name,
+            config=self.config,
+            records=[self.records[s.id] for s in trace.submissions],
+            event_log=list(self.loop.log),
+            cache=self.cache.stats.to_json(),
+            solver_calls=self.solver_calls,
+            batched_groups=self.batched_groups,
+            batched_submissions=self.batched_submissions,
+            clock_end=self.loop.now,
+            wall_seconds=time.perf_counter() - wall0,
+            nodes=[s.to_json() for s in self.state.status()],
+        )
+
+
+def serve_trace(
+    trace: Trace | str | Path,
+    *,
+    system: System | None = None,
+    config: ServiceConfig = ServiceConfig(),
+    registry: SolverRegistry | None = None,
+) -> ServiceResult:
+    """One-call entry point: trace (or path) in, :class:`ServiceResult` out.
+
+    ``system`` overrides the trace's embedded continuum when given."""
+    if not isinstance(trace, Trace):
+        trace = load_trace(trace)
+    if system is not None:
+        trace = dataclasses.replace(trace, system=system)
+    service = SchedulingService(trace.system, config, registry=registry)
+    return service.run(trace)

@@ -1,0 +1,154 @@
+"""Live continuum state — what the service knows about the shared system.
+
+One :class:`ContinuumState` is the single source of truth behind every
+solve the service performs:
+
+* **learned speeds** — a :class:`repro.core.monitor.MonitorState` folds each
+  completed submission's observed per-node speeds into the model (Fig. 4
+  step 4 → 1), so the *next* problem is built from the refreshed system;
+* **ground truth** — per-node true speed multipliers, mutated by trace
+  ``node-drift`` events; executions run at ``truth / learned`` residual
+  factors exactly like the PR 2 orchestrator, so once the monitor converges
+  observed matches predicted;
+* **health** — ``node-failure`` / ``node-recovery`` events flip nodes out
+  of / into the feasibility mask of future problems (failed nodes are never
+  removed — indices stay stable for the monitor and the cache);
+* **reserved windows** — per-node occupancy frontiers from dispatched work.
+  A new submission landing on a busy node waits for the frontier (one
+  deterministic queueing delay per dispatch), which is what turns 200 near
+  simultaneous tenants into a meaningful p95 turnaround instead of 200
+  independent simulations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core.monitor import MonitorState
+from repro.core.simulator import ExecutionReport
+from repro.core.system_model import System
+from repro.core.workload_model import ScheduleProblem
+
+
+@dataclasses.dataclass
+class NodeStatus:
+    """Snapshot of one node for metrics/logs."""
+
+    name: str
+    up: bool
+    true_factor: float
+    learned_factor: float
+    frontier: float
+    busy_seconds: float
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+class ContinuumState:
+    def __init__(self, system: System, *, smoothing: float = 1.0) -> None:
+        self.base_system = system
+        self.monitor = MonitorState(smoothing=smoothing)
+        self.node_names = [n.name for n in system.nodes]
+        self._index = {name: i for i, name in enumerate(self.node_names)}
+        self.true_factors = {name: 1.0 for name in self.node_names}
+        self.up = {name: True for name in self.node_names}
+        self.frontier = {name: 0.0 for name in self.node_names}
+        self.busy_seconds = {name: 0.0 for name in self.node_names}
+        self.windows = 0  # reserved windows committed so far
+
+    # ---- model refresh (Fig. 4 step 1) --------------------------------------
+    def effective_system(self) -> System:
+        """The system future solves see: base P scaled by learned factors."""
+        if not self.monitor.factors:
+            return self.base_system
+        return self.monitor.refreshed_system(self.base_system)
+
+    def apply_health(self, problem: ScheduleProblem) -> ScheduleProblem:
+        """Mask failed nodes out of a freshly built problem's feasibility."""
+        down = [self._index[n] for n, ok in self.up.items() if not ok]
+        if down:
+            problem.feasible[:, down] = False
+        return problem
+
+    def residual_factors(self) -> np.ndarray:
+        """Speed multipliers the *executor* applies on top of the current
+        model: ground truth over learned (1.0 once the monitor converged)."""
+        learned = self.monitor.factors
+        return np.array(
+            [
+                self.true_factors[n] / max(learned.get(n, 1.0), 1e-9)
+                for n in self.node_names
+            ]
+        )
+
+    # ---- occupancy ----------------------------------------------------------
+    def queue_delay(self, assignment: np.ndarray, now: float) -> float:
+        """How long a schedule touching ``assignment``'s nodes must wait for
+        the continuum to drain already-reserved work.
+
+        The whole submission shifts by one delay (per-node shifts could break
+        cross-node dependency timing), so the bound is the latest frontier
+        among the nodes it uses."""
+        used = {self.node_names[int(i)] for i in np.unique(assignment)}
+        latest = max((self.frontier[n] for n in used), default=now)
+        return max(0.0, latest - now)
+
+    def reserve(self, report: ExecutionReport, t0: float) -> None:
+        """Commit an execution's observed per-task windows (absolute time
+        ``t0 + log``) into the node frontiers."""
+        for log in report.logs:
+            name = self.node_names[log.node]
+            self.frontier[name] = max(self.frontier[name], t0 + log.finish)
+            self.busy_seconds[name] += log.finish - log.start
+        self.windows += len(report.logs)
+
+    # ---- feedback + trace events --------------------------------------------
+    def baked_factors(self) -> dict[str, float]:
+        """Snapshot of the learned factors — capture this when *building* a
+        problem so the eventual observation composes against the model that
+        actually produced it (other tenants may update the monitor between
+        dispatch and completion)."""
+        return dict(self.monitor.factors)
+
+    def observe(
+        self,
+        problem: ScheduleProblem,
+        report: ExecutionReport,
+        baked: dict[str, float],
+    ) -> None:
+        """Fold one completed execution's observed speeds into the model."""
+        self.monitor.update(self.base_system, problem, report, baked=baked)
+
+    def _known(self, node: str) -> str:
+        if node not in self.up:
+            raise KeyError(
+                f"unknown node {node!r}; system has {sorted(self.up)}"
+            )
+        return node
+
+    def set_drift(self, node: str, factor: float) -> None:
+        self.true_factors[self._known(node)] = float(factor)
+
+    def fail(self, node: str) -> None:
+        self.up[self._known(node)] = False
+
+    def recover(self, node: str) -> None:
+        self.up[self._known(node)] = True
+
+    # ---- introspection ------------------------------------------------------
+    def status(self) -> list[NodeStatus]:
+        return [
+            NodeStatus(
+                name=n,
+                up=self.up[n],
+                true_factor=self.true_factors[n],
+                learned_factor=self.monitor.factors.get(n, 1.0),
+                frontier=self.frontier[n],
+                busy_seconds=self.busy_seconds[n],
+            )
+            for n in self.node_names
+        ]

@@ -1,0 +1,329 @@
+"""Seeded arrival traces — the workload stream the service consumes.
+
+A trace is the service-level analogue of a :class:`~repro.core.api.Scenario`:
+one JSON file holding the shared continuum system (Fig. 7 ``nodes`` section,
+unchanged format), a list of timestamped tenant submissions drawn from the
+repo's workflow families, and optional node events (drift / failure /
+recovery) to inject mid-run.
+
+Arrival process: Poisson (exponential gaps at ``rate`` submissions per
+virtual second) with optional bursts — with probability ``burst_prob`` a
+gap's arrival becomes a burst of 2..``burst_size`` simultaneous submissions,
+the pattern that makes the admission batcher earn its keep.
+
+Families (mirroring the paper's test cases):
+
+* ``mri``    — the Table V MRI workflows W1/W2, technique ``auto`` (§VII
+  hybrid: MILP at this size).  Fixed DAGs → the service's cache hot path.
+* ``stgs``   — the three STGS stand-ins (11–12 tasks), technique ``ga``;
+  same-bucket GA submissions admit as one batched solve.
+* ``random`` — random layered DAGs of varying size/seed (mostly cache
+  misses), technique ``heft`` or ``ga``.
+* ``tpu``    — accelerator jobs requiring feature ``F9`` so they only fit
+  the continuum's accel nodes, technique ``heft``.
+
+Everything is generated from one ``numpy`` Generator seeded by ``seed`` —
+the same call is bit-identical run over run (asserted in tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.evaluator import ObjectiveWeights
+from repro.core.system_model import Node, System, make_system, system_from_json, system_to_json
+from repro.core.workload_model import (
+    Workflow,
+    Workload,
+    mri_w1,
+    mri_w2,
+    random_layered_workflow,
+    stgs_workflows,
+    workload_from_json,
+    workload_to_json,
+)
+
+FAMILIES = ("mri", "stgs", "random", "tpu")
+
+#: GA knobs shared by every generated ``ga`` submission — identical options
+#: keep same-bucket submissions groupable by the admission batcher.
+GA_OPTIONS: dict[str, Any] = {"generations": 6, "pop_size": 16, "seed": 0}
+
+
+def continuum_system() -> System:
+    """The default shared continuum: the paper's MRI edge/cloud/HPC triple
+    plus two accelerator nodes (feature ``F9``) for the ``tpu`` family."""
+    nodes = [
+        Node("N1", {"cores": 8, "storage": 500}, frozenset({"F1"}),
+             {"processing_speed": 1.0, "data_transfer_rate": 100.0}),
+        Node("N2", {"cores": 48, "storage": 20000}, frozenset({"F1", "F2"}),
+             {"processing_speed": 1.0, "data_transfer_rate": 100.0}),
+        Node("N3", {"cores": 2572, "storage": 210000}, frozenset({"F1", "F2", "F3"}),
+             {"processing_speed": 1.0, "data_transfer_rate": 100.0}),
+        Node("A1", {"cores": 64, "storage": 1000}, frozenset({"F1", "F2", "F9", "F10"}),
+             {"processing_speed": 4.0, "data_transfer_rate": 100.0}),
+        Node("A2", {"cores": 64, "storage": 1000}, frozenset({"F1", "F2", "F9", "F10"}),
+             {"processing_speed": 4.0, "data_transfer_rate": 100.0}),
+    ]
+    return make_system(nodes)
+
+
+@dataclasses.dataclass(frozen=True)
+class Submission:
+    """One tenant request: a workflow plus how to solve it."""
+
+    id: str
+    tenant: str
+    time: float
+    family: str
+    workflow: Workflow
+    technique: str = "auto"
+    weights: ObjectiveWeights = dataclasses.field(default_factory=ObjectiveWeights)
+    solver_options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> dict[str, Any]:
+        return {
+            "id": self.id,
+            "tenant": self.tenant,
+            "time": float(self.time),
+            "family": self.family,
+            "technique": self.technique,
+            "weights": {
+                "alpha": float(self.weights.alpha),
+                "beta": float(self.weights.beta),
+                "usage_mode": self.weights.usage_mode,
+            },
+            "solver_options": dict(self.solver_options),
+            "workflow": workload_to_json(Workload((self.workflow,))),
+        }
+
+    @classmethod
+    def from_json(cls, obj: Mapping[str, Any]) -> "Submission":
+        w = obj.get("weights", {})
+        workload = workload_from_json(obj["workflow"])
+        if len(workload.workflows) != 1:
+            raise ValueError(
+                f"submission {obj.get('id')!r} must carry exactly one workflow"
+            )
+        return cls(
+            id=obj["id"],
+            tenant=obj.get("tenant", "t0"),
+            time=float(obj.get("time", 0.0)),
+            family=obj.get("family", "custom"),
+            workflow=workload.workflows[0],
+            technique=obj.get("technique", "auto"),
+            weights=ObjectiveWeights(
+                alpha=float(w.get("alpha", 1.0)),
+                beta=float(w.get("beta", 1.0)),
+                usage_mode=w.get("usage_mode", "fixed"),
+            ),
+            solver_options=dict(obj.get("solver_options", {})),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeEvent:
+    """A trace-injected continuum change."""
+
+    time: float
+    kind: str  # "node-drift" | "node-failure" | "node-recovery"
+    node: str
+    factor: float | None = None  # drift only: new true speed multiplier
+
+    def to_json(self) -> dict[str, Any]:
+        out: dict[str, Any] = {"time": float(self.time), "kind": self.kind,
+                               "node": self.node}
+        if self.factor is not None:
+            out["factor"] = float(self.factor)
+        return out
+
+    @classmethod
+    def from_json(cls, obj: Mapping[str, Any]) -> "NodeEvent":
+        return cls(
+            time=float(obj["time"]),
+            kind=obj["kind"],
+            node=obj["node"],
+            factor=float(obj["factor"]) if "factor" in obj else None,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """A full service run input: system + submission stream + node events."""
+
+    name: str
+    system: System
+    submissions: tuple[Submission, ...]
+    events: tuple[NodeEvent, ...] = ()
+    meta: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> dict[str, Any]:
+        out: dict[str, Any] = {
+            "trace": {"name": self.name, "meta": dict(self.meta)},
+            "submissions": [s.to_json() for s in self.submissions],
+            "node_events": [e.to_json() for e in self.events],
+        }
+        out.update(system_to_json(self.system))
+        return out
+
+    def save(self, path: str | Path) -> Path:
+        path = Path(path)
+        path.write_text(json.dumps(self.to_json(), indent=2) + "\n")
+        return path
+
+
+def trace_from_json(obj: Mapping[str, Any] | str) -> Trace:
+    if isinstance(obj, str):
+        obj = json.loads(obj)
+    if "nodes" not in obj:
+        raise ValueError("trace is missing its 'nodes' (system) section")
+    header = obj.get("trace", {})
+    return Trace(
+        name=header.get("name", "trace"),
+        system=system_from_json(obj),
+        submissions=tuple(Submission.from_json(s) for s in obj.get("submissions", ())),
+        events=tuple(NodeEvent.from_json(e) for e in obj.get("node_events", ())),
+        meta=dict(header.get("meta", {})),
+    )
+
+
+def load_trace(path: str | Path) -> Trace:
+    return trace_from_json(Path(path).read_text())
+
+
+# -----------------------------------------------------------------------------
+# Generation
+# -----------------------------------------------------------------------------
+
+
+def arrival_times(
+    n: int,
+    *,
+    rate: float = 2.0,
+    seed: int = 0,
+    burst_prob: float = 0.1,
+    burst_size: int = 8,
+) -> list[float]:
+    """Poisson arrivals with bursts: ``n`` timestamps, non-decreasing."""
+    if rate <= 0:
+        raise ValueError("rate must be > 0")
+    rng = np.random.default_rng(seed)
+    times: list[float] = []
+    t = 0.0
+    while len(times) < n:
+        t += float(rng.exponential(1.0 / rate))
+        k = 1
+        if burst_size > 1 and rng.random() < burst_prob:
+            k = int(rng.integers(2, burst_size + 1))
+        for _ in range(min(k, n - len(times))):
+            times.append(t)
+    return times
+
+
+def _pick_workflow(
+    family: str, rng: np.random.Generator
+) -> tuple[Workflow, str, dict[str, Any]]:
+    """(workflow, technique, solver_options) for one submission.
+
+    Workflow *names* are deterministic per family/shape (never per
+    submission), so identical content re-submitted later fingerprints — and
+    therefore caches — identically."""
+    if family == "mri":
+        wf = mri_w1() if rng.random() < 0.5 else mri_w2()
+        return wf, "auto", {"milp": {"time_limit": 5.0}}
+    if family == "stgs":
+        wf = stgs_workflows()[
+            ("W5_STGS1", "W6_STGS2", "W7_STGS3")[int(rng.integers(0, 3))]
+        ]
+        return wf, "ga", dict(GA_OPTIONS)
+    if family == "random":
+        size = int(rng.choice([6, 8, 10, 12]))
+        wf = random_layered_workflow(
+            size, name=f"Wr{size}", seed=int(rng.integers(0, 2**31)),
+            feature_pool=("F1", "F2"),
+        )
+        technique = "heft" if rng.random() < 0.5 else "ga"
+        return wf, technique, dict(GA_OPTIONS) if technique == "ga" else {}
+    if family == "tpu":
+        size = int(rng.choice([8, 12, 16]))
+        wf = random_layered_workflow(
+            size, name=f"Wt{size}", seed=int(rng.integers(0, 2**31)),
+            feature_pool=("F9",), max_cores=32,
+        )
+        return wf, "heft", {}
+    raise ValueError(f"unknown workflow family {family!r}; options {FAMILIES}")
+
+
+def generate_trace(
+    num_submissions: int = 200,
+    *,
+    seed: int = 0,
+    rate: float = 2.0,
+    burst_prob: float = 0.1,
+    burst_size: int = 8,
+    families: Sequence[str] = FAMILIES,
+    tenants: int = 8,
+    node_events: bool = False,
+    system: System | None = None,
+    name: str = "trace",
+) -> Trace:
+    """Generate a seeded mixed-family arrival trace.
+
+    ``node_events=True`` injects a mid-trace drift (the second node at half
+    speed), a failure of the last node at 60% of the span and its recovery
+    at 80% — the service must keep admitting around them.  Targets are drawn
+    from the *embedded* system (N2 / A2 on the default continuum), so the
+    generated trace is always consumable by ``serve_trace``."""
+    rng = np.random.default_rng(seed)
+    system = system if system is not None else continuum_system()
+    times = arrival_times(
+        num_submissions, rate=rate, seed=seed + 1,
+        burst_prob=burst_prob, burst_size=burst_size,
+    )
+    subs: list[Submission] = []
+    for i, t in enumerate(times):
+        family = str(families[int(rng.integers(0, len(families)))])
+        wf, technique, options = _pick_workflow(family, rng)
+        subs.append(
+            Submission(
+                id=f"s{i:05d}",
+                tenant=f"t{int(rng.integers(0, tenants))}",
+                time=t,
+                family=family,
+                workflow=wf,
+                technique=technique,
+                solver_options=options,
+            )
+        )
+    events: tuple[NodeEvent, ...] = ()
+    if node_events:
+        span = times[-1] if times else 1.0
+        names = [n.name for n in system.nodes]
+        drift_node = names[min(1, len(names) - 1)]
+        fail_node = names[-1]
+        events = (
+            NodeEvent(time=0.3 * span, kind="node-drift", node=drift_node,
+                      factor=0.5),
+            NodeEvent(time=0.6 * span, kind="node-failure", node=fail_node),
+            NodeEvent(time=0.8 * span, kind="node-recovery", node=fail_node),
+        )
+    return Trace(
+        name=name,
+        system=system,
+        submissions=tuple(subs),
+        events=events,
+        meta={
+            "seed": seed,
+            "rate": rate,
+            "burst_prob": burst_prob,
+            "burst_size": burst_size,
+            "families": list(families),
+            "tenants": tenants,
+            "node_events": bool(node_events),
+        },
+    )

@@ -87,10 +87,79 @@ def test_slurm_names_sanitized_to_bash_identifiers(tmp_path):
 def test_k8s_rendering(tmp_path):
     system, problem, schedule = _solved()
     paths = dispatch(problem, schedule, system, backend="kubernetes", out_dir=tmp_path)
-    assert len(paths) == problem.num_tasks
+    assert len(paths) == problem.num_tasks + 1  # per-task manifests + driver
     m = json.loads(paths[0].read_text())
     assert m["kind"] == "Job"
     assert "repro/node" in m["spec"]["template"]["spec"]["nodeSelector"]
     deps = [json.loads(p.read_text()).get("metadata", {}).get("annotations")
-            for p in paths]
+            for p in paths[:-1]]
     assert any(d and "repro/wait-for" in d for d in deps)
+
+
+def test_k8s_driver_applies_in_topological_waves(tmp_path):
+    """The ``repro/wait-for`` annotation is now *enforced*: the driver
+    applies manifests in topological waves and gates each wave on
+    ``kubectl wait --for=condition=complete`` of the previous one."""
+    system, problem, schedule = _solved()
+    paths = dispatch(problem, schedule, system, backend="kubernetes", out_dir=tmp_path)
+    driver = paths[-1]
+    assert driver.name == "apply_all.sh"
+    import re
+
+    text = driver.read_text()
+    # every job is applied exactly once and waited on exactly once
+    applied = re.findall(r'-f "\$DIR/([a-z0-9-]+)\.json"', text)
+    waited = re.findall(r"job/([a-z0-9-]+)", text)
+    assert len(applied) == problem.num_tasks
+    assert sorted(applied) == sorted(waited)
+    # a task is applied only after every dependency has been waited on
+    wait_rank: dict[str, int] = {}
+    apply_rank: dict[str, int] = {}
+    for rank, line in enumerate(text.splitlines()):
+        if line.startswith("kubectl apply"):
+            for name in re.findall(r'-f "\$DIR/([a-z0-9-]+)\.json"', line):
+                apply_rank[name] = rank
+        if line.startswith("kubectl wait"):
+            for name in re.findall(r"job/([a-z0-9-]+)", line):
+                wait_rank[name] = rank
+    for p in paths[:-1]:
+        manifest = json.loads(p.read_text())
+        name = manifest["metadata"]["name"]
+        wait_for = manifest.get("metadata", {}).get("annotations", {}).get(
+            "repro/wait-for", "")
+        for dep in filter(None, wait_for.split(",")):
+            assert wait_rank[dep] < apply_rank[name], (
+                f"{name} applied before its dependency {dep} completed")
+
+
+def test_k8s_names_are_dns1123_and_unique(tmp_path):
+    """Task names with '_' / '.' / case must sanitize to valid DNS-1123 Job
+    names, and near-colliding names stay unique."""
+    from repro.core import Task, Workflow, Workload
+
+    wl = Workload((Workflow("W.x", (
+        Task("Pre_Proc", features=frozenset({"F1"})),
+        Task("pre-proc", features=frozenset({"F1"})),
+        Task("fit", features=frozenset({"F1"}), deps=("Pre_Proc",)),
+        # triple collision: 'a-2' raw, 'a', and 'a.' both sanitize to 'a',
+        # and the indexed fallback of the second 'a' collides with raw 'a-2'
+        Task("a-2", features=frozenset({"F1"})),
+        Task("a", features=frozenset({"F1"})),
+        Task("a.", features=frozenset({"F1"})),
+        # DNS-1123 length: must truncate below 63 chars and stay unique
+        Task("x" * 80, features=frozenset({"F1"})),
+        Task("x" * 81, features=frozenset({"F1"})),
+    )),))
+    system = mri_system()
+    problem = build_problem(system, wl)
+    schedule = solve_problem(problem, "heft").schedule
+    paths = dispatch(problem, schedule, system, backend="kubernetes", out_dir=tmp_path)
+    import re
+
+    names = [json.loads(p.read_text())["metadata"]["name"] for p in paths[:-1]]
+    assert len(names) == len(set(names)) == problem.num_tasks
+    for n in names:
+        assert re.fullmatch(r"[a-z0-9]([a-z0-9-]*[a-z0-9])?", n), n
+        assert len(n) <= 63, n
+    # one manifest file per task — no silent overwrite on collisions
+    assert len({p.name for p in paths[:-1]}) == problem.num_tasks

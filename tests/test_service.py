@@ -1,0 +1,441 @@
+"""Event-driven scheduling service: event-loop ordering, replay determinism,
+the solve-cache hot path (zero solver invocations on repeats), admission
+batching, node drift/failure handling, trace I/O, and the serve CLI."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import Task, Workflow, make_system, Node
+from repro.core.workload_model import mri_w1
+from repro.service import (
+    EventLoop,
+    SchedulingService,
+    ServiceConfig,
+    Submission,
+    Trace,
+    continuum_system,
+    generate_trace,
+    load_trace,
+    trace_from_json,
+)
+from repro.service.traces import NodeEvent
+
+
+# ---------------------------------------------------------------------------
+# event loop
+# ---------------------------------------------------------------------------
+
+def test_event_loop_orders_by_time_then_push_order():
+    loop = EventLoop()
+    loop.push(5.0, "b")
+    loop.push(1.0, "a")
+    loop.push(5.0, "c")  # same time as "b": push order breaks the tie
+    kinds = [ev.kind for ev in loop.drain()]
+    assert kinds == ["a", "b", "c"]
+    assert loop.now == 5.0
+
+
+def test_event_loop_clamps_past_pushes_to_now():
+    loop = EventLoop()
+    loop.push(10.0, "later")
+    assert loop.pop().kind == "later"
+    ev = loop.push(3.0, "too-early")  # in the past: clamps to now
+    assert ev.time == 10.0
+    assert loop.pop().time == 10.0
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+
+def _single_node_system(speed: float = 1.0):
+    return make_system([
+        Node("N1", {"cores": 8}, frozenset({"F1"}),
+             {"processing_speed": speed, "data_transfer_rate": 100.0}),
+    ])
+
+
+def _two_node_system():
+    return make_system([
+        Node("N1", {"cores": 8}, frozenset({"F1"}),
+             {"processing_speed": 1.0, "data_transfer_rate": 100.0}),
+        Node("N2", {"cores": 8}, frozenset({"F1"}),
+             {"processing_speed": 4.0, "data_transfer_rate": 100.0}),
+    ])
+
+
+def _chain(name: str, works) -> Workflow:
+    tasks = [
+        Task(
+            f"T{i}",
+            cores=2,
+            work=float(w),
+            features=frozenset({"F1"}),
+            deps=(f"T{i - 1}",) if i else (),
+        )
+        for i, w in enumerate(works)
+    ]
+    return Workflow(name, tuple(tasks))
+
+
+def _sub(i, wf, t, technique="heft", **kw) -> Submission:
+    return Submission(
+        id=f"s{i:03d}", tenant="t0", time=float(t), family="test",
+        workflow=wf, technique=technique, **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# acceptance: replay determinism
+# ---------------------------------------------------------------------------
+
+def test_replay_same_trace_and_seed_is_bit_identical():
+    """Same trace + seed ⇒ identical event log and per-submission makespans."""
+    trace = generate_trace(
+        14, seed=11, rate=3.0, families=("mri", "tpu"), node_events=True,
+    )
+    results = []
+    for _ in range(2):
+        svc = SchedulingService(trace.system, ServiceConfig(seed=11))
+        results.append(svc.run(trace))
+    a, b = results
+    assert a.event_log == b.event_log
+    assert a.makespans() == b.makespans()
+    assert [r.to_json() for r in a.records] == [r.to_json() for r in b.records]
+
+
+def test_replay_determinism_with_jitter():
+    """Jitter draws from per-submission derived seeds — still replayable."""
+    trace = generate_trace(6, seed=2, families=("tpu",))
+    cfg = ServiceConfig(seed=5, jitter=0.1)
+    a = SchedulingService(trace.system, cfg).run(trace)
+    b = SchedulingService(trace.system, cfg).run(trace)
+    assert a.event_log == b.event_log
+    assert a.makespans() == b.makespans()
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the cache hot path
+# ---------------------------------------------------------------------------
+
+def test_repeat_identical_submission_zero_solver_invocations():
+    subs = tuple(_sub(i, mri_w1(), t=i * 30.0) for i in range(4))
+    trace = Trace(name="rep", system=continuum_system(), submissions=subs)
+    svc = SchedulingService(trace.system, ServiceConfig())
+    r = svc.run(trace)
+    assert [rec.status for rec in r.records] == ["completed"] * 4
+    assert r.solver_calls == 1  # only the first submission reached a solver
+    assert [rec.cache_hit for rec in r.records] == [False, True, True, True]
+    assert r.cache["hits"] == 3 and r.cache["misses"] == 1
+    # all four executed identically (same model, no perturbation)
+    mk = [rec.observed_makespan for rec in r.records]
+    assert mk[0] == pytest.approx(mk[1]) == pytest.approx(mk[3])
+
+
+def test_burst_of_identical_submissions_coalesces_in_one_window():
+    """Duplicates arriving inside one admission window solve once: the first
+    solves, its twins pick the result up at admission."""
+    subs = tuple(_sub(i, mri_w1(), t=0.0) for i in range(5))
+    trace = Trace(name="burst", system=continuum_system(), submissions=subs)
+    r = SchedulingService(trace.system, ServiceConfig(batch_window=1.0)).run(trace)
+    assert r.solver_calls == 1
+    assert sum(rec.cache_hit for rec in r.records) == 4
+    # the summary metric agrees with the per-record flags: 4 submissions
+    # skipped the solver (coalesced twins count as hits, not misses)
+    assert r.cache["hits"] == 4 and r.cache["misses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# admission batching
+# ---------------------------------------------------------------------------
+
+def test_admission_batches_same_bucket_ga_submissions():
+    """Distinct-content, same-shape GA submissions in one window route
+    through the registry batch path as ONE group."""
+    opts = {"generations": 3, "pop_size": 8, "seed": 0}
+    subs = tuple(
+        _sub(i, _chain(f"C{i}", [1.0 + i, 2.0, 3.0 + i, 1.0, 2.0, 1.0]),
+             t=0.0, technique="ga", solver_options=opts)
+        for i in range(3)
+    )
+    trace = Trace(name="batch", system=_two_node_system(), submissions=subs)
+    r = SchedulingService(trace.system, ServiceConfig(batch_window=1.0)).run(trace)
+    assert r.batched_groups == 1
+    assert r.batched_submissions == 3
+    assert all(rec.batched for rec in r.records)
+    assert all(rec.status == "completed" for rec in r.records)
+    assert r.solver_calls == 3  # three problems solved, one compiled program
+
+
+def test_bad_options_in_batch_group_reject_without_killing_the_service():
+    """A solver error inside a *batched* group must degrade exactly like the
+    single-solve path: the group falls back to per-submission solves and only
+    the culprits are rejected — the service run itself survives."""
+    bad = {"generations": 2, "pop_size": 0, "seed": 0}  # zero-size population
+    subs = (
+        _sub(0, _chain("A", [1.0, 2.0]), t=0.0, technique="ga", solver_options=bad),
+        _sub(1, _chain("B", [2.0, 3.0]), t=0.0, technique="ga", solver_options=bad),
+        _sub(2, _chain("C", [1.0, 1.0]), t=0.0, technique="heft"),
+    )
+    trace = Trace(name="badbatch", system=_two_node_system(), submissions=subs)
+    r = SchedulingService(trace.system, ServiceConfig(batch_window=1.0)).run(trace)
+    assert [rec.status for rec in r.records] == ["rejected", "rejected", "completed"]
+
+
+def test_record_json_is_strict_even_for_rejected_submissions():
+    """Rejected records keep NaN timestamps internally but must serialize to
+    strict JSON (null, not bare NaN tokens)."""
+    wf = Workflow("needs-f2", (Task("T0", features=frozenset({"F2"})),))
+    trace = Trace(name="nan", system=_single_node_system(),
+                  submissions=(_sub(0, wf, t=0.0),))
+    r = SchedulingService(trace.system, ServiceConfig()).run(trace)
+    obj = r.records[0].to_json()
+    assert obj["status"] == "rejected"
+    assert obj["finished"] is None and obj["observed_makespan"] is None
+    json.dumps([rec.to_json() for rec in r.records], allow_nan=False)  # no raise
+
+
+def test_typoed_solver_option_rejects_one_tenant_not_the_service():
+    """Misspelled solver_options raise TypeError inside the technique —
+    that must reject the one submission, not abort the multi-tenant run."""
+    subs = (
+        _sub(0, _chain("A", [1.0, 2.0]), t=0.0, technique="ga",
+             solver_options={"popsize": 8}),  # typo for pop_size
+        _sub(1, _chain("B", [2.0, 1.0]), t=0.0, technique="heft"),
+    )
+    trace = Trace(name="typo", system=_two_node_system(), submissions=subs)
+    r = SchedulingService(trace.system, ServiceConfig(batch_window=0.5)).run(trace)
+    assert [rec.status for rec in r.records] == ["rejected", "completed"]
+
+
+def test_declined_batch_is_not_reported_as_batched():
+    """When the technique's batch fn declines at runtime (per-instance-only
+    backend option), submissions fall back to singles and nothing claims a
+    batch happened."""
+    opts = {"generations": 2, "pop_size": 8, "seed": 0, "backend": "pallas"}
+    subs = tuple(
+        _sub(i, _chain(f"D{i}", [1.0 + i, 2.0]), t=0.0, technique="ga",
+             solver_options=opts)
+        for i in range(2)
+    )
+    trace = Trace(name="decline", system=_two_node_system(), submissions=subs)
+    r = SchedulingService(trace.system, ServiceConfig(batch_window=0.5)).run(trace)
+    assert [rec.status for rec in r.records] == ["completed", "completed"]
+    assert r.batched_groups == 0 and r.batched_submissions == 0
+    assert not any(rec.batched for rec in r.records)
+    assert r.solver_calls == 2
+
+
+def test_service_config_rejects_degenerate_knobs():
+    with pytest.raises(ValueError, match="max_batch"):
+        ServiceConfig(max_batch=0)  # would spin the admit loop forever
+    with pytest.raises(ValueError, match="batch_window"):
+        ServiceConfig(batch_window=-1.0)
+    with pytest.raises(ValueError, match="cache_capacity"):
+        ServiceConfig(cache_capacity=0)
+
+
+def test_unknown_node_in_trace_event_fails_fast():
+    trace = Trace(
+        name="badnode",
+        system=_single_node_system(),
+        submissions=(_sub(0, _chain("C", [1.0]), t=1.0),),
+        events=(NodeEvent(time=0.0, kind="node-failure", node="N9"),),
+    )
+    with pytest.raises(ValueError, match="unknown node 'N9'"):
+        SchedulingService(trace.system, ServiceConfig()).run(trace)
+
+
+def test_duplicate_submission_ids_fail_fast():
+    subs = (_sub(0, _chain("A", [1.0]), t=0.0), _sub(0, _chain("B", [2.0]), t=1.0))
+    trace = Trace(name="dupid", system=_single_node_system(), submissions=subs)
+    with pytest.raises(ValueError, match="duplicate submission id"):
+        SchedulingService(trace.system, ServiceConfig()).run(trace)
+
+
+def test_generated_node_events_target_the_embedded_system():
+    """node_events=True must emit events consumable by serve_trace even for
+    a custom system (targets drawn from the embedded nodes)."""
+    system = _two_node_system()
+    trace = generate_trace(
+        6, seed=1, families=("random",), system=system, node_events=True,
+    )
+    assert {e.node for e in trace.events} <= {"N1", "N2"}
+    r = SchedulingService(trace.system, ServiceConfig()).run(trace)  # no raise
+    assert len(r.records) == 6
+
+
+def test_coalesced_twin_of_rejected_solve_is_not_a_cache_hit():
+    """Identical infeasible submissions in one window: the representative's
+    invalid solve is never cached, so its twin must count as a miss (and be
+    rejected), keeping hit_rate consistent with solver work skipped."""
+    wf = Workflow("needs-f2", (Task("T0", features=frozenset({"F2"})),))
+    subs = (_sub(0, wf, t=0.0), _sub(1, wf, t=0.0))
+    trace = Trace(name="twin-rej", system=_single_node_system(), submissions=subs)
+    r = SchedulingService(trace.system, ServiceConfig(batch_window=1.0)).run(trace)
+    assert [rec.status for rec in r.records] == ["rejected", "rejected"]
+    assert not any(rec.cache_hit for rec in r.records)
+    assert r.cache["hits"] == 0 and r.cache["misses"] == 2
+
+
+def test_max_batch_overflow_readmits_in_order():
+    subs = tuple(_sub(i, mri_w1(), t=0.0) for i in range(5))
+    trace = Trace(name="overflow", system=continuum_system(), submissions=subs)
+    r = SchedulingService(
+        trace.system, ServiceConfig(batch_window=0.5, max_batch=2)
+    ).run(trace)
+    assert all(rec.status == "completed" for rec in r.records)
+    admits = [e for e in r.event_log if e["kind"] == "admit"]
+    assert len(admits) >= 3  # 5 submissions / max_batch 2
+
+
+# ---------------------------------------------------------------------------
+# monitor feedback, drift, failures
+# ---------------------------------------------------------------------------
+
+def test_drift_invalides_cache_and_model_converges():
+    """After a node-drift event the next identical submission must MISS the
+    cache (content key changed via the refreshed model) and its prediction
+    must match observation (monitor learned the true speed)."""
+    wf = _chain("C", [2.0, 3.0, 1.0])
+    subs = (_sub(0, wf, t=0.0), _sub(1, wf, t=50.0))
+    trace = Trace(
+        name="drift",
+        system=_single_node_system(),
+        submissions=subs,
+        events=(NodeEvent(time=0.0, kind="node-drift", node="N1", factor=0.5),),
+    )
+    r = SchedulingService(trace.system, ServiceConfig()).run(trace)
+    r0, r1 = r.records
+    # first solve predicted the unperturbed model, observed 2x slower
+    assert r0.observed_makespan == pytest.approx(2.0 * r0.predicted_makespan)
+    # second submission: cache miss (model changed), converged prediction
+    assert not r1.cache_hit
+    assert r.solver_calls == 2
+    assert r1.observed_makespan == pytest.approx(r1.predicted_makespan)
+    assert r1.predicted_makespan == pytest.approx(2.0 * r0.predicted_makespan)
+
+
+def test_node_failure_routes_around_and_recovery_restores():
+    wf = _chain("C", [2.0, 1.0])
+    subs = (_sub(0, wf, t=1.0), _sub(1, wf, t=30.0))
+    trace = Trace(
+        name="fail",
+        system=_two_node_system(),
+        submissions=subs,
+        events=(
+            NodeEvent(time=0.0, kind="node-failure", node="N2"),
+            NodeEvent(time=20.0, kind="node-recovery", node="N2"),
+        ),
+    )
+    r = SchedulingService(trace.system, ServiceConfig()).run(trace)
+    assert [rec.status for rec in r.records] == ["completed", "completed"]
+    nodes_used = {
+        e["id"]: set()
+        for e in r.event_log if e["kind"] == "dispatch"
+    }
+    for e in r.event_log:
+        if e["kind"] == "task-finished":
+            nodes_used[e["id"]].add(e["node"])
+    # while N2 was down, everything ran on N1
+    assert nodes_used["s000"] == {"N1"}
+    # after recovery, the 4x faster N2 is used again
+    assert "N2" in nodes_used["s001"]
+    # the failure also invalidated the cached solve (different feasibility)
+    assert r.solver_calls == 2
+
+
+def test_infeasible_submission_rejected_not_crashing():
+    wf = Workflow("needs-f2", (Task("T0", features=frozenset({"F2"})),))
+    subs = (_sub(0, wf, t=0.0), _sub(1, _chain("ok", [1.0, 2.0]), t=1.0))
+    trace = Trace(name="rej", system=_single_node_system(), submissions=subs)
+    r = SchedulingService(trace.system, ServiceConfig()).run(trace)
+    assert r.records[0].status == "rejected"
+    assert r.records[1].status == "completed"
+    assert any(e["kind"] == "rejected" and e["id"] == "s000"
+               for e in r.event_log)
+    # makespans() maps rejected to None (not NaN), so replays compare equal
+    r2 = SchedulingService(trace.system, ServiceConfig()).run(trace)
+    assert r.makespans()["s000"] is None
+    assert r.makespans() == r2.makespans()
+
+
+def test_contention_delays_overlapping_tenants():
+    """Two simultaneous submissions on a one-node continuum cannot overlap:
+    the second waits for the first's reserved window (queueing delay)."""
+    wf = _chain("C", [4.0, 4.0])
+    subs = (_sub(0, wf, t=0.0), _sub(1, wf, t=0.0))
+    trace = Trace(name="contend", system=_single_node_system(), submissions=subs)
+    r = SchedulingService(trace.system, ServiceConfig(batch_window=0.5)).run(trace)
+    r0, r1 = r.records
+    assert r0.queue_delay == 0.0
+    assert r1.queue_delay == pytest.approx(r0.observed_makespan)
+    assert r1.turnaround > r0.turnaround
+
+
+# ---------------------------------------------------------------------------
+# traces
+# ---------------------------------------------------------------------------
+
+def test_trace_json_roundtrip_bit_exact(tmp_path):
+    trace = generate_trace(10, seed=4, node_events=True)
+    obj = trace.to_json()
+    assert trace_from_json(json.loads(json.dumps(obj))).to_json() == obj
+    p = trace.save(tmp_path / "trace.json")
+    assert load_trace(p).to_json() == obj
+
+
+def test_generated_trace_arrivals_sorted_and_families_valid():
+    trace = generate_trace(50, seed=9)
+    times = [s.time for s in trace.submissions]
+    assert times == sorted(times)
+    assert {s.family for s in trace.submissions} <= {"mri", "stgs", "random", "tpu"}
+    assert len({s.id for s in trace.submissions}) == 50
+
+
+def test_service_summary_is_json_serializable():
+    trace = generate_trace(5, seed=1, families=("mri",))
+    r = SchedulingService(trace.system, ServiceConfig()).run(trace)
+    obj = json.loads(json.dumps(r.summary()))
+    assert obj["submissions"] == 5
+    assert obj["completed"] + obj["rejected"] == 5
+    assert 0.0 <= obj["cache"]["hit_rate"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _repro_env():
+    return {
+        "PYTHONPATH": str(Path(__file__).resolve().parents[1] / "src"),
+        "PATH": "/usr/bin:/bin",
+        "JAX_PLATFORMS": "cpu",
+    }
+
+
+def test_cli_trace_and_serve(tmp_path):
+    trace_path = tmp_path / "trace.json"
+    out_path = tmp_path / "result.json"
+    gen = subprocess.run(
+        [sys.executable, "-m", "repro", "trace", str(trace_path),
+         "-n", "6", "--seed", "3", "--families", "mri,tpu"],
+        capture_output=True, text=True, env=_repro_env(),
+    )
+    assert gen.returncode == 0, gen.stderr
+    assert trace_path.exists()
+    serve = subprocess.run(
+        [sys.executable, "-m", "repro", "serve", str(trace_path),
+         "--jitter", "0.05", "--seed", "7", "--out", str(out_path)],
+        capture_output=True, text=True, env=_repro_env(),
+    )
+    assert serve.returncode == 0, serve.stderr
+    summary = json.loads(serve.stdout)
+    assert summary["submissions"] == 6
+    assert summary["completed"] == 6
+    assert json.loads(out_path.read_text()) == summary
