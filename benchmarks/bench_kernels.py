@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Workload, build_problem, mri_system, random_layered_workflow, synthetic_system
-from repro.core.evaluator import make_fitness_fn, problem_to_jax
+from repro.engine import pack, population_fitness_fn
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.makespan import population_makespan_pallas
@@ -35,12 +35,12 @@ def run() -> list[tuple]:
     system = synthetic_system(16, seed=0)
     wf = random_layered_workflow(128, seed=0, max_cores=8, feature_pool=("F1",))
     prob = build_problem(system, Workload((wf,)))
-    fit = make_fitness_fn(prob)
+    fit = population_fitness_fn(prob, engine="jax")
     A = jnp.asarray(rng.integers(0, prob.num_nodes, (64, prob.num_tasks)), jnp.int32)
     us = _time(fit, A)
     rows.append(("fitness_jnp_128tx16n_pop64", us, f"cand_per_s={64 / (us / 1e6):.0f}"))
 
-    jp = problem_to_jax(prob)
+    jp = pack(prob, pad=False).device_arrays()
     small = jnp.asarray(rng.integers(0, prob.num_nodes, (8, prob.num_tasks)), jnp.int32)
     us = _time(
         lambda a: population_makespan_pallas(

@@ -61,6 +61,9 @@ def run(
         ("service_cache", float("nan"),
          f"hit_rate={s['cache']['hit_rate']:.3f};hits={s['cache']['hits']};"
          f"misses={s['cache']['misses']};solver_calls={s['solver_calls']}"),
+        ("service_pack_cache", float("nan"),
+         f"hit_rate={s['pack_cache']['hit_rate']:.3f};"
+         f"hits={s['pack_cache']['hits']};misses={s['pack_cache']['misses']}"),
         ("service_batching", float("nan"),
          f"groups={s['batched_groups']};submissions={s['batched_submissions']}"),
         ("service_events", float("nan"), f"count={s['events']}"),

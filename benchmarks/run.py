@@ -7,6 +7,9 @@ reader and kernel microbenches.  Prints ``name,us_per_call,derived`` CSV.
                                                        # → BENCH_table9.json
     PYTHONPATH=src python -m benchmarks.run --service  # 200-submission trace
                                                        # → BENCH_service.json
+    PYTHONPATH=src python -m benchmarks.run --engine   # per-backend engine
+                                                       # throughput
+                                                       # → BENCH_engine.json
     PYTHONPATH=src python -m benchmarks.run --scenario f.json  # time one
                                                        # orchestrated Scenario
 
@@ -67,6 +70,15 @@ def main() -> None:
         for row in bench_service.run():
             print(",".join(str(x) for x in row), flush=True)
         print(f"service_suite_total,{(time.perf_counter() - t0) * 1e6:.0f},")
+        return
+    if "--engine" in sys.argv:
+        from benchmarks import bench_engine
+
+        print("name,us_per_call,derived")
+        t0 = time.perf_counter()
+        for row in bench_engine.run():
+            print(",".join(str(x) for x in row), flush=True)
+        print(f"engine_suite_total,{(time.perf_counter() - t0) * 1e6:.0f},")
         return
     from benchmarks import (
         bench_autoshard_calibration,

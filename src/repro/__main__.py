@@ -2,9 +2,11 @@
 
     PYTHONPATH=src python -m repro run scenario.json [--technique heft]
                                                      [--backend simulate]
+                                                     [--engine jax]
                                                      [--out result.json]
                                                      [--out-dir /tmp/exec]
     PYTHONPATH=src python -m repro techniques
+    PYTHONPATH=src python -m repro engines
     PYTHONPATH=src python -m repro trace trace.json [-n 200] [--seed 0]
                                                     [--rate 2.0]
                                                     [--families mri,stgs]
@@ -40,11 +42,14 @@ def main(argv: list[str] | None = None) -> int:
     run_p.add_argument("--technique", help="override the scenario's technique")
     run_p.add_argument("--backend", help="override the executor backend "
                        "(simulate | slurm | kubernetes)")
+    run_p.add_argument("--engine", help="override the schedule-evaluation "
+                       "engine (auto | jax | pallas | oracle | plugin)")
     run_p.add_argument("--out", help="also write the summary JSON here")
     run_p.add_argument("--out-dir", default="/tmp/repro_executor",
                        help="artifact directory for render backends")
 
     sub.add_parser("techniques", help="list registered solver techniques")
+    sub.add_parser("engines", help="list registered evaluation engines")
 
     trace_p = sub.add_parser("trace", help="generate a service arrival trace")
     trace_p.add_argument("out", help="path to write the trace JSON")
@@ -111,6 +116,23 @@ def main(argv: list[str] | None = None) -> int:
             Path(args.out).write_text(summary + "\n")
         return 0
 
+    if args.cmd == "engines":
+        from repro.engine import ENGINES, default_engine
+
+        auto = default_engine()
+        for eng in sorted(ENGINES, key=lambda e: e.name):
+            caps = eng.capabilities
+            flags = ", ".join(
+                s for s, on in (
+                    ("population", caps.supports_population),
+                    ("batch", caps.supports_batch),
+                    ("exact-f32", caps.exact_f32),
+                    ("auto-default", eng.name == auto),
+                ) if on
+            ) or "-"
+            print(f"{eng.name:12s} {flags}")
+        return 0
+
     from repro.core import api
 
     if args.cmd == "techniques":
@@ -122,6 +144,7 @@ def main(argv: list[str] | None = None) -> int:
                     (f"max_tasks={caps.max_tasks}", caps.max_tasks is not None),
                     ("batch", caps.supports_batch),
                     ("time-limited", caps.needs_time_limit),
+                    ("engine-aware", caps.engine_aware),
                 ) if on
             ) or "heuristic/approximate"
             print(f"{entry.name:12s} {flags}")
@@ -132,6 +155,8 @@ def main(argv: list[str] | None = None) -> int:
         scenario = scenario.replace(technique=args.technique)
     if args.backend:
         scenario = scenario.replace(backend=args.backend)
+    if args.engine:
+        scenario = scenario.replace(engine=args.engine)
 
     result = api.run_scenario(scenario, out_dir=args.out_dir)
     summary = json.dumps(result.summary(), indent=2)

@@ -89,12 +89,16 @@ class SolverCapabilities:
     *routed to* by a policy (it may still raise on direct calls, like MILP's
     own ``max_tasks`` guard).  ``supports_batch`` advertises a family solver
     (one compiled program over many instances, e.g. the PR 1 ``ga_sweep``).
+    ``engine_aware`` marks techniques that take a ``backend=`` kwarg naming
+    an evaluation engine from :data:`repro.engine.ENGINES` — a scenario's
+    ``engine`` selection is forwarded only to these.
     """
 
     exact: bool = False
     max_tasks: int | None = None
     supports_batch: bool = False
     needs_time_limit: bool = False
+    engine_aware: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,6 +129,7 @@ class SolverRegistry:
         max_tasks: int | None = None,
         supports_batch: bool = False,
         needs_time_limit: bool = False,
+        engine_aware: bool = False,
         batch_fn: BatchSolverFn | None = None,
         overwrite: bool = False,
     ):
@@ -138,6 +143,7 @@ class SolverRegistry:
             max_tasks=max_tasks,
             supports_batch=supports_batch or batch_fn is not None,
             needs_time_limit=needs_time_limit,
+            engine_aware=engine_aware,
         )
 
         def _add(f: SolverFn) -> SolverFn:
@@ -265,10 +271,10 @@ REGISTRY.register("milp-static", _milp_solver("static"), exact=True, max_tasks=6
                   needs_time_limit=True)
 REGISTRY.register("heft", _heuristic_solver(heuristics.heft))
 REGISTRY.register("olb", _heuristic_solver(heuristics.olb))
-REGISTRY.register("ga", _mh_solver("ga"), batch_fn=_ga_batch)
-REGISTRY.register("pso", _mh_solver("pso"))
-REGISTRY.register("sa", _mh_solver("sa"))
-REGISTRY.register("aco", _mh_solver("aco"))
+REGISTRY.register("ga", _mh_solver("ga"), batch_fn=_ga_batch, engine_aware=True)
+REGISTRY.register("pso", _mh_solver("pso"), engine_aware=True)
+REGISTRY.register("sa", _mh_solver("sa"), engine_aware=True)
+REGISTRY.register("aco", _mh_solver("aco"), engine_aware=True)
 
 
 def __getattr__(name: str):
@@ -519,7 +525,11 @@ class Scenario:
     into caller kwargs), while a key named after a technique whose value is
     a dict is scoped to that technique alone — e.g.
     ``{"milp": {"time_limit": 60.0}}`` tunes the MILP budget without leaking
-    into GA/HEFT fallbacks."""
+    into GA/HEFT fallbacks.
+
+    ``engine`` selects the schedule-evaluation backend
+    (:data:`repro.engine.ENGINES`: ``"auto"``, ``"jax"``, ``"pallas"``,
+    ``"oracle"``, or a plugin); it reaches only engine-aware techniques."""
 
     name: str
     system: System
@@ -528,6 +538,7 @@ class Scenario:
     technique: str = "auto"
     policy: Policy | None = None
     backend: str = "simulate"
+    engine: str = "auto"
     perturbation: Perturbation = Perturbation()
     orchestration: OrchestrationConfig = OrchestrationConfig()
     solver_options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
@@ -545,6 +556,7 @@ class Scenario:
             "name": self.name,
             "technique": self.technique,
             "backend": self.backend,
+            "engine": self.engine,
             "weights": _weights_to_json(self.weights),
             "perturbation": self.perturbation.to_json(),
             "orchestration": self.orchestration.to_json(),
@@ -592,6 +604,7 @@ def scenario_from_json(obj: Mapping[str, Any] | str) -> Scenario:
         technique=header.get("technique", "auto"),
         policy=Policy.from_json(header["policy"]) if "policy" in header else None,
         backend=header.get("backend", "simulate"),
+        engine=header.get("engine", "auto"),
         perturbation=Perturbation.from_json(header.get("perturbation", {})),
         orchestration=OrchestrationConfig.from_json(header.get("orchestration", {})),
         solver_options=dict(header.get("solver_options", {})),
@@ -610,6 +623,7 @@ def route_problem(
     policy: Policy | None = None,
     options: Mapping[str, Any] | None = None,
     registry: SolverRegistry | None = None,
+    engine: str = "auto",
 ) -> SolveReport:
     """One solve with the full option semantics of a :class:`Scenario`:
     policy routing for ``"auto"``/``"policy"`` (or an explicit ``policy``),
@@ -617,11 +631,24 @@ def route_problem(
     (``{"milp": {"time_limit": ...}}``) unpacked for the matching technique
     and dropped for the rest.
 
+    ``engine`` names a schedule-evaluation backend from
+    :data:`repro.engine.ENGINES`; it becomes a scoped ``backend=`` option
+    for every *engine-aware* technique (explicit user options win), so MILP
+    or HEFT steps in a policy chain never see it.
+
     This is the Fig. 4 step-2 kernel shared by :class:`Orchestrator` and the
     event-driven :mod:`repro.service` scheduler — both face the same
     "scenario says technique X with options O" contract."""
     reg = registry if registry is not None else REGISTRY
     opts = dict(options or {})
+    if engine != "auto":
+        for entry in reg:
+            if not entry.capabilities.engine_aware:
+                continue
+            scoped = opts.get(entry.name)
+            scoped = dict(scoped) if isinstance(scoped, Mapping) else {}
+            scoped.setdefault("backend", engine)
+            opts[entry.name] = scoped
     if policy is not None or technique in ("auto", "policy"):
         pol = policy if policy is not None else Policy.paper_hybrid()
         return pol.route(problem, weights, registry=reg, **opts)
@@ -747,6 +774,7 @@ class Orchestrator:
             policy=sc.policy,
             options=sc.solver_options,
             registry=self.registry,
+            engine=sc.engine,
         )
 
     def _effective_factors(self, system: System) -> np.ndarray:

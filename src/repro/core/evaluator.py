@@ -17,52 +17,36 @@ occupies them for ``d_{ij}`` (Eq. 4).  Co-running under the core capacity is
 allowed — this is required to reproduce the paper's Table VI optimum, where
 W1/T2 and W2/T3 overlap on node N2 (12 + 32 ≤ 48 cores).
 
-Three implementations with identical semantics:
+Execution itself lives one layer down, in :mod:`repro.engine`:
 
-* :func:`evaluate_assignment` — numpy oracle (ground truth for tests),
-* :func:`make_fitness_fn` — JAX evaluator used by the metaheuristics
-  (rank-select core selection, no per-step sort; the TPU adaptation),
-* ``repro.kernels.makespan`` — the Pallas kernel with the same contract.
+* :func:`evaluate_assignment` (here) wraps the ``oracle`` backend — the one
+  incremental simulator in :mod:`repro.engine.sim` (ground truth for tests),
+* :func:`make_fitness_fn` routes through the engine registry
+  (:mod:`repro.engine.backends`): ``jax`` (shared jitted rank-select
+  evaluator) or ``pallas`` (the TPU kernel), both bit-for-bit equal to the
+  f32 oracle,
+* the batched multi-instance API (:func:`make_batched_fitness_fn`,
+  :func:`evaluate_population_batch`) pads instances into power-of-two shape
+  buckets (one canonical :class:`repro.engine.packed.PackedProblem` per
+  instance, memoized) and ``vmap``s across them — at most one XLA compile
+  per bucket, ever.
 
-Fast-path architecture (the paper's Table IX bottleneck):
-
-* one *shared* jitted fitness core per usage mode, taking the problem arrays
-  as arguments — XLA caches by shape, so GA/PSO/SA/ACO on the same instance
-  (or any instances with equal padded shapes) reuse one compiled program
-  instead of re-jitting per technique,
-* a *batched multi-instance* API (:func:`make_batched_fitness_fn`,
-  :func:`evaluate_population_batch`): a list of :class:`ScheduleProblem`\\ s is
-  padded into power-of-two shape buckets and ``vmap``-ed across instances, so
-  scenario sweeps (Table IX sizes, Fig. 11 grids) evaluate whole families in
-  one XLA program with at most one compile per bucket.
+The four packing helpers this module used to own moved to
+``repro.engine.packed``; their old names remain importable here as
+deprecation shims (PEP 562) that warn on access.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
+import warnings
 from typing import Callable, Sequence
 
 import numpy as np
 
 from repro.core.workload_model import BIG_PENALTY, ScheduleProblem
-
-_INF = 1e30  # finite stand-in for +inf inside JAX code (avoids inf*0 = nan)
-
-#: arrays consumed by the jitted fitness cores (order-insensitive dict pytree)
-FITNESS_ARRAY_KEYS = (
-    "durations",
-    "cores",
-    "data",
-    "feasible",
-    "release",
-    "pred_matrix",
-    "dtr",
-    "init_free",
-    "node_cores",
-    "usage_fixed",
-    "usage_weighted",
-)
+from repro.engine.packed import FITNESS_ARRAY_KEYS  # noqa: F401  (re-export)
+from repro.engine.sim import commit_sorted, run_schedule  # noqa: F401  (re-export)
 
 
 @dataclasses.dataclass
@@ -116,20 +100,6 @@ class Schedule:
         }
 
 
-def commit_sorted(row: np.ndarray, c: int, fill) -> np.ndarray:
-    """Replace the ``c`` smallest entries of an ascending-sorted ``row`` with
-    ``fill`` (≥ row[c-1] by construction) and return the row still sorted —
-    the O(len) merge-insert shared by the numpy oracle and the heuristics'
-    core state (no re-sort)."""
-    rest = row[c:]
-    pos = int(np.searchsorted(rest, fill))
-    merged = np.empty_like(row)
-    merged[:pos] = rest[:pos]
-    merged[pos : pos + c] = fill
-    merged[pos + c :] = rest[pos:]
-    return merged
-
-
 def _usage_of(problem: ScheduleProblem, assignment: np.ndarray, weights: ObjectiveWeights) -> float:
     if weights.usage_mode == "weighted":
         u = problem.weighted_usage()
@@ -147,55 +117,17 @@ def evaluate_assignment(
 ) -> Schedule:
     """Numpy oracle. ``assignment[j]`` = node index for topo-ordered task j.
 
-    The per-node core state is kept *sorted ascending* at all times, so the
-    "earliest time c cores are free" is an O(1) lookup (``row[c-1]``) and the
-    commit is an O(cap) merge-insert — no per-task sort.  Predecessors walk a
-    CSR view of the dependency DAG (no padded-matrix scan).
+    Timing comes from the one incremental simulator
+    (:func:`repro.engine.sim.run_schedule`): sorted core-free rows (O(1)
+    "earliest time c cores are free", O(cap) merge-insert commit) walking a
+    CSR view of the dependency DAG.
 
     ``dtype=np.float32`` evaluates with f32 arithmetic in the same operation
     order as the JAX evaluator / Pallas kernel — bit-for-bit identical
     makespans (the equivalence-sweep tests rely on this).
     """
     assignment = np.asarray(assignment, dtype=np.int64)
-    T, N = problem.num_tasks, problem.num_nodes
-    caps = problem.node_cores.astype(np.int64)
-    durations = problem.durations.astype(dtype, copy=False)
-    data = problem.data.astype(dtype, copy=False)
-    release = problem.release.astype(dtype, copy=False)
-    dtr = problem.dtr.astype(dtype, copy=False)
-    indptr, indices = problem.pred_csr
-    # sorted core-free rows: real cores start free (0.0)
-    rows: list[np.ndarray] = [np.zeros(max(int(c), 1), dtype=dtype) for c in caps]
-    start = np.zeros(T, dtype=dtype)
-    finish = np.zeros(T, dtype=dtype)
-    inf = dtype(_INF)
-    violations = 0
-
-    for j in range(T):
-        i = int(assignment[j])
-        if not problem.feasible[j, i]:
-            violations += 1
-        ready = release[j]
-        lo, hi = indptr[j], indptr[j + 1]
-        if hi > lo:
-            ps = indices[lo:hi]
-            ips = assignment[ps]
-            rates = dtr[ips, i]
-            ok = np.isfinite(rates) & (rates > 0)
-            with np.errstate(divide="ignore", invalid="ignore"):
-                transfer = np.where(
-                    ips == i, dtype(0.0), np.where(ok, data[ps] / np.where(ok, rates, 1), inf)
-                )
-            ready = np.maximum(ready, (finish[ps] + transfer).max())
-        row = rows[i]
-        c = int(max(1, min(problem.cores[j], caps[i])))
-        c = min(c, row.size)
-        kth = row[c - 1]
-        s = np.maximum(ready, kth)
-        f = s + durations[j, i]
-        rows[i] = commit_sorted(row, c, f)
-        start[j], finish[j] = s, f
-
+    start, finish, violations = run_schedule(problem, assignment, dtype=dtype)
     makespan = float(finish.max(initial=0.0))
     usage = _usage_of(problem, assignment, weights)
     objective = weights.alpha * usage + weights.beta * makespan + BIG_PENALTY * violations
@@ -212,121 +144,24 @@ def evaluate_assignment(
 
 
 # -----------------------------------------------------------------------------
-# JAX population evaluator (hardware adaptation of the paper's MH bottleneck)
+# population / batched fitness — thin forwards into the engine registry
 # -----------------------------------------------------------------------------
 
 
-def problem_to_jax(problem: ScheduleProblem, core_cap: int | None = None):
-    """Pack the problem into jnp arrays.  ``core_cap`` bounds the per-node
-    core-state width (nodes with more cores are exact as long as no single
-    task requests more than ``core_cap`` cores — asserted here)."""
-    import jax.numpy as jnp
-
-    caps = problem.node_cores.astype(np.int64)
-    cmax = int(core_cap if core_cap is not None else min(caps.max(initial=1), 512))
-    cmax = max(cmax, 1)
-    # Core-granular state is exact iff every task fits within the modeled
-    # core window on its feasible nodes.
-    max_req = int(problem.cores.max(initial=1))
-    if max_req > cmax:
-        cmax = max_req
-    # initial core-free matrix: real cores start free (0), padding is "never
-    # free" (+_INF); nodes with more than cmax cores are modeled with cmax
-    # cores (conservative — may only delay starts, never break dependencies).
-    init_free = np.full((problem.num_nodes, cmax), _INF, dtype=np.float32)
-    for i, c in enumerate(caps):
-        init_free[i, : min(int(c), cmax)] = 0.0
-    node_cores = np.minimum(np.maximum(caps, 1), cmax)
-
-    dtr = np.where(np.isfinite(problem.dtr), problem.dtr, _INF)
-    return {
-        "durations": jnp.asarray(problem.durations, dtype=jnp.float32),
-        "cores": jnp.asarray(np.maximum(problem.cores, 1.0), dtype=jnp.int32),
-        "data": jnp.asarray(problem.data, dtype=jnp.float32),
-        "feasible": jnp.asarray(problem.feasible),
-        "release": jnp.asarray(problem.release, dtype=jnp.float32),
-        "pred_matrix": jnp.asarray(problem.pred_matrix, dtype=jnp.int32),
-        "dtr": jnp.asarray(dtr, dtype=jnp.float32),
-        "node_cores": jnp.asarray(node_cores, dtype=jnp.int32),
-        "init_free": jnp.asarray(init_free),
-        "usage_fixed": jnp.asarray(problem.usage, dtype=jnp.float32),
-        "usage_weighted": jnp.asarray(problem.weighted_usage(), dtype=jnp.float32),
-        "cmax": cmax,
-    }
-
-
-def _fitness_arrays(arrays: dict) -> dict:
-    return {k: arrays[k] for k in FITNESS_ARRAY_KEYS}
-
-
-def _usage_term(arrays, assignments, usage_mode: str):
-    import jax.numpy as jnp
-
-    if usage_mode == "weighted":
-        T = arrays["usage_weighted"].shape[0]
-        return arrays["usage_weighted"][jnp.arange(T)[None, :], assignments].sum(axis=-1)
-    return jnp.broadcast_to(arrays["usage_fixed"].sum(), assignments.shape[:1])
-
-
 def fitness_from_arrays(assignments, arrays: dict, alpha, beta, usage_mode: str):
-    """Unjitted fitness over packed problem arrays:
-    ``(assignments [P, T]) -> (objective [P], makespan [P])``.
+    """Back-compat alias for
+    :func:`repro.engine.backends.population_fitness_from_arrays`."""
+    from repro.engine.backends import population_fitness_from_arrays
 
-    The single implementation behind the jitted single-instance core, the
-    vmapped batched core, and the batched metaheuristic sweeps.
-    """
-    from repro.kernels import ref
-
-    makespan, violations = ref.population_makespan_ref(
-        assignments,
-        durations=arrays["durations"],
-        cores=arrays["cores"],
-        data=arrays["data"],
-        feasible=arrays["feasible"],
-        release=arrays["release"],
-        pred_matrix=arrays["pred_matrix"],
-        dtr=arrays["dtr"],
-        init_free=arrays["init_free"],
-        node_cores=arrays["node_cores"],
-    )
-    usage = _usage_term(arrays, assignments, usage_mode)
-    obj = alpha * usage + beta * makespan + BIG_PENALTY * violations
-    return obj, makespan
-
-
-@functools.lru_cache(maxsize=None)
-def _fitness_core(usage_mode: str) -> Callable:
-    """Shared jitted ``(assignments, arrays, alpha, beta) -> (obj, mk)``.
-
-    Problem arrays are *arguments*, not closure captures — XLA's jit cache
-    keys on shapes, so every technique / sweep point with equal array shapes
-    hits the same compiled executable (no per-instance re-jit)."""
-    import jax
-
-    return jax.jit(functools.partial(fitness_from_arrays, usage_mode=usage_mode))
-
-
-@functools.lru_cache(maxsize=None)
-def _batched_fitness_core(usage_mode: str) -> Callable:
-    """Jitted ``vmap`` of the fitness core across a stacked instance axis:
-    ``(assignments [B, P, T], arrays [B, ...], alpha, beta) -> ([B, P], [B, P])``."""
-    import jax
-
-    return jax.jit(
-        jax.vmap(
-            functools.partial(fitness_from_arrays, usage_mode=usage_mode),
-            in_axes=(0, 0, None, None),
-        )
-    )
+    return population_fitness_from_arrays(assignments, arrays, alpha, beta, usage_mode)
 
 
 def fitness_cache_sizes(usage_mode: str = "fixed") -> tuple[int, int]:
     """(single-instance, batched) XLA compile counts for the shared fitness
     cores — the recompile telemetry the sweep tests assert on."""
-    return (
-        _fitness_core(usage_mode)._cache_size(),
-        _batched_fitness_core(usage_mode)._cache_size(),
-    )
+    from repro.engine.backends import fitness_cache_sizes as _sizes
+
+    return _sizes(usage_mode)
 
 
 def make_fitness_fn(
@@ -337,145 +172,20 @@ def make_fitness_fn(
 ) -> Callable:
     """Returns ``fitness(assignments[P, T]) -> (objective[P], makespan[P])``.
 
-    ``backend='pallas'`` routes the per-candidate schedule evaluation through
-    the Pallas kernel (interpret mode on CPU, TPU-compiled on device);
-    ``'jnp'`` uses the shared jitted rank-select evaluator (also the kernel's
-    oracle).
+    ``backend`` names an engine from :data:`repro.engine.ENGINES`
+    (``"jnp"``/``"jax"``, ``"pallas"``, ``"oracle"``, ``"auto"``, or any
+    plugin).  All f32 backends agree bit for bit.
     """
-    import jax.numpy as jnp
+    from repro.engine.backends import population_fitness_fn
 
-    jp = problem_to_jax(problem, core_cap)
-    arrays = _fitness_arrays(jp)
-
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-
-        def fitness(assignments):
-            makespan, violations = kops.population_makespan(
-                jnp.asarray(assignments).astype(jnp.int32),
-                durations=jp["durations"],
-                cores=jp["cores"],
-                data=jp["data"],
-                feasible=jp["feasible"],
-                release=jp["release"],
-                pred_matrix=jp["pred_matrix"],
-                dtr=jp["dtr"],
-                init_free=jp["init_free"],
-            )
-            usage = _usage_term(jp, assignments, weights.usage_mode)
-            obj = weights.alpha * usage + weights.beta * makespan + BIG_PENALTY * violations
-            return obj, makespan
-
-        return fitness
-
-    core = _fitness_core(weights.usage_mode)
-
-    def fitness(assignments):
-        return core(jnp.asarray(assignments), arrays, weights.alpha, weights.beta)
-
-    return fitness
+    return population_fitness_fn(problem, weights, engine=backend, core_cap=core_cap)
 
 
-# -----------------------------------------------------------------------------
-# Batched multi-instance evaluation (scenario sweeps in one XLA program)
-# -----------------------------------------------------------------------------
+def common_bucket(problems: Sequence[ScheduleProblem]):
+    """Elementwise-max shape bucket covering every problem in the list."""
+    from repro.engine.packed import common_bucket as _common
 
-
-def _round_up_pow2(x: int, floor: int = 4) -> int:
-    x = max(int(x), 1)
-    out = floor
-    while out < x:
-        out *= 2
-    return out
-
-
-def bucket_of(problem: ScheduleProblem, core_cap: int | None = None) -> tuple[int, int, int, int]:
-    """Shape bucket ``(T, N, CMAX, MAXP)`` for this problem — each dim rounded
-    to the next power of two so unequal instances share compiled programs."""
-    caps = problem.node_cores.astype(np.int64)
-    cmax = int(core_cap if core_cap is not None else min(caps.max(initial=1), 512))
-    cmax = max(cmax, int(problem.cores.max(initial=1)), 1)
-    return (
-        _round_up_pow2(problem.num_tasks),
-        _round_up_pow2(problem.num_nodes),
-        _round_up_pow2(cmax),
-        _round_up_pow2(problem.pred_matrix.shape[1], floor=1),
-    )
-
-
-def common_bucket(problems: Sequence[ScheduleProblem]) -> tuple[int, int, int, int]:
-    """Elementwise-max bucket covering every problem in the list."""
-    buckets = [bucket_of(p) for p in problems]
-    return tuple(max(b[d] for b in buckets) for d in range(4))  # type: ignore[return-value]
-
-
-def problem_to_numpy_padded(problem: ScheduleProblem, bucket: tuple[int, int, int, int]) -> dict:
-    """Pad a problem's arrays to ``bucket`` such that padding is *objective
-    neutral*:
-
-    * padded tasks have zero duration/data/usage, no predecessors, release 0
-      and are feasible only on node 0 — assigned to any *real* node they
-      finish at that node's current earliest core-free time (≤ makespan) and
-      leave the core state untouched; assignments for them must stay in
-      ``[0, N_real)`` (pad assignment rows with 0),
-    * padded nodes are infeasible for every real task and own no cores
-      (``init_free`` all +INF), so a correct sampler never selects them.
-    """
-    Tb, Nb, Cb, Pb = bucket
-    T, N = problem.num_tasks, problem.num_nodes
-    maxp = problem.pred_matrix.shape[1]
-    if T > Tb or N > Nb or maxp > Pb:
-        raise ValueError(f"problem {T}x{N} (maxp={maxp}) exceeds bucket {bucket}")
-    caps = problem.node_cores.astype(np.int64)
-    if int(problem.cores.max(initial=1)) > Cb:
-        raise ValueError(f"task core request exceeds bucket cmax {Cb}")
-
-    durations = np.zeros((Tb, Nb), np.float32)
-    durations[:T, :N] = problem.durations
-    cores = np.ones(Tb, np.int32)
-    cores[:T] = np.maximum(problem.cores, 1.0).astype(np.int32)
-    data = np.zeros(Tb, np.float32)
-    data[:T] = problem.data
-    feasible = np.zeros((Tb, Nb), bool)
-    feasible[:T, :N] = problem.feasible
-    feasible[T:, 0] = True  # padded tasks live on node 0
-    release = np.zeros(Tb, np.float32)
-    release[:T] = problem.release
-    pred_matrix = -np.ones((Tb, Pb), np.int32)
-    pred_matrix[:T, :maxp] = problem.pred_matrix
-    dtr = np.ones((Nb, Nb), np.float32)
-    dtr[:N, :N] = np.where(np.isfinite(problem.dtr), problem.dtr, _INF)
-    init_free = np.full((Nb, Cb), _INF, np.float32)
-    for i, c in enumerate(caps):
-        init_free[i, : min(int(c), Cb)] = 0.0
-    node_cores = np.ones(Nb, np.int32)
-    node_cores[:N] = np.minimum(np.maximum(caps, 1), Cb)
-    usage_fixed = np.zeros(Tb, np.float32)
-    usage_fixed[:T] = problem.usage
-    usage_weighted = np.zeros((Tb, Nb), np.float32)
-    usage_weighted[:T, :N] = problem.weighted_usage()
-    return {
-        "durations": durations,
-        "cores": cores,
-        "data": data,
-        "feasible": feasible,
-        "release": release,
-        "pred_matrix": pred_matrix,
-        "dtr": dtr,
-        "init_free": init_free,
-        "node_cores": node_cores,
-        "usage_fixed": usage_fixed,
-        "usage_weighted": usage_weighted,
-    }
-
-
-def stack_problems(problems: Sequence[ScheduleProblem], bucket=None):
-    """Stack padded instances along a leading batch axis → jnp array dict."""
-    import jax.numpy as jnp
-
-    bucket = common_bucket(problems) if bucket is None else bucket
-    padded = [problem_to_numpy_padded(p, bucket) for p in problems]
-    return {k: jnp.asarray(np.stack([pp[k] for pp in padded])) for k in FITNESS_ARRAY_KEYS}, bucket
+    return _common(problems)
 
 
 def make_batched_fitness_fn(
@@ -485,22 +195,13 @@ def make_batched_fitness_fn(
     """Batched fitness over a family of instances (one shape bucket):
     ``fitness(assignments [B, P, T_bucket]) -> (objective [B, P], makespan [B, P])``.
 
-    Assignment rows for padded tasks must be 0 (see
-    :func:`problem_to_numpy_padded`); :func:`evaluate_population_batch` does
-    this padding for you.  All calls with the same bucket — across sweeps,
-    techniques, and problem families — share one compiled XLA program.
-    """
-    import jax.numpy as jnp
+    Assignment rows for padded tasks must be 0;
+    :func:`evaluate_population_batch` does this padding for you.  All calls
+    with the same bucket — across sweeps, techniques, and problem families —
+    share one compiled XLA program."""
+    from repro.engine.backends import batched_population_fitness_fn
 
-    arrays, bucket = stack_problems(problems)
-    core = _batched_fitness_core(weights.usage_mode)
-
-    def fitness(assignments):
-        return core(jnp.asarray(assignments), arrays, weights.alpha, weights.beta)
-
-    fitness.bucket = bucket  # type: ignore[attr-defined]
-    fitness.num_instances = len(problems)  # type: ignore[attr-defined]
-    return fitness
+    return batched_population_fitness_fn(problems, weights, engine="jax")
 
 
 def evaluate_population_batch(
@@ -508,32 +209,40 @@ def evaluate_population_batch(
     populations: Sequence[np.ndarray],
     weights: ObjectiveWeights = ObjectiveWeights(),
 ) -> list[tuple[np.ndarray, np.ndarray]]:
-    """Evaluate per-instance candidate populations for a list of problems.
+    """Evaluate per-instance candidate populations for a list of problems —
+    see :func:`repro.engine.backends.evaluate_population_batch`."""
+    from repro.engine.backends import evaluate_population_batch as _batch
 
-    Instances are grouped into shape buckets; each bucket group is padded,
-    stacked and evaluated by one vmapped XLA call (one compile per bucket,
-    ever — the jit cache is module-global).  Returns, per instance, the
-    ``(objective [P_i], makespan [P_i])`` pair in the input order.
-    """
-    if len(problems) != len(populations):
-        raise ValueError("need one population per problem")
-    groups: dict[tuple[int, int, int, int], list[int]] = {}
-    pops = [np.asarray(p) for p in populations]
-    for idx, problem in enumerate(problems):
-        groups.setdefault(bucket_of(problem), []).append(idx)
+    return _batch(problems, populations, weights, engine="jax")
 
-    out: list[tuple[np.ndarray, np.ndarray] | None] = [None] * len(problems)
-    for bucket, members in groups.items():
-        Tb = bucket[0]
-        pb = _round_up_pow2(max(pops[m].shape[0] for m in members))
-        batch = np.zeros((len(members), pb, Tb), np.int32)
-        for row, m in enumerate(members):
-            pop = pops[m]
-            batch[row, : pop.shape[0], : pop.shape[1]] = pop
-        fitness = make_batched_fitness_fn([problems[m] for m in members], weights)
-        obj, mk = fitness(batch)
-        obj, mk = np.asarray(obj), np.asarray(mk)
-        for row, m in enumerate(members):
-            P = pops[m].shape[0]
-            out[m] = (obj[row, :P], mk[row, :P])
-    return out  # type: ignore[return-value]
+
+# -----------------------------------------------------------------------------
+# deprecation shims — packing moved to repro.engine.packed (PEP 562, same
+# surface as the tested repro.core.solver shim)
+# -----------------------------------------------------------------------------
+
+_ENGINE_SHIMS = {
+    "problem_to_jax": "legacy_jax_arrays",
+    "problem_to_numpy_padded": "legacy_padded_arrays",
+    "stack_problems": "legacy_stacked_arrays",
+    "bucket_of": "bucket_of",
+}
+
+
+def __getattr__(name: str):
+    target = _ENGINE_SHIMS.get(name)
+    if target is not None:
+        warnings.warn(
+            f"repro.core.evaluator.{name} is deprecated; problem packing "
+            "moved to repro.engine (use repro.engine.pack / PackedProblem)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from repro.engine import packed as _packed
+
+        return getattr(_packed, target)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_ENGINE_SHIMS))

@@ -4,7 +4,10 @@ Both emit an *assignment* (task → node); the canonical timing is always
 recomputed by the shared oracle (:func:`repro.core.evaluator.evaluate_assignment`)
 so that every technique is scored under identical semantics.
 
-Vectorized over nodes per task step — a 5000×5000 instance finishes in
+Core bookkeeping and per-task ready times come from the one incremental
+simulator (:mod:`repro.engine.sim`) — the same sorted free-rows + CSR
+ready-time pass the oracle backend and the service's truth execution use.
+Vectorized over nodes per task step, a 5000×5000 instance finishes in
 seconds (the paper's serial implementation reports 560 s; see EXPERIMENTS.md
 §Perf for the side-by-side).
 """
@@ -15,8 +18,9 @@ import time
 
 import numpy as np
 
-from repro.core.evaluator import ObjectiveWeights, Schedule, commit_sorted, evaluate_assignment
+from repro.core.evaluator import ObjectiveWeights, Schedule, evaluate_assignment
 from repro.core.workload_model import ScheduleProblem
+from repro.engine.sim import CoreSim, ready_times_all
 
 _INF = 1e30
 
@@ -53,65 +57,6 @@ def upward_ranks(problem: ScheduleProblem) -> np.ndarray:
     return rank
 
 
-class _CoreState:
-    """Per-node core-free-time state ([N, Cmax], +inf padding).
-
-    Every row is kept *sorted ascending*, which turns the two hot operations
-    into O(1)/O(Cmax) array ops (the seed implementation full-sorted the
-    whole [N, Cmax] matrix on every task step):
-
-    * :meth:`kth_free` — "earliest time c cores are free" is a row lookup,
-    * :meth:`commit` — replacing the c smallest with the finish time is a
-      merge-insert (the c smallest are the row prefix; the finish time is
-      ≥ all of them by construction).
-    """
-
-    def __init__(self, problem: ScheduleProblem):
-        caps = problem.node_cores.astype(np.int64)
-        self.caps = caps
-        cmax = int(max(min(caps.max(initial=1), 512), problem.cores.max(initial=1), 1))
-        self.cmax = cmax
-        self.free = np.full((problem.num_nodes, cmax), _INF, dtype=np.float64)
-        for i, c in enumerate(caps):
-            self.free[i, : min(int(c), cmax)] = 0.0
-        self._rows = np.arange(problem.num_nodes)
-
-    def kth_free(self, c: np.ndarray) -> np.ndarray:
-        """Earliest time each node has ``c_i`` cores free. c: [N] ints >= 1."""
-        idx = np.clip(c - 1, 0, self.cmax - 1)
-        return self.free[self._rows, idx]
-
-    def commit(self, i: int, c: int, finish: float) -> None:
-        c = max(1, min(c, self.cmax))
-        self.free[i] = commit_sorted(self.free[i], c, finish)
-
-
-def _ready_times(
-    problem: ScheduleProblem,
-    j: int,
-    assignment: np.ndarray,
-    finish: np.ndarray,
-) -> np.ndarray:
-    """Ready time of task j on every node ([N]), Eq. (12) with Eq. (5).
-
-    One fused multiply-add-max over the CSR predecessor slice using the
-    precomputed reciprocal-rate matrix (``problem.transfer_factor``) — no
-    per-call division/finiteness test, f32 bandwidth.  This is the E×N term
-    that dominates HEFT at Table IX scale (5000×5000: ~930k edges)."""
-    N = problem.num_nodes
-    indptr, indices = problem.pred_csr
-    ps = indices[indptr[j] : indptr[j + 1]]
-    ready = np.full(N, problem.release[j], dtype=np.float64)
-    if ps.size == 0:
-        return ready
-    ips = assignment[ps]  # [k] predecessor nodes
-    cand = problem.data[ps, None].astype(np.float32) * problem.transfer_factor[ips]
-    if problem.transfer_penalty is not None:  # dead links: additive blocker
-        cand += problem.transfer_penalty[ips]
-    cand += finish[ps, None].astype(np.float32)
-    return np.maximum(ready, cand.max(axis=0))
-
-
 def heft(
     problem: ScheduleProblem,
     weights: ObjectiveWeights = ObjectiveWeights(),
@@ -125,13 +70,13 @@ def heft(
     order = np.lexsort((np.arange(T), -rank))
     assignment = np.zeros(T, dtype=np.int64)
     finish = np.zeros(T)
-    state = _CoreState(problem)
+    state = CoreSim(problem)
     c_need = np.maximum(problem.cores.astype(np.int64), 1)
 
     for j in order:
-        ready = _ready_times(problem, j, assignment, finish)
+        ready = ready_times_all(problem, j, assignment, finish)
         c = np.minimum(c_need[j], np.maximum(state.caps, 1))
-        kth = state.kth_free(c)
+        kth = state.kth_free_all(c)
         start = np.maximum(ready, kth)
         eft = start + problem.durations[j]
         eft = np.where(problem.feasible[j], eft, _INF)
@@ -155,13 +100,13 @@ def olb(
     T = problem.num_tasks
     assignment = np.zeros(T, dtype=np.int64)
     finish = np.zeros(T)
-    state = _CoreState(problem)
+    state = CoreSim(problem)
     c_need = np.maximum(problem.cores.astype(np.int64), 1)
 
     for j in range(T):  # topo order
-        ready = _ready_times(problem, j, assignment, finish)
+        ready = ready_times_all(problem, j, assignment, finish)
         c = np.minimum(c_need[j], np.maximum(state.caps, 1))
-        kth = state.kth_free(c)
+        kth = state.kth_free_all(c)
         avail = np.maximum(ready, kth)
         avail = np.where(problem.feasible[j], avail, _INF)
         i = int(np.argmin(avail))

@@ -4,11 +4,11 @@ GA, PSO, SA, ACO — **vectorized in JAX**.
 This is the hardware adaptation of the paper's scaling bottleneck
 (Table IX: GA at 500×500 took 6513 s serially): fitness evaluation of a
 *population* of candidate assignments is embarrassingly parallel across
-candidates, so every technique here evaluates its whole population with one
-``vmap``-batched list-scheduling scan (``repro.core.evaluator.make_fitness_fn``,
-optionally routed through the Pallas kernel ``repro.kernels.makespan``), and
-the generation loop is a ``jax.lax.scan`` — the entire optimizer jit-compiles
-to a single XLA program.
+candidates, so every technique here evaluates its whole population through
+the engine registry (:func:`repro.engine.population_fitness_fn` — the
+``backend=`` kwarg names any registered engine: ``jax``, ``pallas``,
+``oracle``, or a plugin), and the generation loop is a ``jax.lax.scan`` —
+the entire optimizer jit-compiles to a single XLA program.
 
 All techniques emit assignments only; canonical timing comes from the shared
 numpy oracle so every technique is scored under identical semantics.
@@ -23,16 +23,23 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.core import evaluator
 from repro.core.evaluator import (
     ObjectiveWeights,
     Schedule,
     evaluate_assignment,
-    make_fitness_fn,
 )
 from repro.core.workload_model import ScheduleProblem
+from repro.engine.packed import stack_packed
 
 _NEG = -1e30
+
+
+def population_fitness_fn(problem, weights=None, *, engine="auto", core_cap=None):
+    """Registry-routed fitness (lazy import: repro.engine.backends imports
+    this module's package during its own initialization)."""
+    from repro.engine.backends import population_fitness_fn as _fn
+
+    return _fn(problem, weights, engine=engine, core_cap=core_cap)
 
 
 @dataclasses.dataclass
@@ -142,7 +149,7 @@ def ga(
     import jax
 
     t0 = time.perf_counter()
-    fitness = make_fitness_fn(problem, weights, backend=backend)
+    fitness = population_fitness_fn(problem, weights, engine=backend)
     logits = _mask_logits(problem)
     best, hist = _ga_loop(
         fitness,
@@ -165,9 +172,11 @@ def _ga_sweep_core(
     program per shape bucket evaluates an entire scenario family."""
     import jax
 
+    from repro.engine.backends import population_fitness_from_arrays
+
     def one(arrays, logits, key, alpha, beta, mutation_rate):
         def fitness(pop):
-            return evaluator.fitness_from_arrays(pop, arrays, alpha, beta, usage_mode)
+            return population_fitness_from_arrays(pop, arrays, alpha, beta, usage_mode)
 
         return _ga_loop(
             fitness,
@@ -197,7 +206,7 @@ def ga_sweep(
     """Run the GA on a whole family of instances in ONE compiled XLA program.
 
     Instances are padded into a common shape bucket (see
-    ``evaluator.bucket_of``) and the generation loop is ``vmap``-ed across
+    ``repro.engine.bucket_of``) and the generation loop is ``vmap``-ed across
     them — a Table IX size sweep or Fig. 11 quality grid no longer pays one
     trace/compile per point.  Per-result ``solve_time`` is the sweep wall
     time (the instances ran concurrently)."""
@@ -205,7 +214,7 @@ def ga_sweep(
     import jax.numpy as jnp
 
     t0 = time.perf_counter()
-    arrays, bucket = evaluator.stack_problems(problems)
+    arrays, bucket = stack_packed(problems)
     Tb, Nb = bucket[0], bucket[1]
     logits = np.full((len(problems), Tb, Nb), _NEG, dtype=np.float32)
     for b, problem in enumerate(problems):
@@ -252,7 +261,7 @@ def pso(
 
     t0 = time.perf_counter()
     T, N = problem.num_tasks, problem.num_nodes
-    fitness = make_fitness_fn(problem, weights, backend=backend)
+    fitness = population_fitness_fn(problem, weights, engine=backend)
     logits = _mask_logits(problem)
     key = jax.random.PRNGKey(seed)
     key, k0, k1 = jax.random.split(key, 3)
@@ -310,7 +319,7 @@ def sa(
 
     t0 = time.perf_counter()
     T = problem.num_tasks
-    fitness = make_fitness_fn(problem, weights, backend=backend)
+    fitness = population_fitness_fn(problem, weights, engine=backend)
     logits = _mask_logits(problem)
     key = jax.random.PRNGKey(seed)
     key, k0 = jax.random.split(key)
@@ -365,7 +374,7 @@ def aco(
 
     t0 = time.perf_counter()
     T, N = problem.num_tasks, problem.num_nodes
-    fitness = make_fitness_fn(problem, weights, backend=backend)
+    fitness = population_fitness_fn(problem, weights, engine=backend)
     logits = _mask_logits(problem)
     # heuristic desirability η = 1 / d_ij (shorter is better)
     eta = 1.0 / np.maximum(problem.durations, 1e-9)

@@ -41,7 +41,7 @@ import numpy as np
 import scipy.sparse as sp
 from scipy.optimize import Bounds, LinearConstraint, milp as scipy_milp
 
-from repro.core.evaluator import ObjectiveWeights, Schedule, evaluate_assignment
+from repro.core.evaluator import ObjectiveWeights, Schedule
 from repro.core.workload_model import ScheduleProblem
 
 _EPS = 1e-4
@@ -318,7 +318,9 @@ def solve_milp(
     # identically — and keep the oracle timing whenever it is at least as
     # good (it strips the ε slack; the assignment itself stays optimal).
     if status.startswith(("optimal", "feasible")):
-        oracle = evaluate_assignment(problem, assignment, weights)
+        from repro.engine.backends import ENGINES  # lazy: api → milp → engine
+
+        oracle = ENGINES.get("oracle").evaluate(problem, assignment, weights)
         if oracle.violations == 0 and oracle.makespan <= makespan + 1e-6:
             return Schedule(
                 assignment=assignment,

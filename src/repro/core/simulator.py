@@ -21,6 +21,7 @@ import numpy as np
 from repro.core.evaluator import Schedule
 from repro.core.validate import verify_schedule
 from repro.core.workload_model import ScheduleProblem
+from repro.engine.sim import run_schedule
 
 
 @dataclasses.dataclass
@@ -78,47 +79,29 @@ def execute(
         if errs:
             raise ValueError(f"refusing to execute invalid schedule: {errs[:3]}")
 
-    rng = np.random.default_rng(seed)
     T = problem.num_tasks
     a = schedule.assignment
     factors = np.ones(problem.num_nodes) if speed_factors is None else np.asarray(speed_factors)
+    mults = None
+    if jitter > 0:
+        # one draw per task in topo order — same stream as per-task draws
+        mults = np.random.default_rng(seed).lognormal(0.0, jitter, size=T)
 
-    caps = problem.node_cores.astype(np.int64)
-    core_free = [np.zeros(max(int(c), 1)) for c in caps]
-    start = np.zeros(T)
-    finish = np.zeros(T)
-    logs: list[TaskLog] = []
-    for j in range(T):
-        i = int(a[j])
-        ready = problem.release[j]
-        for p in problem.pred_matrix[j]:
-            if p < 0:
-                continue
-            ip = int(a[p])
-            transfer = 0.0
-            if ip != i:
-                rate = problem.dtr[ip, i]
-                transfer = problem.data[p] / rate if np.isfinite(rate) else np.inf
-            ready = max(ready, finish[p] + transfer)
-        c = int(max(1, min(problem.cores[j], caps[i])))
-        free = core_free[i]
-        idx = np.argsort(free, kind="stable")[:c]
-        s = max(ready, float(free[idx[-1]]))
-        dur = problem.durations[j, i] / max(factors[i], 1e-9)
-        if jitter > 0:
-            dur *= float(rng.lognormal(0.0, jitter))
-        f = s + dur
-        free[idx] = f
-        start[j], finish[j] = s, f
-        logs.append(
-            TaskLog(
-                task=problem.task_names[j],
-                node=i,
-                start=s,
-                finish=f,
-                predicted_finish=float(schedule.finish[j]),
-            )
+    # the one incremental simulator (repro.engine.sim) replays the schedule
+    # under perturbed speeds — identical semantics to the solver-side oracle
+    start, finish, _ = run_schedule(
+        problem, a, speed_factors=factors, jitter_mults=mults
+    )
+    logs = [
+        TaskLog(
+            task=problem.task_names[j],
+            node=int(a[j]),
+            start=float(start[j]),
+            finish=float(finish[j]),
+            predicted_finish=float(schedule.finish[j]),
         )
+        for j in range(T)
+    ]
     mk = float(finish.max(initial=0.0))
     pred = float(schedule.makespan)
     return ExecutionReport(

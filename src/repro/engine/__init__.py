@@ -1,0 +1,76 @@
+"""`repro.engine` — the one place a schedule gets executed against a problem.
+
+The paper defines a single rigorous system/workload model; this package owns
+its single *executable* form and every way of evaluating a schedule against
+it (the SPEC-RG layering: model → engine → solver → service):
+
+* :mod:`repro.engine.packed` — the canonical, device-ready
+  :class:`PackedProblem` (padded arrays, CSR preds, shape bucket, dtype
+  policy), built once per ``(problem fingerprint, bucket)`` and memoized in a
+  stats-tracking LRU (:func:`pack_cache`) so repeat packs skip both the
+  padding work and the host→device transfer;
+* :mod:`repro.engine.sim` — the one incremental core-state simulator
+  (sorted free-rows + CSR ready-times) behind the numpy oracle, HEFT/OLB,
+  and the service's truth execution;
+* :mod:`repro.engine.backends` — the :class:`EngineRegistry` of
+  :class:`ScheduleEngine` backends (``oracle`` / ``jax`` / ``pallas``),
+  mirroring the solver registry's capability pattern.  The f32 backends are
+  bit-for-bit equivalent (asserted by the cross-backend sweep tests).
+
+Solvers consume the engine through :func:`population_fitness_fn` /
+:func:`evaluate_population_batch`; out-of-tree backends register with
+``@register_engine("name")`` and are immediately routable by
+``Scenario(engine=...)``.
+"""
+
+from repro.engine.backends import (
+    ENGINES,
+    EngineCapabilities,
+    EngineRegistry,
+    ScheduleEngine,
+    batched_population_fitness_fn,
+    default_engine,
+    evaluate_population_batch,
+    fitness_cache_sizes,
+    population_fitness_fn,
+    population_fitness_from_arrays,
+    register_engine,
+    resolve_engine,
+)
+from repro.engine.packed import (
+    FITNESS_ARRAY_KEYS,
+    PackCache,
+    PackedProblem,
+    bucket_of,
+    common_bucket,
+    pack,
+    pack_cache,
+    stack_packed,
+)
+from repro.engine.sim import CoreSim, commit_sorted, run_schedule
+
+__all__ = [
+    "ENGINES",
+    "CoreSim",
+    "EngineCapabilities",
+    "EngineRegistry",
+    "FITNESS_ARRAY_KEYS",
+    "PackCache",
+    "PackedProblem",
+    "ScheduleEngine",
+    "batched_population_fitness_fn",
+    "bucket_of",
+    "commit_sorted",
+    "common_bucket",
+    "default_engine",
+    "evaluate_population_batch",
+    "fitness_cache_sizes",
+    "pack",
+    "pack_cache",
+    "population_fitness_fn",
+    "population_fitness_from_arrays",
+    "register_engine",
+    "resolve_engine",
+    "run_schedule",
+    "stack_packed",
+]

@@ -1,0 +1,364 @@
+"""The canonical device-ready problem representation.
+
+One :class:`PackedProblem` replaces the scattered packing helpers that PRs
+1–3 grew in ``repro.core.evaluator`` (exact-shape jnp packing, bucket
+padding, instance stacking, shape buckets): every backend in
+:mod:`repro.engine.backends` evaluates against this one artifact, and every
+layer above (metaheuristics, admission batching, benchmarks) shares it.
+
+Padding is *objective neutral* by construction:
+
+* padded tasks have zero duration/data/usage, no predecessors, release 0
+  and are feasible only on node 0 — assigned to any *real* node they finish
+  at that node's current earliest core-free time (≤ makespan) and leave the
+  core state untouched; population rows must pin them to node 0,
+* padded nodes are infeasible for every real task and own no cores
+  (``init_free`` all +INF), so a correct sampler never selects them.
+
+:func:`pack` memoizes by ``(problem fingerprint, bucket, core_cap)`` in a
+stats-tracking LRU (:func:`pack_cache`): a resubmission of a
+content-identical problem — even one that misses the *solve* cache because
+its weights or technique changed — reuses the padded arrays **and** the
+already-transferred device buffers (``PackedProblem.device_arrays`` is
+cached on the instance, which the LRU keeps alive).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from collections import OrderedDict
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.core.workload_model import ScheduleProblem, problem_fingerprint
+
+_INF = 1e30
+
+#: arrays consumed by the fitness cores (order-insensitive dict pytree)
+FITNESS_ARRAY_KEYS = (
+    "durations",
+    "cores",
+    "data",
+    "feasible",
+    "release",
+    "pred_matrix",
+    "dtr",
+    "init_free",
+    "node_cores",
+    "usage_fixed",
+    "usage_weighted",
+)
+
+Bucket = tuple[int, int, int, int]
+
+
+def _round_up_pow2(x: int, floor: int = 4) -> int:
+    x = max(int(x), 1)
+    out = floor
+    while out < x:
+        out *= 2
+    return out
+
+
+def _cmax_of(problem: ScheduleProblem, core_cap: int | None) -> int:
+    caps = problem.node_cores.astype(np.int64)
+    cmax = int(core_cap if core_cap is not None else min(caps.max(initial=1), 512))
+    return max(cmax, int(problem.cores.max(initial=1)), 1)
+
+
+def exact_bucket(problem: ScheduleProblem, core_cap: int | None = None) -> Bucket:
+    """The problem's own shapes ``(T, N, CMAX, MAXP)`` — no padding."""
+    return (
+        problem.num_tasks,
+        problem.num_nodes,
+        _cmax_of(problem, core_cap),
+        max(int(problem.pred_matrix.shape[1]), 1),
+    )
+
+
+def bucket_of(problem: ScheduleProblem, core_cap: int | None = None) -> Bucket:
+    """Shape bucket ``(T, N, CMAX, MAXP)`` for this problem — each dim rounded
+    to the next power of two so unequal instances share compiled programs."""
+    t, n, cmax, maxp = exact_bucket(problem, core_cap)
+    return (
+        _round_up_pow2(t),
+        _round_up_pow2(n),
+        _round_up_pow2(cmax),
+        _round_up_pow2(maxp, floor=1),
+    )
+
+
+def common_bucket(problems: Sequence[ScheduleProblem]) -> Bucket:
+    """Elementwise-max bucket covering every problem in the list."""
+    buckets = [bucket_of(p) for p in problems]
+    return tuple(max(b[d] for b in buckets) for d in range(4))  # type: ignore[return-value]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PackedProblem:
+    """Frozen, padded, f32 dense problem — the engine's unit of work.
+
+    The numpy arrays are read-only; device (jnp) copies are built lazily and
+    cached on the instance, so one packed problem pays one host→device
+    transfer no matter how many solves reuse it."""
+
+    durations: np.ndarray  # [Tb, Nb] f32
+    cores: np.ndarray  # [Tb] i32 (≥ 1)
+    data: np.ndarray  # [Tb] f32
+    feasible: np.ndarray  # [Tb, Nb] bool
+    release: np.ndarray  # [Tb] f32
+    pred_matrix: np.ndarray  # [Tb, Pb] i32, -1 padded
+    dtr: np.ndarray  # [Nb, Nb] f32, +INF for dead links
+    init_free: np.ndarray  # [Nb, Cb] f32, +INF core padding
+    node_cores: np.ndarray  # [Nb] i32
+    usage_fixed: np.ndarray  # [Tb] f32
+    usage_weighted: np.ndarray  # [Tb, Nb] f32
+    bucket: Bucket
+    num_tasks: int  # real tasks (≤ bucket[0])
+    num_nodes: int  # real nodes (≤ bucket[1])
+    cmax: int  # modeled core window (≤ bucket[2])
+    dtype: str = "float32"
+    fingerprint: str | None = None
+    _device: dict[str, Any] | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+
+    def numpy_arrays(self) -> dict[str, np.ndarray]:
+        """The fitness-core array dict (host copies, read-only views)."""
+        return {k: getattr(self, k) for k in FITNESS_ARRAY_KEYS}
+
+    @property
+    def nbytes(self) -> int:
+        """Host bytes held by the padded arrays (the cached device copies,
+        once built, occupy roughly the same again)."""
+        return sum(getattr(self, k).nbytes for k in FITNESS_ARRAY_KEYS)
+
+    def device_arrays(self) -> dict[str, Any]:
+        """jnp copies of :meth:`numpy_arrays`, transferred once and cached."""
+        if self._device is None:
+            import jax.numpy as jnp
+
+            object.__setattr__(
+                self,
+                "_device",
+                {k: jnp.asarray(getattr(self, k)) for k in FITNESS_ARRAY_KEYS},
+            )
+        return dict(self._device)  # type: ignore[arg-type]
+
+
+def _build(
+    problem: ScheduleProblem,
+    bucket: Bucket,
+    fingerprint: str | None,
+    core_cap: int | None = None,
+) -> PackedProblem:
+    Tb, Nb, Cb, Pb = bucket
+    T, N = problem.num_tasks, problem.num_nodes
+    maxp = problem.pred_matrix.shape[1]
+    if T > Tb or N > Nb or maxp > Pb:
+        raise ValueError(f"problem {T}x{N} (maxp={maxp}) exceeds bucket {bucket}")
+    caps = problem.node_cores.astype(np.int64)
+    if int(problem.cores.max(initial=1)) > Cb:
+        raise ValueError(f"task core request exceeds bucket cmax {Cb}")
+
+    durations = np.zeros((Tb, Nb), np.float32)
+    durations[:T, :N] = problem.durations
+    cores = np.ones(Tb, np.int32)
+    cores[:T] = np.maximum(problem.cores, 1.0).astype(np.int32)
+    data = np.zeros(Tb, np.float32)
+    data[:T] = problem.data
+    feasible = np.zeros((Tb, Nb), bool)
+    feasible[:T, :N] = problem.feasible
+    feasible[T:, 0] = True  # padded tasks live on node 0
+    release = np.zeros(Tb, np.float32)
+    release[:T] = problem.release
+    pred_matrix = -np.ones((Tb, Pb), np.int32)
+    pred_matrix[:T, :maxp] = problem.pred_matrix
+    dtr = np.ones((Nb, Nb), np.float32)
+    dtr[:N, :N] = np.where(np.isfinite(problem.dtr), problem.dtr, _INF)
+    init_free = np.full((Nb, Cb), _INF, np.float32)
+    for i, c in enumerate(caps):
+        init_free[i, : min(int(c), Cb)] = 0.0
+    node_cores = np.ones(Nb, np.int32)
+    node_cores[:N] = np.minimum(np.maximum(caps, 1), Cb)
+    usage_fixed = np.zeros(Tb, np.float32)
+    usage_fixed[:T] = problem.usage
+    usage_weighted = np.zeros((Tb, Nb), np.float32)
+    usage_weighted[:T, :N] = problem.weighted_usage()
+    arrays = {
+        "durations": durations,
+        "cores": cores,
+        "data": data,
+        "feasible": feasible,
+        "release": release,
+        "pred_matrix": pred_matrix,
+        "dtr": dtr,
+        "init_free": init_free,
+        "node_cores": node_cores,
+        "usage_fixed": usage_fixed,
+        "usage_weighted": usage_weighted,
+    }
+    for a in arrays.values():
+        a.setflags(write=False)
+    return PackedProblem(
+        bucket=bucket,
+        num_tasks=T,
+        num_nodes=N,
+        cmax=min(_cmax_of(problem, core_cap), Cb),
+        fingerprint=fingerprint,
+        **arrays,
+    )
+
+
+@dataclasses.dataclass
+class PackStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def snapshot(self) -> tuple[int, int, int]:
+        return (self.hits, self.misses, self.evictions)
+
+    def to_json(self) -> dict[str, Any]:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "hit_rate": self.hit_rate,
+        }
+
+
+class PackCache:
+    """Entry- *and* byte-bounded LRU of pack key → :class:`PackedProblem`.
+
+    Lives *alongside* the service's solve cache: a submission that misses
+    the solve cache (new weights, new technique) but names a
+    content-identical problem still reuses the padded arrays and their
+    device buffers.  ``max_bytes`` bounds retained *host* bytes (cached
+    device copies roughly double the true footprint — sized accordingly);
+    a single pack larger than the whole budget is served uncached rather
+    than pinning the budget."""
+
+    def __init__(self, capacity: int = 256, max_bytes: int = 1 << 30) -> None:
+        if capacity < 1:
+            raise ValueError("pack cache capacity must be >= 1")
+        if max_bytes < 1:
+            raise ValueError("pack cache max_bytes must be >= 1")
+        self.capacity = capacity
+        self.max_bytes = max_bytes
+        self._entries: OrderedDict[tuple, PackedProblem] = OrderedDict()
+        self._bytes = 0
+        self.stats = PackStats()
+
+    def get_or_build(self, key: tuple, builder: Callable[[], PackedProblem]) -> PackedProblem:
+        packed = self._entries.get(key)
+        if packed is not None:
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return packed
+        self.stats.misses += 1
+        packed = builder()
+        size = packed.nbytes
+        if size > self.max_bytes:
+            return packed  # too large to retain — build-and-release
+        self._entries[key] = packed
+        self._bytes += size
+        while len(self._entries) > self.capacity or self._bytes > self.max_bytes:
+            _, evicted = self._entries.popitem(last=False)
+            self._bytes -= evicted.nbytes
+            self.stats.evictions += 1
+        return packed
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._bytes = 0
+
+    @property
+    def retained_bytes(self) -> int:
+        return self._bytes
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+_PACK_CACHE = PackCache(
+    int(os.environ.get("REPRO_PACK_CACHE_CAPACITY", "256")),
+    int(os.environ.get("REPRO_PACK_CACHE_MAX_BYTES", str(1 << 30))),
+)
+
+
+def pack_cache() -> PackCache:
+    """The process-wide pack LRU (every :func:`pack` call flows through it)."""
+    return _PACK_CACHE
+
+
+def pack(
+    problem: ScheduleProblem,
+    bucket: Bucket | None = None,
+    *,
+    core_cap: int | None = None,
+    pad: bool = True,
+    use_cache: bool = True,
+) -> PackedProblem:
+    """The canonical packing entry point.
+
+    ``bucket=None`` picks the problem's pow2 bucket (``pad=False``: its
+    exact shapes — the legacy unpadded layout).  Memoized by
+    ``(fingerprint, bucket, core_cap)``; pass ``use_cache=False`` to force a
+    rebuild (tests)."""
+    if bucket is None:
+        bucket = bucket_of(problem, core_cap) if pad else exact_bucket(problem, core_cap)
+    if not use_cache:
+        return _build(problem, bucket, None, core_cap)
+    fingerprint = problem_fingerprint(problem)
+    key = (fingerprint, bucket, core_cap)
+    return _PACK_CACHE.get_or_build(
+        key, lambda: _build(problem, bucket, fingerprint, core_cap)
+    )
+
+
+def stack_packed(
+    problems: Sequence[ScheduleProblem], bucket: Bucket | None = None
+) -> tuple[dict[str, Any], Bucket]:
+    """Stack padded instances along a leading batch axis → jnp array dict
+    (one shared bucket, one device transfer for the stack)."""
+    import jax.numpy as jnp
+
+    bucket = common_bucket(problems) if bucket is None else bucket
+    packed = [pack(p, bucket) for p in problems]
+    return (
+        {k: jnp.asarray(np.stack([pp.numpy_arrays()[k] for pp in packed])) for k in FITNESS_ARRAY_KEYS},
+        bucket,
+    )
+
+
+# ---- legacy surfaces (served through repro.core.evaluator's warning shims) ---
+
+
+def legacy_jax_arrays(problem: ScheduleProblem, core_cap: int | None = None) -> dict:
+    """Exact-shape jnp array dict + ``cmax`` — the PR 1 packing layout."""
+    packed = pack(problem, core_cap=core_cap, pad=False)
+    out = packed.device_arrays()
+    out["cmax"] = packed.cmax
+    return out
+
+
+def legacy_padded_arrays(problem: ScheduleProblem, bucket: Bucket) -> dict:
+    """Padded numpy array dict for an explicit bucket — the PR 1 layout.
+
+    Returns fresh *writable* copies (the legacy function allocated per
+    call; the canonical cached arrays are read-only)."""
+    return {k: v.copy() for k, v in pack(problem, bucket).numpy_arrays().items()}
+
+
+def legacy_stacked_arrays(
+    problems: Sequence[ScheduleProblem], bucket: Bucket | None = None
+) -> tuple[dict[str, Any], Bucket]:
+    return stack_packed(problems, bucket)

@@ -107,15 +107,19 @@ def population_makespan(
     dtr: jax.Array,
     init_free: jax.Array,
     tile: int | None = None,
+    force: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Dispatch: autotuned Pallas kernel (resident → streamed) when enabled
     and within the VMEM envelope, else the jnp oracle.  ``tile=None`` picks
-    the widest tile that fits."""
+    the widest tile that fits.  ``force=True`` routes through the kernel
+    regardless of the global config (the ``pallas`` engine backend) — the
+    envelope fallback still applies."""
     P, T = assignments.shape
     N = durations.shape[1]
     cmax = init_free.shape[1]
     maxp = pred_matrix.shape[1]
-    choice = _autotune_makespan(P, T, N, cmax, maxp, tile) if _CONFIG.use_pallas else None
+    use = force or _CONFIG.use_pallas
+    choice = _autotune_makespan(P, T, N, cmax, maxp, tile) if use else None
     if choice is not None:
         tile, stream = choice
         pad = (-P) % tile

@@ -10,9 +10,12 @@ that yields a valid schedule:
    weights, options)`` coincide and whose technique advertises a batch fast
    path (registry ``supports_batch`` — the PR 1 ``ga_sweep``) are solved as
    ONE compiled XLA program via :meth:`SolverRegistry.solve_batch`; padded
-   shape buckets (:func:`repro.core.evaluator.bucket_of`) make "coincide"
-   common, not lucky — every 11- and 12-task STGS submission lands in the
-   same bucket;
+   shape buckets (``PackedProblem.bucket`` via :func:`repro.engine.pack`)
+   make "coincide" common, not lucky — every 11- and 12-task STGS submission
+   lands in the same bucket.  Packing here also warms the engine's
+   fingerprint-keyed pack LRU, so a resubmission that misses the *solve*
+   cache (say, new weights) still skips re-padding and the host→device
+   transfer;
 3. **single solve** — everything else routes through
    :func:`repro.core.api.route_problem` (policy or direct), exactly like a
    one-shot Orchestrator run would.
@@ -31,9 +34,10 @@ from repro.core.api import (
     route_problem,
     technique_kwargs,
 )
-from repro.core.evaluator import Schedule, bucket_of
+from repro.core.evaluator import Schedule
 from repro.core.milp import MilpSizeError
 from repro.core.workload_model import ScheduleProblem, canonical_hash
+from repro.engine.packed import bucket_of
 from repro.service.cache import SolveCache
 from repro.service.traces import Submission
 
@@ -78,6 +82,9 @@ class AdmissionBatcher:
             return None
         if self.registry.get(sub.technique).batch_fn is None:
             return None
+        # bucket_of == PackedProblem.bucket without building the arrays; the
+        # batch solve packs grouped members once (memoized by fingerprint,
+        # so same-content resubmissions reuse arrays and device buffers)
         return (
             sub.technique,
             bucket_of(prep.problem),

@@ -42,6 +42,7 @@ from repro.core.api import REGISTRY, SolverRegistry
 from repro.core.simulator import ExecutionReport, execute
 from repro.core.system_model import System
 from repro.core.workload_model import Workload, build_problem
+from repro.engine.packed import PackStats, pack_cache
 from repro.service.admission import AdmissionBatcher, PreparedSubmission
 from repro.service.cache import SolveCache, solve_cache_key
 from repro.service.events import Event, EventLoop
@@ -122,6 +123,10 @@ class ServiceResult:
     records: list[SubmissionRecord]
     event_log: list[dict[str, Any]]
     cache: dict[str, Any]
+    #: delta over the process-global engine pack LRU for this run — NOT part
+    #: of the replay-determinism contract (a second in-process replay hits
+    #: where the first missed, by design)
+    pack_cache: dict[str, Any]
     solver_calls: int
     batched_groups: int
     batched_submissions: int
@@ -156,6 +161,7 @@ class ServiceResult:
                 len(completed) / self.clock_end if self.clock_end > 0 else 0.0
             ),
             "cache": dict(self.cache),
+            "pack_cache": dict(self.pack_cache),
             "solver_calls": self.solver_calls,
             "batched_groups": self.batched_groups,
             "batched_submissions": self.batched_submissions,
@@ -349,6 +355,7 @@ class SchedulingService:
 
     def run(self, trace: Trace) -> ServiceResult:
         wall0 = time.perf_counter()
+        pack_stats0 = pack_cache().stats.snapshot()
         for sub in trace.submissions:
             if sub.id in self._submissions:
                 # ids key every lifecycle structure; a silent overwrite
@@ -387,12 +394,16 @@ class SchedulingService:
                 raise ValueError(f"unknown event kind {ev.kind!r}")
             handler(self, ev)
 
+        delta = PackStats(
+            *(b - a for a, b in zip(pack_stats0, pack_cache().stats.snapshot()))
+        )
         return ServiceResult(
             trace=trace.name,
             config=self.config,
             records=[self.records[s.id] for s in trace.submissions],
             event_log=list(self.loop.log),
             cache=self.cache.stats.to_json(),
+            pack_cache=delta.to_json(),
             solver_calls=self.solver_calls,
             batched_groups=self.batched_groups,
             batched_submissions=self.batched_submissions,

@@ -13,8 +13,12 @@ solve the service performs:
 * **health** — ``node-failure`` / ``node-recovery`` events flip nodes out
   of / into the feasibility mask of future problems (failed nodes are never
   removed — indices stay stable for the monitor and the cache);
-* **reserved windows** — per-node occupancy frontiers from dispatched work.
-  A new submission landing on a busy node waits for the frontier (one
+* **reserved windows** — per-node occupancy frontiers from dispatched work,
+  accumulated by the shared engine simulator's occupancy fold
+  (:func:`repro.engine.sim.accumulate_occupancy`) over the truth execution's
+  per-task windows — the frontiers are views over the same simulator state
+  that produced the timing, not a second bookkeeping implementation.  A new
+  submission landing on a busy node waits for the frontier (one
   deterministic queueing delay per dispatch), which is what turns 200 near
   simultaneous tenants into a meaningful p95 turnaround instead of 200
   independent simulations.
@@ -31,6 +35,7 @@ from repro.core.monitor import MonitorState
 from repro.core.simulator import ExecutionReport
 from repro.core.system_model import System
 from repro.core.workload_model import ScheduleProblem
+from repro.engine.sim import accumulate_occupancy
 
 
 @dataclasses.dataclass
@@ -56,9 +61,20 @@ class ContinuumState:
         self._index = {name: i for i, name in enumerate(self.node_names)}
         self.true_factors = {name: 1.0 for name in self.node_names}
         self.up = {name: True for name in self.node_names}
-        self.frontier = {name: 0.0 for name in self.node_names}
-        self.busy_seconds = {name: 0.0 for name in self.node_names}
+        # occupancy state, indexed like the problem's node axis; the dict
+        # views below are derived from these arrays
+        self._frontier = np.zeros(len(self.node_names))
+        self._busy = np.zeros(len(self.node_names))
         self.windows = 0  # reserved windows committed so far
+
+    @property
+    def frontier(self) -> dict[str, float]:
+        """Name-keyed view over the per-node occupancy frontier."""
+        return {n: float(self._frontier[i]) for i, n in enumerate(self.node_names)}
+
+    @property
+    def busy_seconds(self) -> dict[str, float]:
+        return {n: float(self._busy[i]) for i, n in enumerate(self.node_names)}
 
     # ---- model refresh (Fig. 4 step 1) --------------------------------------
     def effective_system(self) -> System:
@@ -93,17 +109,19 @@ class ContinuumState:
         The whole submission shifts by one delay (per-node shifts could break
         cross-node dependency timing), so the bound is the latest frontier
         among the nodes it uses."""
-        used = {self.node_names[int(i)] for i in np.unique(assignment)}
-        latest = max((self.frontier[n] for n in used), default=now)
+        used = np.unique(assignment)
+        latest = float(self._frontier[used].max()) if used.size else now
         return max(0.0, latest - now)
 
     def reserve(self, report: ExecutionReport, t0: float) -> None:
         """Commit an execution's observed per-task windows (absolute time
-        ``t0 + log``) into the node frontiers."""
-        for log in report.logs:
-            name = self.node_names[log.node]
-            self.frontier[name] = max(self.frontier[name], t0 + log.finish)
-            self.busy_seconds[name] += log.finish - log.start
+        ``t0 + log``) into the node frontiers — one vectorized occupancy
+        fold shared with the engine simulator."""
+        if report.logs:
+            nodes = np.array([log.node for log in report.logs], dtype=np.int64)
+            starts = t0 + np.array([log.start for log in report.logs])
+            finishes = t0 + np.array([log.finish for log in report.logs])
+            accumulate_occupancy(self._frontier, self._busy, nodes, starts, finishes)
         self.windows += len(report.logs)
 
     # ---- feedback + trace events --------------------------------------------
@@ -147,8 +165,8 @@ class ContinuumState:
                 up=self.up[n],
                 true_factor=self.true_factors[n],
                 learned_factor=self.monitor.factors.get(n, 1.0),
-                frontier=self.frontier[n],
-                busy_seconds=self.busy_seconds[n],
+                frontier=float(self._frontier[i]),
+                busy_seconds=float(self._busy[i]),
             )
-            for n in self.node_names
+            for i, n in enumerate(self.node_names)
         ]

@@ -1,5 +1,6 @@
-"""The PEP 562 shim in ``repro.core.solver``: every legacy name still
-re-exports from ``repro.core.api`` (same objects), each access emits a
+"""The PEP 562 shims: every legacy name still re-exports from its new
+home (``repro.core.solver`` → ``repro.core.api``; the packing helpers in
+``repro.core.evaluator`` → ``repro.engine.packed``), each access emits a
 ``DeprecationWarning``, and the surface is discoverable via ``dir()``."""
 
 import warnings
@@ -55,3 +56,58 @@ def test_unknown_attribute_raises_attribute_error():
         solver.does_not_exist
     with pytest.raises(AttributeError):
         solver._DISPATCH  # the PR 2 removal stays removed
+
+
+# -----------------------------------------------------------------------------
+# repro.core.evaluator packing shims (PR 4: packing moved to repro.engine)
+# -----------------------------------------------------------------------------
+
+EVALUATOR_SHIMS = (
+    "problem_to_jax",
+    "problem_to_numpy_padded",
+    "stack_problems",
+    "bucket_of",
+)
+
+
+@pytest.mark.parametrize("name", EVALUATOR_SHIMS)
+def test_each_evaluator_packing_shim_warns(name):
+    import repro.core.evaluator as evaluator
+
+    with pytest.warns(
+        DeprecationWarning,
+        match=rf"repro\.core\.evaluator\.{name} is deprecated.*repro\.engine",
+    ):
+        obj = getattr(evaluator, name)
+    assert callable(obj)
+
+
+def test_evaluator_shims_are_live_engine_surfaces():
+    """The shimmed callables do the same work as the engine API (one packed
+    representation behind both surfaces)."""
+    import numpy as np
+
+    import repro.core.evaluator as evaluator
+    from repro.core import build_problem, mri_system, mri_workload
+    from repro.engine import bucket_of, pack
+
+    problem = build_problem(mri_system(), mri_workload())
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy_bucket = evaluator.bucket_of(problem)
+        jp = evaluator.problem_to_jax(problem)
+        padded = evaluator.problem_to_numpy_padded(problem, legacy_bucket)
+    assert legacy_bucket == bucket_of(problem)
+    assert jp["cmax"] == pack(problem, pad=False).cmax
+    packed = pack(problem, legacy_bucket)
+    np.testing.assert_array_equal(padded["durations"], packed.durations)
+    # legacy contract: per-call writable arrays (the cached ones are frozen)
+    assert padded["durations"].flags.writeable
+    assert not packed.durations.flags.writeable
+
+
+def test_evaluator_unknown_attribute_raises():
+    import repro.core.evaluator as evaluator
+
+    with pytest.raises(AttributeError, match="no attribute"):
+        evaluator.does_not_exist

@@ -27,8 +27,8 @@ from repro.core import (
     synthetic_system,
     verify_schedule,
 )
-from repro.core import evaluator
-from repro.core.evaluator import make_fitness_fn, problem_to_jax
+from repro.core.evaluator import make_fitness_fn
+from repro.engine import bucket_of, fitness_cache_sizes, pack
 from repro.core.system_model import make_system
 from repro.core.workload_model import random_layered_workflow, synthetic_workload
 from repro.kernels.makespan import population_makespan_pallas
@@ -91,17 +91,21 @@ def test_rank_select_matches_stable_sort(seed, width):
 
 @pytest.mark.parametrize("name,problem", _problems())
 def test_jnp_pallas_numpy_bit_for_bit(name, problem):
-    jp = problem_to_jax(problem)
+    packed = pack(problem)  # the canonical bucket-padded representation
+    jp = packed.device_arrays()
     rng = np.random.default_rng(hash(name) % 2**31)
     pop = 8
     A = rng.integers(0, problem.num_nodes, (pop, problem.num_tasks))
+    # padded task columns pin to node 0 (the engine pads internally too)
+    A_pad = np.zeros((pop, packed.bucket[0]), np.int64)
+    A_pad[:, : problem.num_tasks] = A
 
     _, mk_jnp = make_fitness_fn(problem)(A)
     mk_jnp = np.asarray(mk_jnp)
 
     for stream in (False, True):
         mk_k, viol_k = population_makespan_pallas(
-            jnp.asarray(A, jnp.int32),
+            jnp.asarray(A_pad, jnp.int32),
             jp["durations"], jp["cores"], jp["data"], jp["feasible"],
             jp["release"], jp["pred_matrix"], jp["dtr"], jp["init_free"],
             tile=4, stream=stream,
@@ -144,29 +148,29 @@ def test_one_compile_per_bucket_table9_sizes():
             probs.append(build_problem(system, workload))
         return probs
 
-    compiled_at_start = evaluator.fitness_cache_sizes()[1]
+    compiled_at_start = fitness_cache_sizes()[1]
     probs_a = family(0)
     pops_a = [np.random.default_rng(1).integers(0, p.num_nodes, (4, p.num_tasks)) for p in probs_a]
-    buckets = {evaluator.bucket_of(p) for p in probs_a}
+    buckets = {bucket_of(p) for p in probs_a}
     evaluate_population_batch(probs_a, pops_a)
-    compiled_after_first = evaluator.fitness_cache_sizes()[1]
+    compiled_after_first = fitness_cache_sizes()[1]
     assert compiled_after_first - compiled_at_start <= len(buckets)
 
     # fresh candidate populations over instances with the same buckets →
     # pure jit cache hits, zero new XLA compiles
     pops_a2 = [np.random.default_rng(2).integers(0, p.num_nodes, (4, p.num_tasks)) for p in probs_a]
     evaluate_population_batch(probs_a, pops_a2)
-    assert evaluator.fitness_cache_sizes()[1] == compiled_after_first
+    assert fitness_cache_sizes()[1] == compiled_after_first
 
     # a second scenario family only compiles for buckets it hasn't seen
     probs_b = family(1)
     pops_b = [np.random.default_rng(3).integers(0, p.num_nodes, (4, p.num_tasks)) for p in probs_b]
-    new_buckets = {evaluator.bucket_of(p) for p in probs_b} - buckets
+    new_buckets = {bucket_of(p) for p in probs_b} - buckets
     evaluate_population_batch(probs_b, pops_b)
-    assert evaluator.fitness_cache_sizes()[1] - compiled_after_first <= len(new_buckets)
+    assert fitness_cache_sizes()[1] - compiled_after_first <= len(new_buckets)
     # and re-running it is again compile-free
     evaluate_population_batch(probs_b, pops_b)
-    assert evaluator.fitness_cache_sizes()[1] - compiled_after_first <= len(new_buckets)
+    assert fitness_cache_sizes()[1] - compiled_after_first <= len(new_buckets)
 
 
 def test_ga_sweep_valid_schedules():

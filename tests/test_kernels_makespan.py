@@ -7,7 +7,7 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core import Workload, build_problem, evaluate_assignment, mri_system, mri_workload, random_layered_workflow, synthetic_system
-from repro.core.evaluator import problem_to_jax
+from repro.engine import pack
 from repro.kernels import ops
 from repro.kernels.makespan import population_makespan_pallas
 from repro.kernels.ref import population_makespan_ref
@@ -20,7 +20,7 @@ def _jp_and_prob(num_tasks, num_nodes, seed):
         system = synthetic_system(num_nodes, seed=seed)
         wf = random_layered_workflow(num_tasks, seed=seed, max_cores=8)
         prob = build_problem(system, Workload((wf,)))
-    return problem_to_jax(prob), prob
+    return pack(prob, pad=False).device_arrays(), prob
 
 
 @pytest.mark.parametrize("num_tasks,num_nodes,seed,pop", [
