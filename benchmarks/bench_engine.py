@@ -15,87 +15,18 @@ not TPU timing, so it runs a reduced population).
 
 from __future__ import annotations
 
-import json
-import time
 from pathlib import Path
-
-import numpy as np
-
-
-def _time(fn, *args, iters=3, warmup=1):
-    import jax
-
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = jax.block_until_ready(fn(*args))
-    del out
-    return (time.perf_counter() - t0) / iters * 1e6
-
-
-#: (label, tasks, nodes, population) — three distinct pow2 shape buckets
-SHAPES = [
-    ("small", 24, 4, 64),
-    ("medium", 96, 8, 64),
-    ("large", 384, 16, 32),
-]
-
-#: backend → (population divisor, iters) — pallas interpret mode is a
-#: functional reference, not a throughput claim, so it gets a reduced load
-BACKENDS = {"jax": (1, 3), "oracle": (8, 1), "pallas": (16, 1)}
 
 
 def run(out_path: str | Path = "BENCH_engine.json") -> list[tuple]:
-    from repro.core import Workload, build_problem, synthetic_system
-    from repro.core.workload_model import random_layered_workflow
-    from repro.engine import ENGINES, pack
+    """Since the campaign redesign this is a thin wrapper over the
+    ``engine`` built-in campaign (shape × backend grid through the
+    ``engine-bench`` runner) — same row names, same JSON payload; the shape
+    and backend-load constants live in :mod:`repro.campaigns.builtin`
+    (``ENGINE_SHAPES`` / ``ENGINE_BACKENDS``)."""
+    from repro.campaigns import builtin
 
-    rows: list[tuple] = []
-    payload: dict[str, dict] = {}
-    rng = np.random.default_rng(0)
-    for label, tasks, nodes, pop in SHAPES:
-        system = synthetic_system(nodes, seed=nodes)
-        wf = random_layered_workflow(tasks, seed=tasks, max_cores=8, feature_pool=("F1",))
-        problem = build_problem(system, Workload((wf,)))
-        # warm the pack cache once; the device backends then share it (the
-        # single-instance path packs exact shapes — that is what we measure)
-        bucket = pack(problem, pad=False).bucket
-        for backend, (divisor, iters) in BACKENDS.items():
-            p = max(pop // divisor, 2)
-            A = rng.integers(0, problem.num_nodes, (p, problem.num_tasks))
-            if backend == "pallas" and tasks * nodes > 2048:
-                # interpret-mode wall time grows ~linearly with T; keep the
-                # large bucket's functional check bounded
-                p = 2
-                A = A[:p]
-            fitness = ENGINES.get(backend).population_fitness(problem)
-            if backend == "oracle":
-                for _ in range(1):
-                    fitness(A)  # warm caches (pred_csr etc.)
-                t0 = time.perf_counter()
-                fitness(A)
-                us = (time.perf_counter() - t0) * 1e6
-            else:
-                us = _time(fitness, A, iters=iters, warmup=1)
-            cand_per_s = p / (us / 1e6)
-            name = f"engine_{label}_{backend}"
-            derived = (
-                f"bucket={'x'.join(str(b) for b in bucket)};pop={p};"
-                f"cand_per_s={cand_per_s:.1f}"
-            )
-            rows.append((name, us, derived))
-            payload[name] = {
-                "us_per_call": float(us),
-                "bucket": list(bucket),
-                "population": int(p),
-                "candidates_per_second": float(cand_per_s),
-            }
-    from repro.engine import pack_cache
-
-    payload["pack_cache"] = pack_cache().stats.to_json()
-    Path(out_path).write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
-    return rows
+    return builtin.run_engine_bench_export(out_path=out_path)
 
 
 if __name__ == "__main__":

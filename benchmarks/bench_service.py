@@ -11,8 +11,6 @@ service-level perf trajectory next to the Table IX one.
 
 from __future__ import annotations
 
-import json
-import time
 from pathlib import Path
 
 NUM_SUBMISSIONS = 200
@@ -24,51 +22,14 @@ def run(
     seed: int = 0,
     out_path: str | Path = "BENCH_service.json",
 ) -> list[tuple]:
-    from repro.service import ServiceConfig, generate_trace, serve_trace
+    """Since the campaign redesign this is a thin wrapper over the
+    ``service`` built-in campaign (the ``trace`` runner with the benchmark's
+    rate/burst parameters) — same summary fields, same JSON payload."""
+    from repro.campaigns import builtin
 
-    # rate/burst sized so admission windows actually coalesce submissions
-    # (batched GA solves) while the trace still spans drift/failure events
-    trace = generate_trace(
-        num_submissions, seed=seed, rate=4.0, burst_prob=0.15, burst_size=8,
-        node_events=True,
+    return builtin.run_service_bench(
+        num_submissions, seed=seed, out_path=out_path
     )
-    t0 = time.perf_counter()
-    result = serve_trace(
-        trace, config=ServiceConfig(batch_window=0.5, max_batch=32, seed=seed)
-    )
-    wall = time.perf_counter() - t0
-    s = result.summary()
-
-    payload = {
-        "num_submissions": num_submissions,
-        "seed": seed,
-        "wall_seconds": wall,
-        "summary": {k: v for k, v in s.items() if k != "nodes"},
-    }
-    Path(out_path).write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
-
-    ta = s.get("turnaround", {})
-    rows = [
-        ("service_completed", wall * 1e6,
-         f"completed={s['completed']}/{s['submissions']};rejected={s['rejected']}"),
-        ("service_throughput", wall * 1e6 / max(s["completed"], 1),
-         f"per_wall_s={s['throughput_per_wall_s']:.2f};"
-         f"per_virtual_s={s['throughput_per_virtual_s']:.3f}"),
-        ("service_turnaround", float("nan"),
-         f"p50={ta.get('p50', float('nan')):.2f};"
-         f"p95={ta.get('p95', float('nan')):.2f};"
-         f"mean={ta.get('mean', float('nan')):.2f}"),
-        ("service_cache", float("nan"),
-         f"hit_rate={s['cache']['hit_rate']:.3f};hits={s['cache']['hits']};"
-         f"misses={s['cache']['misses']};solver_calls={s['solver_calls']}"),
-        ("service_pack_cache", float("nan"),
-         f"hit_rate={s['pack_cache']['hit_rate']:.3f};"
-         f"hits={s['pack_cache']['hits']};misses={s['pack_cache']['misses']}"),
-        ("service_batching", float("nan"),
-         f"groups={s['batched_groups']};submissions={s['batched_submissions']}"),
-        ("service_events", float("nan"), f"count={s['events']}"),
-    ]
-    return rows
 
 
 if __name__ == "__main__":

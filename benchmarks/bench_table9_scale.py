@@ -10,16 +10,13 @@ is the §Perf "beyond-paper" evidence.  Default sizes cap at 500×500 to keep
 
 from __future__ import annotations
 
-import json
 import time
 from pathlib import Path
 
-import numpy as np
-
-from repro.core import Workload, build_problem, synthetic_system, synthetic_workload
+from repro.core import build_problem, synthetic_system, synthetic_workload
 from repro.core.heuristics import heft
 from repro.core.metaheuristics import ga
-from repro.core.milp import MilpSizeError, solve_milp
+from repro.core.milp import solve_milp
 
 SIZES = [(5, 5), (50, 50), (500, 500)]
 FULL_SIZES = SIZES + [(5000, 5000)]
@@ -63,14 +60,14 @@ def run(full: bool = False, sizes: list[tuple[int, int]] | None = None) -> list[
 
 def run_smoke(out_path: str | Path = "BENCH_table9.json") -> list[tuple]:
     """Small Table IX sizes + machine-readable ``BENCH_table9.json`` so every
-    PR leaves a perf-trajectory data point behind (`benchmarks.run --smoke`)."""
-    rows = run(sizes=SMOKE_SIZES)
-    payload = {
-        name: {"us_per_call": None if us != us else float(us), "derived": derived}
-        for name, us, derived in rows
-    }
-    Path(out_path).write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
-    return rows
+    PR leaves a perf-trajectory data point behind (`benchmarks.run --smoke`).
+
+    Since the campaign redesign this is a thin wrapper over the ``smoke``
+    built-in campaign (:func:`repro.campaigns.builtin.run_smoke`) — same
+    row names, same derived makespans, same JSON payload."""
+    from repro.campaigns import builtin
+
+    return builtin.run_smoke(out_path=out_path)
 
 
 if __name__ == "__main__":

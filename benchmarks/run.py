@@ -10,21 +10,25 @@ reader and kernel microbenches.  Prints ``name,us_per_call,derived`` CSV.
     PYTHONPATH=src python -m benchmarks.run --engine   # per-backend engine
                                                        # throughput
                                                        # → BENCH_engine.json
+    PYTHONPATH=src python -m benchmarks.run --campaign smoke
+                                                       # any campaign (built-in
+                                                       # name or spec file)
+                                                       # → BENCH_campaign.json
     PYTHONPATH=src python -m benchmarks.run --scenario f.json  # time one
                                                        # orchestrated Scenario
 
-``--smoke`` and ``--service`` are the CI modes: ``--smoke`` runs the small
-Table IX scale points into ``BENCH_table9.json``; ``--service`` replays a
-200-submission mixed-family arrival trace through the event-driven
-scheduling service into ``BENCH_service.json`` (throughput, p50/p95
-turnaround, cache hit rate) — together they leave a per-PR perf trajectory.
+``--smoke``, ``--service``, ``--engine`` and ``--campaign smoke`` are the CI
+modes; each is a thin built-in campaign (:mod:`repro.campaigns.builtin`)
+whose export stays byte-compatible with the pre-campaign harness — together
+they leave a per-PR perf trajectory (``BENCH_table9.json`` /
+``BENCH_service.json`` / ``BENCH_engine.json`` / ``BENCH_campaign.json``).
 ``--scenario`` times a declarative :class:`repro.core.api.Scenario` end to
 end through the Fig. 4 orchestrator.
 """
 
 from __future__ import annotations
 
-import sys
+import argparse
 import time
 
 
@@ -45,41 +49,65 @@ def _run_scenario(path: str) -> None:
     print(f"scenario_{scenario.name},{us:.0f},{derived}")
 
 
-def main() -> None:
-    full = "--full" in sys.argv
-    if "--scenario" in sys.argv:
-        idx = sys.argv.index("--scenario") + 1
-        if idx >= len(sys.argv):
-            raise SystemExit("usage: python -m benchmarks.run --scenario <scenario.json>")
-        _run_scenario(sys.argv[idx])
-        return
-    if "--smoke" in sys.argv:
-        from benchmarks import bench_table9_scale
+def _print_suite(name: str, rows_fn) -> None:
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    for row in rows_fn():
+        print(",".join(str(x) for x in row), flush=True)
+    print(f"{name}_suite_total,{(time.perf_counter() - t0) * 1e6:.0f},")
 
-        print("name,us_per_call,derived")
-        t0 = time.perf_counter()
-        for row in bench_table9_scale.run_smoke():
-            print(",".join(str(x) for x in row), flush=True)
-        print(f"table9_smoke_suite_total,{(time.perf_counter() - t0) * 1e6:.0f},")
-        return
-    if "--service" in sys.argv:
-        from benchmarks import bench_service
 
-        print("name,us_per_call,derived")
-        t0 = time.perf_counter()
-        for row in bench_service.run():
-            print(",".join(str(x) for x in row), flush=True)
-        print(f"service_suite_total,{(time.perf_counter() - t0) * 1e6:.0f},")
-        return
-    if "--engine" in sys.argv:
-        from benchmarks import bench_engine
+def main(argv: list[str] | None = None) -> None:
+    parser = argparse.ArgumentParser(
+        prog="benchmarks.run",
+        description="paper-table benchmark harness (CSV to stdout, "
+        "BENCH_*.json artifacts for the CI lanes)",
+    )
+    mode = parser.add_mutually_exclusive_group()
+    mode.add_argument("--smoke", action="store_true",
+                      help="small Table IX sizes → BENCH_table9.json")
+    mode.add_argument("--service", action="store_true",
+                      help="200-submission service trace → BENCH_service.json")
+    mode.add_argument("--engine", action="store_true",
+                      help="per-backend engine throughput → BENCH_engine.json")
+    mode.add_argument("--campaign", metavar="NAME|SPEC",
+                      help="run a campaign (built-in name or spec JSON file) "
+                      "→ BENCH_campaign.json")
+    mode.add_argument("--scenario", metavar="SPEC",
+                      help="time one orchestrated Scenario JSON end to end")
+    parser.add_argument("--full", action="store_true",
+                        help="default set only: add the 5000x5000 scale row")
+    args = parser.parse_args(argv)
 
-        print("name,us_per_call,derived")
-        t0 = time.perf_counter()
-        for row in bench_engine.run():
-            print(",".join(str(x) for x in row), flush=True)
-        print(f"engine_suite_total,{(time.perf_counter() - t0) * 1e6:.0f},")
+    if args.scenario:
+        _run_scenario(args.scenario)
         return
+    if args.smoke:
+        from repro.campaigns import builtin
+
+        _print_suite("table9_smoke", builtin.run_smoke)
+        return
+    if args.service:
+        from repro.campaigns import builtin
+
+        _print_suite("service", builtin.run_service_bench)
+        return
+    if args.engine:
+        from repro.campaigns import builtin
+
+        _print_suite("engine", builtin.run_engine_bench_export)
+        return
+    if args.campaign:
+        from repro.campaigns import builtin
+
+        run = builtin.run_named_campaign(args.campaign)
+        print("name,us_per_call,derived")
+        for row in run.rows:
+            print(",".join(str(x) for x in row), flush=True)
+        print(f"campaign_{run.campaign.name}_suite_total,"
+              f"{run.wall_seconds * 1e6:.0f},")
+        return
+
     from benchmarks import (
         bench_autoshard_calibration,
         bench_fig11_quality,
@@ -91,8 +119,8 @@ def main() -> None:
 
     suites = [
         ("table6", lambda: bench_table6_mri.run()),
-        ("fig11", lambda: bench_fig11_quality.run(full=full)),
-        ("table9", lambda: bench_table9_scale.run(full=full)),
+        ("fig11", lambda: bench_fig11_quality.run(full=args.full)),
+        ("table9", lambda: bench_table9_scale.run(full=args.full)),
         ("kernels", lambda: bench_kernels.run()),
         ("roofline", lambda: bench_roofline.run()),
         ("autoshard_calibration", lambda: bench_autoshard_calibration.run()),

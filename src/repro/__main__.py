@@ -15,6 +15,13 @@
                                                     [--batch-window 0.25]
                                                     [--max-batch 32]
                                                     [--records]
+    PYTHONPATH=src python -m repro campaign expand (spec.json | smoke|table9|…)
+    PYTHONPATH=src python -m repro campaign run (spec.json | builtin-name)
+                                                [--runner inline|service]
+                                                [--out results.json]
+                                                [--csv results.csv]
+                                                [--vs milp] [--metric makespan]
+    PYTHONPATH=src python -m repro campaign report results.json [--vs milp]
 
 ``run`` loads a declarative :class:`repro.core.api.Scenario`, drives the
 :class:`repro.core.api.Orchestrator` closed loop, and prints (optionally
@@ -22,7 +29,12 @@ saves) the :class:`repro.core.api.RunResult` summary JSON.  ``techniques``
 lists the solver registry with capability metadata.  ``trace`` generates a
 seeded multi-tenant arrival trace (:mod:`repro.service.traces`); ``serve``
 replays one through the event-driven :class:`repro.service.SchedulingService`
-and prints throughput / turnaround / cache metrics.
+and prints throughput / turnaround / cache metrics.  ``campaign`` is the
+multi-scenario experiment API (:mod:`repro.campaigns`): ``expand`` previews
+the deterministic cell grid of a spec (file or built-in name), ``run``
+executes it through the pluggable runner and can save the typed columnar
+:class:`repro.campaigns.ResultSet` as JSON/CSV, and ``report`` recomputes
+the Table IX-style optimality-gap table from saved results.
 """
 
 from __future__ import annotations
@@ -31,6 +43,59 @@ import argparse
 import json
 import sys
 from pathlib import Path
+
+
+def _resolve_campaign(spec: str):
+    from repro.campaigns import resolve_campaign
+
+    try:
+        return resolve_campaign(spec)
+    except ValueError as e:
+        raise SystemExit(str(e)) from None
+
+
+def _campaign_main(args) -> int:
+    from repro.campaigns import ResultSet, run_campaign
+
+    if args.campaign_cmd == "expand":
+        campaign = _resolve_campaign(args.spec)
+        cells = campaign.expand()
+        for cell in cells:
+            mark = f"  [skip:{cell.skipped}]" if cell.skipped else ""
+            print(f"c{cell.index:04d}  {cell.label()}{mark}")
+        skipped = sum(1 for c in cells if c.skipped)
+        print(f"# {len(cells)} cells ({skipped} skipped), "
+              f"runner={campaign.runner}")
+        return 0
+
+    if args.campaign_cmd == "report":
+        rs = ResultSet.load(args.results)
+        rep = (rs.deviation_vs(args.vs, metric=args.metric) if args.per_cell
+               else rs.deviation_report(args.vs, metric=args.metric))
+        print(rep.to_csv(), end="")
+        return 0
+
+    campaign = _resolve_campaign(args.spec)
+    try:
+        rs = run_campaign(campaign, runner=args.runner)
+    except (KeyError, ValueError) as e:
+        # unknown runner / unsolvable spec are user errors, not tracebacks
+        raise SystemExit(str(e).strip('"')) from None
+    stats = rs.meta.get("stats", {})
+    print(f"# campaign {campaign.name}: {len(rs)} rows", file=sys.stderr)
+    for k in ("solver_calls", "dedup_hits", "batched_groups", "skipped"):
+        if k in stats:
+            print(f"#   {k}={stats[k]}", file=sys.stderr)
+    print(rs.to_csv(), end="")
+    if args.out:
+        rs.save(args.out)
+    if args.csv:
+        rs.save_csv(args.csv)
+    vs = None if args.vs in ("none", "") else args.vs
+    if vs and rs.baseline_present(vs):
+        print(f"# deviation vs {vs} ({args.metric}):")
+        print(rs.deviation_report(vs, metric=args.metric).to_csv(), end="")
+    return 0
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -78,7 +143,38 @@ def main(argv: list[str] | None = None) -> int:
     serve_p.add_argument("--records", action="store_true",
                          help="include per-submission records in the output")
 
+    camp_p = sub.add_parser("campaign", help="declarative multi-scenario "
+                            "experiments (repro.campaigns)")
+    csub = camp_p.add_subparsers(dest="campaign_cmd", required=True)
+
+    cexp = csub.add_parser("expand", help="preview a campaign's cell grid")
+    cexp.add_argument("spec", help="campaign spec JSON file or built-in name")
+
+    crun = csub.add_parser("run", help="execute a campaign")
+    crun.add_argument("spec", help="campaign spec JSON file or built-in name")
+    crun.add_argument("--runner", help="override the spec's runner "
+                      "(inline | service | ...)")
+    crun.add_argument("--out", help="save the columnar ResultSet JSON here")
+    crun.add_argument("--csv", help="save the ResultSet as CSV here")
+    crun.add_argument("--vs", default="milp",
+                      help="exact baseline technique for the gap report "
+                      "(default milp; 'none' disables)")
+    crun.add_argument("--metric", default="makespan",
+                      help="metric column for the gap report")
+
+    crep = csub.add_parser("report", help="optimality-gap report from saved "
+                           "ResultSet JSON")
+    crep.add_argument("results", help="path to a ResultSet JSON "
+                      "(campaign run --out)")
+    crep.add_argument("--vs", default="milp", help="exact baseline technique")
+    crep.add_argument("--metric", default="makespan")
+    crep.add_argument("--per-cell", action="store_true",
+                      help="print per-cell gaps instead of the aggregate")
+
     args = parser.parse_args(argv)
+
+    if args.cmd == "campaign":
+        return _campaign_main(args)
 
     if args.cmd == "trace":
         from repro.service import generate_trace

@@ -1,0 +1,96 @@
+"""`repro.campaigns` — declarative multi-scenario experiments.
+
+The paper's evaluation is comparative (MILP vs heuristics vs metaheuristics
+across workflow families and scales); this package is the API for "run this
+grid and compare":
+
+* :class:`Campaign` (:mod:`~repro.campaigns.spec`) — a JSON-round-trippable
+  grid spec: named/zipped axes × per-axis defaults × include/exclude/skip
+  filters, expanding deterministically into :class:`CampaignCell`s that
+  compile to PR 2 :class:`~repro.core.api.Scenario`s;
+* runners (:mod:`~repro.campaigns.runner`) — ``inline`` (fingerprint-deduped,
+  shape-bucket-batched registry solves) and ``service`` (the grid streamed
+  through the event-driven scheduler as an arrival trace), pluggable via
+  :func:`register_runner`;
+* :class:`ResultSet` (:mod:`~repro.campaigns.results`) — typed columnar
+  results with JSON/CSV round-trip, ``group_by``/``aggregate``, and the
+  Table IX ``deviation_vs("milp")`` optimality-gap report;
+* built-ins (:mod:`~repro.campaigns.builtin`) — the CI lanes (``smoke`` /
+  ``table9`` / ``service`` / ``engine``) as named campaigns with
+  byte-compatible legacy ``BENCH_*.json`` exporters.
+
+Quickstart::
+
+    from repro.campaigns import builtin_campaign, run_campaign
+
+    rs = run_campaign(builtin_campaign("table9"))
+    print(rs.deviation_report("milp").to_csv())
+
+or from the CLI::
+
+    python -m repro campaign expand examples/campaign_table9.json
+    python -m repro campaign run examples/campaign_table9.json --vs milp
+"""
+
+from repro.campaigns.builtin import (
+    BUILTIN_CAMPAIGNS,
+    CampaignRun,
+    builtin_campaign,
+    engine_campaign,
+    resolve_campaign,
+    run_named_campaign,
+    service_campaign,
+    smoke_campaign,
+    table9_campaign,
+)
+from repro.campaigns.results import Column, ResultSet
+from repro.campaigns.runner import (
+    RUNNERS,
+    effective_options,
+    register_runner,
+    run_campaign,
+    solve_identity,
+)
+from repro.campaigns.spec import (
+    WORKLOAD_FAMILIES,
+    Axis,
+    Campaign,
+    CampaignCell,
+    SkipRule,
+    campaign_from_json,
+    cell_scenario,
+    cell_system,
+    cell_workload,
+    load_campaign,
+    matches,
+)
+
+__all__ = [
+    "BUILTIN_CAMPAIGNS",
+    "Axis",
+    "Campaign",
+    "CampaignCell",
+    "CampaignRun",
+    "Column",
+    "RUNNERS",
+    "ResultSet",
+    "SkipRule",
+    "WORKLOAD_FAMILIES",
+    "builtin_campaign",
+    "campaign_from_json",
+    "cell_scenario",
+    "cell_system",
+    "cell_workload",
+    "effective_options",
+    "engine_campaign",
+    "load_campaign",
+    "matches",
+    "register_runner",
+    "resolve_campaign",
+    "run_campaign",
+    "run_named_campaign",
+    "service_campaign",
+    "smoke_campaign",
+    "solve_identity",
+    "table9_campaign",
+]

@@ -1,0 +1,525 @@
+"""Built-in campaigns — the repo's standing benchmarks as declarative specs.
+
+``benchmarks/run.py`` used to hand-roll each sweep; every CI lane is now a
+named campaign here, executed by the shared campaign machinery, with a thin
+exporter that keeps the legacy ``BENCH_*.json`` payloads byte-compatible:
+
+* ``smoke``   — the CI Table IX scale points (5×5, 50×50 × MILP/GA/HEFT)
+  through the ``inline`` runner → ``BENCH_table9.json`` (same names, same
+  derived makespans as the pre-campaign harness);
+* ``table9``  — the full Table-IX-style comparison grid (families × sizes ×
+  seeds × {milp, heft, olb, ga}) whose
+  :meth:`~repro.campaigns.results.ResultSet.deviation_vs` reproduces the
+  paper's optimality-gap analysis;
+* ``service`` — the 200-submission mixed-family arrival trace through the
+  event-driven service (``trace`` runner) → ``BENCH_service.json``;
+* ``engine``  — per-backend population-evaluation throughput at three shape
+  buckets (``engine-bench`` runner) → ``BENCH_engine.json``.
+
+Use :func:`builtin_campaign` to get a spec by name (it round-trips through
+JSON like any user spec) and :func:`run_builtin` / the per-lane helpers to
+execute + export.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.api import SolverRegistry, did_you_mean
+from repro.campaigns.results import ResultSet
+from repro.campaigns.spec import Axis, Campaign, SkipRule
+from repro.campaigns.runner import register_runner, run_campaign
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+#: Table IX square scaling: nodes = tasks = workload seed (one canonical
+#: instance per scale point, matching the pre-campaign harness).
+SMOKE_SCALES = ({"size": 5, "nodes": 5, "seed": 5},
+                {"size": 50, "nodes": 50, "seed": 50})
+
+#: MILP's practical exact-solve ceiling in the benchmarks (the paper's '-').
+MILP_SKIP = SkipRule(where={"technique": "milp", "size": {"min": 26}},
+                     reason="size")
+
+
+def smoke_campaign() -> Campaign:
+    """The CI smoke lane: small Table IX scale points, MILP/GA/HEFT."""
+    return Campaign(
+        name="smoke",
+        axes=(
+            Axis("scale", SMOKE_SCALES, zipped=True),
+            Axis("technique", ("milp", "ga", "heft")),
+        ),
+        defaults={
+            "family": "synthetic",
+            "engine": "auto",
+            "solver_options": {
+                "milp": {"time_limit": 60.0},
+                "ga": {"seed": 0, "pop_size": 32, "generations": 20},
+            },
+        },
+        skip=(MILP_SKIP,),
+        runner="inline",
+    )
+
+
+def table9_campaign(
+    *,
+    families: tuple[str, ...] = ("layered", "synthetic"),
+    sizes: tuple[int, ...] = (5, 10, 20),
+    seeds: tuple[int, ...] = (0, 1),
+    techniques: tuple[str, ...] = ("milp", "heft", "olb", "ga"),
+    nodes: int = 3,
+    milp_time_limit: float = 10.0,
+) -> Campaign:
+    """The paper's comparative grid: families × sizes × seeds × techniques
+    on one small continuum, MILP as the exact baseline for
+    ``deviation_vs("milp")`` (Table IX / §VIII: heuristics within 5–10%)."""
+    return Campaign(
+        name="table9",
+        axes=(
+            Axis("family", tuple(families)),
+            Axis("size", tuple(sizes)),
+            Axis("seed", tuple(seeds)),
+            Axis("technique", tuple(techniques)),
+        ),
+        defaults={
+            "nodes": nodes,
+            "engine": "auto",
+            "solver_options": {
+                "milp": {"time_limit": milp_time_limit},
+                "ga": {"seed": 0, "pop_size": 32, "generations": 12},
+            },
+        },
+        skip=(MILP_SKIP,),
+        runner="inline",
+    )
+
+
+def service_campaign(num_submissions: int = 200, seed: int = 0) -> Campaign:
+    """The CI service lane: a seeded mixed-family arrival stream (not a
+    grid) replayed through the event-driven scheduler."""
+    return Campaign(
+        name="service",
+        runner="trace",
+        runner_options={
+            "num_submissions": num_submissions,
+            "seed": seed,
+            "rate": 4.0,
+            "burst_prob": 0.15,
+            "burst_size": 8,
+            "node_events": True,
+            "batch_window": 0.5,
+            "max_batch": 32,
+        },
+    )
+
+
+#: (label, tasks, nodes, population) — three distinct pow2 shape buckets
+ENGINE_SHAPES = (
+    {"shape": "small", "size": 24, "nodes": 4, "population": 64},
+    {"shape": "medium", "size": 96, "nodes": 8, "population": 64},
+    {"shape": "large", "size": 384, "nodes": 16, "population": 32},
+)
+
+#: backend → (population divisor, iters) — pallas interpret mode is a
+#: functional reference, not a throughput claim, so it gets a reduced load
+ENGINE_BACKENDS = {"jax": (1, 3), "oracle": (8, 1), "pallas": (16, 1)}
+
+
+def engine_campaign() -> Campaign:
+    """The CI engine lane: per-backend evaluation throughput by shape."""
+    return Campaign(
+        name="engine",
+        axes=(
+            Axis("shape", ENGINE_SHAPES, zipped=True),
+            Axis("backend", tuple(ENGINE_BACKENDS)),
+        ),
+        runner="engine-bench",
+    )
+
+
+BUILTIN_CAMPAIGNS: dict[str, Callable[[], Campaign]] = {
+    "smoke": smoke_campaign,
+    "table9": table9_campaign,
+    "service": service_campaign,
+    "engine": engine_campaign,
+}
+
+
+def builtin_campaign(name: str) -> Campaign:
+    factory = BUILTIN_CAMPAIGNS.get(name)
+    if factory is None:
+        raise KeyError(
+            f"unknown built-in campaign {name!r}"
+            f"{did_you_mean(name, BUILTIN_CAMPAIGNS)}; "
+            f"options {sorted(BUILTIN_CAMPAIGNS)}"
+        )
+    return factory()
+
+
+# ---------------------------------------------------------------------------
+# Specialized runners for the non-grid lanes
+# ---------------------------------------------------------------------------
+
+
+@register_runner("trace")
+def run_trace(
+    campaign: Campaign, *, registry: SolverRegistry | None = None
+) -> ResultSet:
+    """Generate a seeded arrival trace and replay it through the service.
+
+    Unlike the grid-streaming ``service`` runner, this reproduces the
+    benchmark's *random* multi-tenant stream (Poisson + bursts + node
+    events) — the campaign spec is the trace's parameters."""
+    from repro.service import ServiceConfig, generate_trace, serve_trace
+
+    ro = campaign.runner_options
+    n = int(ro.get("num_submissions", 200))
+    seed = int(ro.get("seed", 0))
+    trace = generate_trace(
+        n,
+        seed=seed,
+        rate=float(ro.get("rate", 2.0)),
+        burst_prob=float(ro.get("burst_prob", 0.1)),
+        burst_size=int(ro.get("burst_size", 8)),
+        node_events=bool(ro.get("node_events", False)),
+    )
+    t0 = time.perf_counter()
+    result = serve_trace(
+        trace,
+        config=ServiceConfig(
+            batch_window=float(ro.get("batch_window", 0.25)),
+            max_batch=int(ro.get("max_batch", 32)),
+            seed=seed,
+        ),
+        registry=registry,
+    )
+    wall = time.perf_counter() - t0
+    rows = []
+    for i, rec in enumerate(result.records):
+        rec_json = rec.to_json()
+        rows.append(
+            {
+                "cell": i,
+                "id": rec.id,
+                "tenant": rec.tenant,
+                "family": rec.family,
+                "technique": rec.technique,
+                "technique_used": rec.technique_used or None,
+                "status": rec.status,
+                "arrival": rec_json["arrival"],
+                "queue_delay": rec_json["queue_delay"],
+                "turnaround": rec_json["turnaround"],
+                "predicted_makespan": rec_json["predicted_makespan"],
+                "makespan": rec_json["observed_makespan"],
+                "cache_hit": rec.cache_hit,
+                "batched": rec.batched,
+            }
+        )
+    meta = {
+        "campaign": campaign.name,
+        "runner": "trace",
+        "coords": ["family", "technique", "tenant"],
+        "stats": {
+            "num_submissions": n,
+            "seed": seed,
+            "wall_seconds": wall,
+            "summary": {k: v for k, v in result.summary().items() if k != "nodes"},
+        },
+    }
+    return ResultSet.from_rows(
+        rows,
+        name=campaign.name,
+        meta=meta,
+        dtypes={"cell": "int", "cache_hit": "bool", "batched": "bool",
+                "makespan": "float", "predicted_makespan": "float",
+                "arrival": "float", "queue_delay": "float",
+                "turnaround": "float"},
+    )
+
+
+def _time_fitness(fn, *args, iters=3, warmup=1):
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    del out
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+@register_runner("engine-bench")
+def run_engine_bench(
+    campaign: Campaign, *, registry: SolverRegistry | None = None
+) -> ResultSet:
+    """Time ``population_fitness`` per engine backend at each shape cell.
+
+    Not a solver campaign: cells name a (shape, backend) pair and the
+    "result" is throughput.  Backend loads follow :data:`ENGINE_BACKENDS`;
+    the pallas interpret-mode check is clamped on the large bucket."""
+    from repro.core import Workload, build_problem, synthetic_system
+    from repro.core.workload_model import random_layered_workflow
+    from repro.engine import ENGINES, pack, pack_cache
+
+    cells = campaign.expand()
+    coord_cols = campaign.coord_names(cells)
+    rows = []
+    rng = np.random.default_rng(0)
+    problems: dict[str, Any] = {}
+    buckets: dict[str, tuple] = {}
+    for cell in cells:
+        c = cell.coords
+        label, tasks, nodes = str(c["shape"]), int(c["size"]), int(c["nodes"])
+        pop = int(c["population"])
+        backend = str(c["backend"])
+        if label not in problems:
+            system = synthetic_system(nodes, seed=nodes)
+            wf = random_layered_workflow(
+                tasks, seed=tasks, max_cores=8, feature_pool=("F1",)
+            )
+            problems[label] = build_problem(system, Workload((wf,)))
+            # warm the pack cache once; the device backends then share it
+            buckets[label] = pack(problems[label], pad=False).bucket
+        problem = problems[label]
+        bucket = buckets[label]
+        divisor, iters = ENGINE_BACKENDS[backend]
+        p = max(pop // divisor, 2)
+        A = rng.integers(0, problem.num_nodes, (p, problem.num_tasks))
+        if backend == "pallas" and tasks * nodes > 2048:
+            # interpret-mode wall time grows ~linearly with T; keep the
+            # large bucket's functional check bounded
+            p = 2
+            A = A[:p]
+        fitness = ENGINES.get(backend).population_fitness(problem)
+        if backend == "oracle":
+            fitness(A)  # warm caches (pred_csr etc.)
+            t0 = time.perf_counter()
+            fitness(A)
+            us = (time.perf_counter() - t0) * 1e6
+        else:
+            us = _time_fitness(fitness, A, iters=iters, warmup=1)
+        rows.append(
+            {
+                "cell": cell.index,
+                "shape": label,
+                "size": tasks,
+                "nodes": nodes,
+                "backend": backend,
+                "population": p,
+                "bucket": list(bucket),
+                "us_per_call": float(us),
+                "candidates_per_second": p / (us / 1e6),
+            }
+        )
+    meta = {
+        "campaign": campaign.name,
+        "runner": "engine-bench",
+        "coords": coord_cols,
+        "stats": {"pack_cache": pack_cache().stats.to_json()},
+    }
+    return ResultSet.from_rows(
+        rows,
+        name=campaign.name,
+        meta=meta,
+        dtypes={"cell": "int", "size": "int", "nodes": "int",
+                "population": "int", "bucket": "json",
+                "us_per_call": "float", "candidates_per_second": "float"},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Legacy exporters — byte-compatible BENCH_*.json + CSV rows
+# ---------------------------------------------------------------------------
+
+#: campaign technique → legacy Table IX row label
+_TABLE9_LABEL = {"milp": "milp", "ga": "mh", "heft": "h"}
+
+
+def table9_rows(rs: ResultSet) -> list[tuple]:
+    """Legacy ``(name, us_per_call, derived)`` rows from a smoke ResultSet."""
+    rows: list[tuple] = []
+    for r in rs:
+        label = _TABLE9_LABEL.get(r["technique"], r["technique"])
+        name = f"table9_{r['nodes']}x{r['size']}_{label}"
+        if r["makespan"] is None:
+            rows.append((name, float("nan"), r["status"]))
+        elif r["technique"] == "milp":
+            rows.append((name, r["wall_us"],
+                         f"makespan={r['makespan']:.2f};status={r['solve_status']}"))
+        else:
+            rows.append((name, r["wall_us"], f"makespan={r['makespan']:.2f}"))
+    return rows
+
+
+def run_smoke(out_path: str | Path = "BENCH_table9.json") -> list[tuple]:
+    """`--smoke`: the smoke campaign → legacy rows + ``BENCH_table9.json``."""
+    rs = run_campaign(smoke_campaign())
+    rows = table9_rows(rs)
+    payload = {
+        name: {"us_per_call": None if us != us else float(us), "derived": derived}
+        for name, us, derived in rows
+    }
+    Path(out_path).write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return rows
+
+
+def run_service_bench(
+    num_submissions: int = 200,
+    *,
+    seed: int = 0,
+    out_path: str | Path = "BENCH_service.json",
+) -> list[tuple]:
+    """`--service`: the trace campaign → legacy rows + ``BENCH_service.json``."""
+    rs = run_campaign(service_campaign(num_submissions, seed))
+    stats = rs.meta["stats"]
+    s = stats["summary"]
+    wall = stats["wall_seconds"]
+    payload = {
+        "num_submissions": num_submissions,
+        "seed": seed,
+        "wall_seconds": wall,
+        "summary": s,
+    }
+    Path(out_path).write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    ta = s.get("turnaround", {})
+    return [
+        ("service_completed", wall * 1e6,
+         f"completed={s['completed']}/{s['submissions']};rejected={s['rejected']}"),
+        ("service_throughput", wall * 1e6 / max(s["completed"], 1),
+         f"per_wall_s={s['throughput_per_wall_s']:.2f};"
+         f"per_virtual_s={s['throughput_per_virtual_s']:.3f}"),
+        ("service_turnaround", float("nan"),
+         f"p50={ta.get('p50', float('nan')):.2f};"
+         f"p95={ta.get('p95', float('nan')):.2f};"
+         f"mean={ta.get('mean', float('nan')):.2f}"),
+        ("service_cache", float("nan"),
+         f"hit_rate={s['cache']['hit_rate']:.3f};hits={s['cache']['hits']};"
+         f"misses={s['cache']['misses']};solver_calls={s['solver_calls']}"),
+        ("service_pack_cache", float("nan"),
+         f"hit_rate={s['pack_cache']['hit_rate']:.3f};"
+         f"hits={s['pack_cache']['hits']};misses={s['pack_cache']['misses']}"),
+        ("service_batching", float("nan"),
+         f"groups={s['batched_groups']};submissions={s['batched_submissions']}"),
+        ("service_events", float("nan"), f"count={s['events']}"),
+    ]
+
+
+def run_engine_bench_export(
+    out_path: str | Path = "BENCH_engine.json",
+) -> list[tuple]:
+    """`--engine`: the engine campaign → legacy rows + ``BENCH_engine.json``."""
+    rs = run_campaign(engine_campaign())
+    rows: list[tuple] = []
+    payload: dict[str, Any] = {}
+    for r in rs:
+        name = f"engine_{r['shape']}_{r['backend']}"
+        bucket = r["bucket"]
+        rows.append(
+            (name, r["us_per_call"],
+             f"bucket={'x'.join(str(b) for b in bucket)};pop={r['population']};"
+             f"cand_per_s={r['candidates_per_second']:.1f}")
+        )
+        payload[name] = {
+            "us_per_call": float(r["us_per_call"]),
+            "bucket": list(bucket),
+            "population": int(r["population"]),
+            "candidates_per_second": float(r["candidates_per_second"]),
+        }
+    payload["pack_cache"] = rs.meta["stats"]["pack_cache"]
+    Path(out_path).write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Generic campaign export (`--campaign NAME|spec.json` → BENCH_campaign.json)
+# ---------------------------------------------------------------------------
+
+
+def campaign_rows(rs: ResultSet) -> list[tuple]:
+    """Generic ``(name, us_per_call, derived)`` rows for any solver-campaign
+    ResultSet — the CI-printable view of the columnar results."""
+    rows: list[tuple] = []
+    for r in rs:
+        tech = r.get("technique", r.get("technique_used", ""))
+        name = f"campaign_{rs.name}_c{r['cell']:04d}_{tech}"
+        if r.get("makespan") is None:
+            rows.append((name, float("nan"), r.get("status", "")))
+            continue
+        bits = [f"makespan={r['makespan']:.2f}"]
+        if r.get("status") not in (None, "ok", "completed"):
+            bits.append(f"status={r['status']}")
+        if r.get("dedup"):
+            bits.append("dedup")
+        if r.get("batched"):
+            bits.append("batched")
+        rows.append((name, r.get("wall_us") or 0.0, ";".join(bits)))
+    return rows
+
+
+@dataclasses.dataclass
+class CampaignRun:
+    """One executed campaign: the spec, the columnar results, legacy rows."""
+
+    campaign: Campaign
+    result: ResultSet
+    rows: list[tuple]
+    wall_seconds: float
+
+
+def resolve_campaign(name_or_path: str) -> Campaign:
+    """One resolution rule for every CLI: an existing *file* loads as a
+    spec, otherwise the name must be a built-in campaign (a stray directory
+    named like a built-in must not shadow it)."""
+    from repro.campaigns.spec import load_campaign
+
+    if Path(name_or_path).is_file():
+        return load_campaign(name_or_path)
+    if name_or_path in BUILTIN_CAMPAIGNS:
+        return builtin_campaign(name_or_path)
+    raise ValueError(
+        f"{name_or_path!r} is neither a campaign spec file nor a "
+        f"built-in campaign{did_you_mean(name_or_path, BUILTIN_CAMPAIGNS)}; "
+        f"built-ins: {sorted(BUILTIN_CAMPAIGNS)}"
+    )
+
+
+def run_named_campaign(
+    name_or_path: str,
+    *,
+    runner: str | None = None,
+    registry: SolverRegistry | None = None,
+    out_path: str | Path | None = "BENCH_campaign.json",
+    vs: str | None = "milp",
+) -> CampaignRun:
+    """Resolve (file path or built-in name), run, and export one campaign.
+
+    Writes ``BENCH_campaign.json`` holding the full columnar ResultSet plus
+    an optimality-gap report when an exact baseline technique is present."""
+    campaign = resolve_campaign(name_or_path)
+    t0 = time.perf_counter()
+    rs = run_campaign(campaign, runner=runner, registry=registry)
+    wall = time.perf_counter() - t0
+    rows = campaign_rows(rs)
+    if out_path is not None:
+        payload: dict[str, Any] = {
+            "campaign": campaign.name,
+            "wall_seconds": wall,
+            "results": rs.to_json(),
+        }
+        if vs and rs.baseline_present(vs):
+            payload["deviation_vs"] = rs.deviation_report(vs).to_json()
+        Path(out_path).write_text(
+            json.dumps(payload, indent=2, sort_keys=True) + "\n"
+        )
+    return CampaignRun(campaign=campaign, result=rs, rows=rows, wall_seconds=wall)

@@ -41,9 +41,10 @@ them as deprecation shims.
 from __future__ import annotations
 
 import dataclasses
+import difflib
 import json
 from pathlib import Path
-from typing import Any, Callable, Mapping, Sequence
+from typing import Any, Callable, Iterable, Mapping, Sequence
 
 import numpy as np
 
@@ -61,6 +62,29 @@ from repro.core.workload_model import (
     canonical_hash,
     workload_to_json,
 )
+
+
+def did_you_mean(key: Any, options: Iterable[Any]) -> str:
+    """`` — did you mean 'x'?`` suffix for error messages (or empty)."""
+    close = difflib.get_close_matches(str(key), [str(o) for o in options], n=1)
+    return f" — did you mean {close[0]!r}?" if close else ""
+
+
+def reject_unknown_keys(
+    obj: Mapping[str, Any], known: Iterable[str], *, context: str
+) -> None:
+    """Raise on the first key of ``obj`` not in ``known``, with a
+    did-you-mean hint.  Strict parsing beats silent fallthrough: a typo'd
+    ``"tehcnique"`` must fail loudly, not quietly route to the default
+    policy."""
+    known = tuple(known)
+    unknown = [k for k in obj if k not in known]
+    if unknown:
+        k = unknown[0]
+        raise ValueError(
+            f"unknown {context} key {k!r}{did_you_mean(k, known)}; "
+            f"valid keys: {sorted(known)}"
+        )
 
 
 @dataclasses.dataclass
@@ -328,6 +352,19 @@ class PolicyRule:
 
     @classmethod
     def from_json(cls, obj: Mapping[str, Any]) -> "PolicyRule":
+        reject_unknown_keys(
+            obj,
+            (
+                "technique",
+                "max_tasks",
+                "min_tasks",
+                "accept_status",
+                "require_valid",
+                "forward_kwargs",
+                "options",
+            ),
+            context="policy rule",
+        )
         return cls(
             technique=obj["technique"],
             max_tasks=obj.get("max_tasks"),
@@ -436,6 +473,7 @@ class Policy:
 
     @classmethod
     def from_json(cls, obj: Mapping[str, Any]) -> "Policy":
+        reject_unknown_keys(obj, ("rules", "final"), context="policy")
         return cls(
             rules=tuple(PolicyRule.from_json(r) for r in obj.get("rules", ())),
             final=obj.get("final", "heft"),
@@ -466,6 +504,9 @@ class Perturbation:
 
     @classmethod
     def from_json(cls, obj: Mapping[str, Any]) -> "Perturbation":
+        reject_unknown_keys(
+            obj, ("speed_factors", "jitter", "seed"), context="perturbation"
+        )
         return cls(
             speed_factors=dict(obj.get("speed_factors", {})),
             jitter=float(obj.get("jitter", 0.0)),
@@ -491,6 +532,11 @@ class OrchestrationConfig:
 
     @classmethod
     def from_json(cls, obj: Mapping[str, Any]) -> "OrchestrationConfig":
+        reject_unknown_keys(
+            obj,
+            ("max_rounds", "drift_threshold", "smoothing"),
+            context="orchestration",
+        )
         return cls(
             max_rounds=int(obj.get("max_rounds", 3)),
             drift_threshold=float(obj.get("drift_threshold", 0.1)),
@@ -503,6 +549,7 @@ def _weights_to_json(w: ObjectiveWeights) -> dict:
 
 
 def _weights_from_json(obj: Mapping[str, Any]) -> ObjectiveWeights:
+    reject_unknown_keys(obj, ("alpha", "beta", "usage_mode"), context="weights")
     return ObjectiveWeights(
         alpha=float(obj.get("alpha", 1.0)),
         beta=float(obj.get("beta", 1.0)),
@@ -585,17 +632,47 @@ class Scenario:
         return canonical_hash(self.to_json())
 
 
+_SCENARIO_HEADER_KEYS = (
+    "name",
+    "technique",
+    "backend",
+    "engine",
+    "weights",
+    "perturbation",
+    "orchestration",
+    "solver_options",
+    "policy",
+)
+
+
 def scenario_from_json(obj: Mapping[str, Any] | str) -> Scenario:
     """Parse a scenario file/dict (the Fig. 7/8 config plus a ``scenario``
     header).  The system/workload sections go through the exact same
-    :func:`snakemake_io.load_config` path as plain config files."""
+    :func:`snakemake_io.load_config` path as plain config files.
+
+    Parsing is strict: an unknown ``scenario`` header key (or a top-level
+    section that is neither a reserved section nor a workflow carrying a
+    ``"tasks"`` mapping) raises with a did-you-mean hint instead of silently
+    falling through to defaults."""
     if isinstance(obj, str):
         obj = json.loads(obj)
+    for key, value in obj.items():
+        if key in Scenario._RESERVED_SECTIONS:
+            continue
+        if isinstance(value, Mapping) and "tasks" in value:
+            continue  # a workflow section (Fig. 8)
+        raise ValueError(
+            f"unknown scenario file section {key!r}"
+            f"{did_you_mean(key, Scenario._RESERVED_SECTIONS)}; expected one "
+            f"of {Scenario._RESERVED_SECTIONS} or a workflow section with a "
+            f"'tasks' mapping"
+        )
     system, workload = load_config(obj)
     if system is None or workload is None:
         missing = "nodes" if system is None else "workflow"
         raise ValueError(f"scenario config is missing its {missing} section")
     header = obj.get("scenario", {})
+    reject_unknown_keys(header, _SCENARIO_HEADER_KEYS, context="scenario")
     return Scenario(
         name=header.get("name", "scenario"),
         system=system,
@@ -640,21 +717,35 @@ def route_problem(
     event-driven :mod:`repro.service` scheduler — both face the same
     "scenario says technique X with options O" contract."""
     reg = registry if registry is not None else REGISTRY
-    opts = dict(options or {})
-    if engine != "auto":
-        for entry in reg:
-            if not entry.capabilities.engine_aware:
-                continue
-            scoped = opts.get(entry.name)
-            scoped = dict(scoped) if isinstance(scoped, Mapping) else {}
-            scoped.setdefault("backend", engine)
-            opts[entry.name] = scoped
+    opts = fold_engine_options(reg, options, engine)
     if policy is not None or technique in ("auto", "policy"):
         pol = policy if policy is not None else Policy.paper_hybrid()
         return pol.route(problem, weights, registry=reg, **opts)
     return reg.solve(
         technique, problem, weights, **technique_kwargs(reg, technique, opts)
     )
+
+
+def fold_engine_options(
+    registry: SolverRegistry,
+    options: Mapping[str, Any] | None,
+    engine: str,
+) -> dict[str, Any]:
+    """Fold an engine selection into ``solver_options`` as a scoped
+    ``backend=`` for every *engine-aware* technique (explicit user options
+    win; MILP/HEFT never see it).  The one translation shared by
+    :func:`route_problem` and every path where options travel without an
+    ``engine`` channel (service submissions, direct ``batch_fn`` calls)."""
+    opts = dict(options or {})
+    if engine and engine != "auto":
+        for entry in registry:
+            if not entry.capabilities.engine_aware:
+                continue
+            scoped = opts.get(entry.name)
+            scoped = dict(scoped) if isinstance(scoped, Mapping) else {}
+            scoped.setdefault("backend", engine)
+            opts[entry.name] = scoped
+    return opts
 
 
 def technique_kwargs(

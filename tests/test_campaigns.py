@@ -1,0 +1,607 @@
+"""Campaign API: grid expansion determinism, filter semantics, fingerprint
+dedupe (solve-cache counters), shape-bucket batch grouping (pack-cache
+counters), typed columnar ResultSet round-trips, the Table IX deviation
+report, the service runner, and the ``python -m repro campaign`` CLI."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.campaigns import (
+    Axis,
+    Campaign,
+    ResultSet,
+    SkipRule,
+    builtin_campaign,
+    campaign_from_json,
+    cell_scenario,
+    matches,
+    run_campaign,
+)
+from repro.campaigns.results import Column
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def _mini_campaign(techniques=("heft",), sizes=(3, 4), family="mri"):
+    """Cheap grid: the mri family ignores 'size', so every size cell is
+    content-identical — the dedupe hot path."""
+    return Campaign(
+        name="mini",
+        axes=(
+            Axis("family", (family,)),
+            Axis("size", tuple(sizes)),
+            Axis("technique", tuple(techniques)),
+        ),
+        defaults={"system": "mri", "engine": "auto"},
+    )
+
+
+# ---------------------------------------------------------------------------
+# expansion
+# ---------------------------------------------------------------------------
+
+
+def test_expansion_deterministic_order_and_indices():
+    c = builtin_campaign("smoke")
+    a = c.expand()
+    b = c.expand()
+    assert [cell.coords for cell in a] == [cell.coords for cell in b]
+    assert [cell.index for cell in a] == list(range(len(a)))
+    # first axis outermost, values in listed order
+    assert [cell.coords["size"] for cell in a] == [5, 5, 5, 50, 50, 50]
+    assert [cell.coords["technique"] for cell in a] == ["milp", "ga", "heft"] * 2
+
+
+def test_zipped_axis_key_collision_rejected():
+    """A zipped axis's value keys clobbering another axis would yield a
+    silently wrong grid — reject at construction."""
+    with pytest.raises(ValueError, match="set by both axis"):
+        Campaign(
+            name="clash",
+            axes=(
+                Axis("technique", ("heft", "olb")),
+                Axis("scale", ({"size": 5, "technique": "milp"},), zipped=True),
+            ),
+        )
+
+
+def test_policy_distinguishes_dedupe_identity():
+    """Two cells identical except for their routing policy must NOT dedupe
+    onto one solve — the policy changes what the solver does."""
+    c = Campaign(
+        name="pol",
+        axes=(
+            Axis(
+                "policy",
+                ({"rules": [], "final": "heft"}, {"rules": [], "final": "olb"}),
+            ),
+        ),
+        defaults={"family": "mri", "system": "mri", "technique": "policy"},
+    )
+    rs = run_campaign(c)
+    rows = rs.rows()
+    assert rs.meta["stats"]["solver_calls"] == 2
+    assert rs.meta["stats"]["dedup_hits"] == 0
+    assert [r["technique_used"] for r in rows] == ["heft", "olb"]
+
+
+def test_zipped_axis_merges_correlated_coords():
+    c = Campaign(
+        name="z",
+        axes=(
+            Axis("scale", ({"size": 5, "nodes": 2}, {"size": 9, "nodes": 3}),
+                 zipped=True),
+        ),
+    )
+    cells = c.expand()
+    assert [(x.coords["size"], x.coords["nodes"]) for x in cells] == [(5, 2), (9, 3)]
+    with pytest.raises(ValueError, match="zipped axis"):
+        Axis("bad", (1, 2), zipped=True)
+
+
+def test_filter_semantics_include_exclude_skip():
+    base = dict(
+        axes=(
+            Axis("size", (5, 10, 50)),
+            Axis("technique", ("milp", "heft")),
+        ),
+    )
+    # matcher conditions: scalar equality, list membership, numeric range
+    assert matches({"size": 5}, {"size": 5})
+    assert matches({"size": [5, 10]}, {"size": 10})
+    assert matches({"size": {"min": 6, "max": 50}}, {"size": 10})
+    assert not matches({"size": {"min": 6}}, {"size": 5})
+    assert not matches({"missing": 1}, {"size": 5})
+
+    c = Campaign(name="f", include=({"technique": "milp"},), **base)
+    assert {x.coords["technique"] for x in c.expand()} == {"milp"}
+
+    c = Campaign(name="f", exclude=({"size": {"min": 11}},), **base)
+    assert {x.coords["size"] for x in c.expand()} == {5, 10}
+
+    c = Campaign(
+        name="f",
+        skip=(SkipRule(where={"technique": "milp", "size": {"min": 26}},
+                       reason="size"),),
+        **base,
+    )
+    cells = c.expand()
+    skipped = [x for x in cells if x.skipped]
+    assert [(x.coords["size"], x.coords["technique"]) for x in skipped] == [
+        (50, "milp")
+    ]
+    assert skipped[0].skipped == "size"
+    # skip keeps the cell in the grid: indices stay contiguous over all cells
+    assert [x.index for x in cells] == list(range(6))
+
+
+def test_campaign_json_round_trip_and_unknown_keys():
+    c = builtin_campaign("table9")
+    rt = campaign_from_json(json.dumps(c.to_json()))
+    assert rt == c
+    bad = c.to_json()
+    bad["campaign"]["axess"] = []
+    with pytest.raises(ValueError, match="did you mean 'axes'"):
+        campaign_from_json(bad)
+    bad2 = c.to_json()
+    bad2["campaign"]["axes"][0]["valuess"] = []
+    with pytest.raises(ValueError, match="did you mean 'values'"):
+        campaign_from_json(bad2)
+
+
+def test_cell_scenario_compiles_and_unknown_family_suggests():
+    c = _mini_campaign()
+    cells = c.expand()
+    sc = cell_scenario(c, cells[0])
+    assert sc.technique == "heft"
+    assert sc.workload.num_tasks == 7  # W1 (3) + W2 (4)
+    bad = Campaign(name="b", axes=(Axis("family", ("lyered",)),),
+                   defaults={"size": 5})
+    with pytest.raises(ValueError, match="did you mean 'layered'"):
+        cell_scenario(bad, bad.expand()[0])
+
+
+# ---------------------------------------------------------------------------
+# inline runner: dedupe + batching counters
+# ---------------------------------------------------------------------------
+
+
+def test_identical_cells_solved_once_with_cache_counters():
+    # mri ignores the size axis → 3 size values × heft = 3 content-identical
+    # cells; the solve cache must prove a single solver call
+    rs = run_campaign(_mini_campaign(sizes=(3, 4, 5)))
+    stats = rs.meta["stats"]
+    assert stats["cells"] == 3
+    assert stats["solver_calls"] == 1
+    assert stats["dedup_hits"] == 2
+    assert stats["cache"]["hits"] == 2
+    rows = rs.rows()
+    assert [r["dedup"] for r in rows] == [False, True, True]
+    assert rows[1]["dedup_of"] == rows[0]["cell"]
+    assert len({r["fingerprint"] for r in rows}) == 1
+    assert len({r["makespan"] for r in rows}) == 1
+    assert [r["wall_us"] == 0.0 for r in rows] == [False, True, True]
+
+
+def test_same_bucket_ga_cells_batch_and_packs_are_reused():
+    # two distinct layered instances in the same pow2 shape bucket with the
+    # same (weights, options, engine) must run as ONE ga_sweep program
+    def campaign():
+        return Campaign(
+            name="batch",
+            axes=(Axis("size", (6, 7)),),
+            defaults={
+                "family": "layered",
+                "nodes": 3,
+                "seed": 0,
+                "technique": "ga",
+                "engine": "auto",
+                "solver_options": {
+                    "ga": {"seed": 0, "pop_size": 8, "generations": 3}
+                },
+            },
+        )
+
+    rs = run_campaign(campaign())
+    stats = rs.meta["stats"]
+    assert stats["batched_groups"] == 1
+    assert stats["batched_submissions"] == 2
+    assert stats["solver_calls"] == 2
+    assert all(r["batched"] and r["group_size"] == 2 for r in rs)
+    assert all(r["violations"] == 0 for r in rs)
+    # identical re-run in-process: the engine pack LRU serves the packs
+    # built above (fingerprint-keyed), proving cross-run pack reuse
+    rs2 = run_campaign(campaign())
+    assert rs2.meta["stats"]["pack_cache"]["hits"] >= 2
+    assert [r["makespan"] for r in rs2] == [r["makespan"] for r in rs]
+
+
+def test_dedup_of_violated_schedule_shares_it_and_counts_a_miss():
+    """Duplicates of a representative whose schedule is invalid must still
+    carry that schedule (violations visible), and must count as solve-cache
+    misses, not hits — mirroring the admission batcher's twin accounting."""
+    import numpy as np
+
+    from repro.core.api import ObjectiveWeights, SolveReport, SolverRegistry
+    from repro.core.evaluator import Schedule
+
+    reg = SolverRegistry()
+
+    def bad(problem, weights=ObjectiveWeights(), **kw):
+        t = problem.num_tasks
+        sched = Schedule(
+            assignment=np.zeros(t, dtype=np.int64),
+            start=np.zeros(t), finish=np.ones(t),
+            makespan=1.0, usage=1.0, objective=1.0,
+            violations=3, technique="bad",
+        )
+        return SolveReport(schedule=sched, problem=problem)
+
+    reg.register("bad", bad)
+    c = Campaign(
+        name="dup-bad",
+        axes=(Axis("size", (3, 4)),),  # mri ignores size → identical cells
+        defaults={"family": "mri", "system": "mri", "technique": "bad"},
+    )
+    rs = run_campaign(c, registry=reg)
+    rows = rs.rows()
+    assert rows[1]["dedup"] and rows[1]["violations"] == 3
+    assert rows[1]["makespan"] == rows[0]["makespan"] == 1.0
+    stats = rs.meta["stats"]
+    assert stats["solver_calls"] == 1
+    assert stats["dedup_hits"] == 0  # unservable result: the twin is a miss
+    assert stats["cache"]["misses"] == 1  # the twin; reps never probe
+
+
+def test_campaign_accepts_json_literal_axes_and_skip():
+    """The documented literal syntax (dicts for axes/skip, as in the README
+    quickstart) must construct the same campaign as the typed objects."""
+    lit = Campaign(
+        name="lit",
+        axes=[{"name": "size", "values": [5, 50]},
+              {"name": "technique", "values": ["milp", "heft"]}],
+        skip=[{"where": {"technique": "milp", "size": {"min": 26}},
+               "reason": "size"}],
+    )
+    typed = Campaign(
+        name="lit",
+        axes=(Axis("size", (5, 50)), Axis("technique", ("milp", "heft"))),
+        skip=(SkipRule(where={"technique": "milp", "size": {"min": 26}},
+                       reason="size"),),
+    )
+    assert lit == typed
+    assert [c.skipped for c in lit.expand()] == [None, None, "size", None]
+
+
+def test_skip_and_failure_rows_keep_coordinates():
+    c = Campaign(
+        name="s",
+        axes=(Axis("technique", ("heft", "milp")),),
+        defaults={"family": "layered", "size": 4, "nodes": 2, "seed": 0},
+        skip=(SkipRule(where={"technique": "milp"}, reason="size"),),
+    )
+    rs = run_campaign(c)
+    rows = rs.rows()
+    assert rows[0]["status"] == "ok"
+    assert rows[1]["status"] == "skipped(size)"
+    assert rows[1]["technique"] == "milp"  # coords survive the skip
+    assert rows[1]["makespan"] is None
+    assert rs.meta["stats"]["skipped"] == 1
+
+
+def test_execute_option_adds_observed_columns():
+    c = Campaign(
+        name="x",
+        axes=(Axis("technique", ("heft",)),),
+        defaults={
+            "family": "mri",
+            "system": "mri",
+            "perturbation": {"speed_factors": {"N2": 0.5}},
+        },
+        runner_options={"execute": True},
+    )
+    rs = run_campaign(c)
+    r = rs.rows()[0]
+    assert r["observed_makespan"] is not None
+    assert r["slowdown"] is not None and r["slowdown"] >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# ResultSet
+# ---------------------------------------------------------------------------
+
+
+def _sample_rs():
+    rows = [
+        {"cell": 0, "technique": "milp", "size": 5, "makespan": 10.0,
+         "batched": False, "bucket": [8, 4], "note": None},
+        {"cell": 1, "technique": "heft", "size": 5, "makespan": 10.5,
+         "batched": False, "bucket": [8, 4], "note": "a,b\"quoted\""},
+        {"cell": 2, "technique": "ga", "size": 5, "makespan": None,
+         "batched": True, "bucket": None, "note": "x"},
+    ]
+    return ResultSet.from_rows(
+        rows, name="t", meta={"coords": ["technique", "size"]}
+    )
+
+
+def test_resultset_json_round_trip():
+    rs = _sample_rs()
+    rt = ResultSet.from_json(json.loads(json.dumps(rs.to_json())))
+    assert [c.to_json() for c in rt.columns] == [c.to_json() for c in rs.columns]
+    assert rt.rows() == rs.rows()
+    assert rt.meta == rs.meta
+    assert rt.name == rs.name
+
+
+def test_resultset_csv_round_trip():
+    rs = _sample_rs()
+    rt = ResultSet.from_csv(rs.to_csv(), name=rs.name, meta=rs.meta)
+    assert rt.rows() == rs.rows()
+    assert [c.dtype for c in rt.columns] == [c.dtype for c in rs.columns]
+
+
+def test_mixed_numeric_axis_promotes_to_float():
+    """An axis mixing ints and floats must not crash row collection after
+    the cells were already solved: int promotes to float, other mixtures
+    degrade to json."""
+    rs = ResultSet.from_rows([{"x": 1, "y": 1}, {"x": 2.5, "y": "s"}])
+    assert rs.dtype("x") == "float" and rs.column("x") == [1.0, 2.5]
+    assert rs.dtype("y") == "json" and rs.column("y") == [1, "s"]
+
+
+def test_resultset_typing_select_group_aggregate():
+    rs = _sample_rs()
+    assert rs.dtype("makespan") == "float"
+    assert rs.dtype("batched") == "bool"
+    assert rs.dtype("bucket") == "json"
+    assert len(rs.select(technique=("milp", "ga"))) == 2
+    groups = rs.group_by("size")
+    assert len(groups) == 1 and len(groups[0][1]) == 3
+    agg = rs.aggregate("makespan", by=("size",))
+    row = agg.rows()[0]
+    assert row["makespan_count"] == 2  # None excluded
+    assert row["makespan_mean"] == pytest.approx(10.25)
+    with pytest.raises(TypeError, match="is int"):
+        ResultSet([Column("a", "int")], {"a": [1.5]})
+
+
+def test_deviation_vs_exact_baseline():
+    rows = []
+    for size, exact_ms in ((5, 10.0), (10, 20.0)):
+        rows += [
+            {"technique": "milp", "size": size, "makespan": exact_ms},
+            {"technique": "heft", "size": size, "makespan": exact_ms * 1.10},
+            {"technique": "olb", "size": size, "makespan": exact_ms * 1.50},
+        ]
+    # a group with no exact baseline must be dropped, not crash
+    rows.append({"technique": "heft", "size": 50, "makespan": 99.0})
+    rs = ResultSet.from_rows(rows, meta={"coords": ["technique", "size"]})
+    dev = rs.deviation_vs("milp")
+    assert len(dev) == 6  # the size-50 group is gone
+    by_tech = {
+        (r["technique"], r["size"]): r["gap_pct"] for r in dev
+    }
+    assert by_tech[("heft", 5)] == pytest.approx(10.0)
+    assert by_tech[("olb", 10)] == pytest.approx(50.0)
+    rep = rs.deviation_report("milp")
+    rep_rows = {r["technique"]: r for r in rep}
+    assert rep_rows["milp"]["gap_pct_mean"] == pytest.approx(0.0)
+    assert rep_rows["heft"]["gap_pct_mean"] == pytest.approx(10.0)
+    assert rep_rows["olb"]["gap_pct_max"] == pytest.approx(50.0)
+    with pytest.raises(ValueError, match="within"):
+        ResultSet.from_rows(rows).deviation_vs("milp")
+
+
+# ---------------------------------------------------------------------------
+# service runner
+# ---------------------------------------------------------------------------
+
+
+def test_service_runner_streams_grid_as_trace():
+    c = Campaign(
+        name="svc",
+        axes=(Axis("seed", (0, 1, 0)),),  # third cell repeats the first
+        defaults={
+            "family": "layered",
+            "size": 5,
+            "nodes": 3,
+            "technique": "heft",
+            "system": "synthetic",
+        },
+        runner="service",
+        runner_options={"arrival_spacing": 1.0, "batch_window": 0.25},
+    )
+    rs = run_campaign(c)
+    rows = rs.rows()
+    assert [r["status"] for r in rows] == ["completed"] * 3
+    assert all(r["makespan"] is not None for r in rows)
+    # identical content arriving later hits the service's solve cache
+    assert rows[2]["cache_hit"] and not rows[0]["cache_hit"]
+    assert rows[0]["makespan"] == rows[2]["makespan"]
+    assert rs.meta["stats"]["summary"]["cache"]["hits"] >= 1
+
+
+def test_service_runner_rejects_multi_workflow_and_mixed_systems():
+    multi = Campaign(
+        name="bad",
+        axes=(Axis("technique", ("heft",)),),
+        defaults={"family": "mri", "system": "mri"},
+        runner="service",
+    )
+    with pytest.raises(ValueError, match="exactly one"):
+        run_campaign(multi)
+    mixed = Campaign(
+        name="bad2",
+        axes=(Axis("nodes", (2, 3)),),
+        defaults={"family": "layered", "size": 4, "seed": 0,
+                  "technique": "heft"},
+        runner="service",
+    )
+    with pytest.raises(ValueError, match="one shared continuum"):
+        run_campaign(mixed)
+    # Submissions have no policy/perturbation/orchestration channel —
+    # dropping those coords silently would run the wrong experiment
+    unsupported = Campaign(
+        name="bad3",
+        axes=(Axis("policy", ({"rules": [], "final": "olb"},)),),
+        defaults={"family": "layered", "size": 4, "nodes": 3, "seed": 0,
+                  "technique": "policy"},
+        runner="service",
+    )
+    with pytest.raises(ValueError, match="cannot honor"):
+        run_campaign(unsupported)
+
+
+def test_unknown_runner_suggests():
+    with pytest.raises(KeyError, match="did you mean 'inline'"):
+        run_campaign(_mini_campaign().replace(runner="inlin"))
+
+
+# ---------------------------------------------------------------------------
+# builtins + CLI
+# ---------------------------------------------------------------------------
+
+
+def test_builtin_campaigns_round_trip_and_example_spec_matches():
+    for name in ("smoke", "table9", "service", "engine"):
+        c = builtin_campaign(name)
+        assert campaign_from_json(json.dumps(c.to_json())) == c
+    example = Path(__file__).resolve().parent.parent / "examples" / "campaign_table9.json"
+    assert campaign_from_json(example.read_text()) == builtin_campaign("table9")
+    with pytest.raises(KeyError, match="did you mean 'smoke'"):
+        builtin_campaign("smoek")
+
+
+def test_cli_campaign_expand_run_report(tmp_path):
+    spec = Campaign(
+        name="cli",
+        axes=(
+            Axis("size", (4, 5)),
+            Axis("technique", ("milp", "heft")),
+        ),
+        defaults={
+            "family": "layered",
+            "nodes": 3,
+            "seed": 0,
+            "engine": "auto",
+            "solver_options": {"milp": {"time_limit": 5.0}},
+        },
+    )
+    spec_path = spec.save(tmp_path / "spec.json")
+    env = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"}
+
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro", "campaign", "expand", str(spec_path)],
+        capture_output=True, text=True, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "# 4 cells (0 skipped), runner=inline" in proc.stdout
+
+    out_path = tmp_path / "results.json"
+    csv_path = tmp_path / "results.csv"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro", "campaign", "run", str(spec_path),
+         "--out", str(out_path), "--csv", str(csv_path)],
+        capture_output=True, text=True, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "# deviation vs milp" in proc.stdout
+    rs = ResultSet.load(out_path)
+    assert len(rs) == 4
+    assert all(r["status"] == "ok" for r in rs)
+    saved_csv = ResultSet.from_csv(csv_path.read_text())
+    assert saved_csv.rows() == rs.rows()
+
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro", "campaign", "report", str(out_path),
+         "--vs", "milp"],
+        capture_output=True, text=True, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert proc.stdout.splitlines()[0].startswith("technique,")
+    techs = {line.split(",")[0] for line in proc.stdout.splitlines()[1:]}
+    assert techs == {"milp", "heft"}
+
+    # user errors exit cleanly with the did-you-mean message, no traceback
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro", "campaign", "run", str(spec_path),
+         "--runner", "servce"],
+        capture_output=True, text=True, env=env,
+    )
+    assert proc.returncode != 0
+    assert "Traceback" not in proc.stderr
+    assert "did you mean 'service'" in proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-guarded property round-trips
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    _HAVE_HYPOTHESIS = False
+
+
+if _HAVE_HYPOTHESIS:
+    _cell_values = st.one_of(
+        st.none(),
+        st.integers(min_value=-(2**31), max_value=2**31),
+        st.floats(allow_nan=False, allow_infinity=False, width=32),
+        st.booleans(),
+        st.text(max_size=8),
+    )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        st.lists(
+            st.fixed_dictionaries(
+                {},
+                optional={
+                    "a": st.integers(min_value=0, max_value=9),
+                    "b": st.floats(allow_nan=False, allow_infinity=False,
+                                   width=32),
+                    "c": st.text(alphabet=st.characters(codec="utf-8",
+                                                        exclude_characters="\r\n"),
+                                 max_size=6),
+                    "d": st.booleans(),
+                },
+            ),
+            max_size=8,
+        )
+    )
+    def test_resultset_json_round_trip_property(rows):
+        rs = ResultSet.from_rows(rows, name="prop")
+        rt = ResultSet.from_json(json.loads(json.dumps(rs.to_json())))
+        assert rt.rows() == rs.rows()
+        assert [c.to_json() for c in rt.columns] == [
+            c.to_json() for c in rs.columns
+        ]
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        st.lists(st.sampled_from(["milp", "heft", "ga"]), min_size=1,
+                 max_size=6),
+        st.lists(st.integers(min_value=2, max_value=30), min_size=1,
+                 max_size=4),
+    )
+    def test_expansion_is_product_and_stable_property(techniques, sizes):
+        c = Campaign(
+            name="p",
+            axes=(
+                Axis("technique", tuple(techniques)),
+                Axis("size", tuple(sizes)),
+            ),
+        )
+        cells = c.expand()
+        assert len(cells) == len(techniques) * len(sizes)
+        assert [x.coords for x in cells] == [x.coords for x in c.expand()]
+        rt = campaign_from_json(json.dumps(c.to_json()))
+        assert [x.coords for x in rt.expand()] == [x.coords for x in cells]

@@ -231,6 +231,37 @@ def test_scenario_missing_sections_rejected():
         scenario_from_json({"scenario": {"name": "x"}})
 
 
+def test_scenario_unknown_header_key_did_you_mean():
+    """A typo'd header key must fail loudly with a suggestion — it used to
+    fall through silently to the default policy."""
+    s = Scenario(name="t", system=mri_system(), workload=mri_workload())
+    obj = s.to_json()
+    obj["scenario"]["tehcnique"] = "heft"
+    with pytest.raises(ValueError, match="did you mean 'technique'"):
+        scenario_from_json(json.loads(json.dumps(obj)))
+
+
+def test_scenario_unknown_top_level_section_did_you_mean():
+    s = Scenario(name="t", system=mri_system(), workload=mri_workload())
+    obj = s.to_json()
+    obj["scenari"] = {"name": "x"}  # not a workflow (no 'tasks'), not reserved
+    with pytest.raises(ValueError, match="did you mean 'scenario'"):
+        scenario_from_json(json.loads(json.dumps(obj)))
+
+
+def test_scenario_unknown_nested_keys_rejected():
+    s = Scenario(name="t", system=mri_system(), workload=mri_workload())
+    for section, bad_key, hint in (
+        ("weights", "alhpa", "alpha"),
+        ("perturbation", "jitterr", "jitter"),
+        ("orchestration", "max_round", "max_rounds"),
+    ):
+        obj = s.to_json()
+        obj["scenario"][section][bad_key] = 1.0
+        with pytest.raises(ValueError, match=f"did you mean '{hint}'"):
+            scenario_from_json(json.loads(json.dumps(obj)))
+
+
 def test_scenario_reserved_workflow_name_rejected():
     """A workflow named like a scenario-file section would silently clobber
     the header on serialization — reject it loudly instead."""
