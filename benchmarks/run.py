@@ -14,6 +14,10 @@ reader and kernel microbenches.  Prints ``name,us_per_call,derived`` CSV.
                                                        # any campaign (built-in
                                                        # name or spec file)
                                                        # → BENCH_campaign.json
+    PYTHONPATH=src python -m benchmarks.run --campaign chaos
+                                                       # robustness lane: seeded
+                                                       # failure storms
+                                                       # → BENCH_chaos.json
     PYTHONPATH=src python -m benchmarks.run --scenario f.json  # time one
                                                        # orchestrated Scenario
 
@@ -100,6 +104,10 @@ def main(argv: list[str] | None = None) -> None:
     if args.campaign:
         from repro.campaigns import builtin
 
+        if args.campaign == "chaos":
+            # the robustness lane has its own SLO-centric export
+            _print_suite("chaos", builtin.run_chaos_bench)
+            return
         run = builtin.run_named_campaign(args.campaign)
         print("name,us_per_call,derived")
         for row in run.rows:

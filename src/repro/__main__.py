@@ -11,9 +11,12 @@
                                                     [--rate 2.0]
                                                     [--families mri,stgs]
                                                     [--node-events]
+                                                    [--chaos '{"horizon": 1200}']
     PYTHONPATH=src python -m repro serve trace.json [--out result.json]
                                                     [--batch-window 0.25]
                                                     [--max-batch 32]
+                                                    [--max-retries 3]
+                                                    [--fallback ga,heft]
                                                     [--records]
     PYTHONPATH=src python -m repro campaign expand (spec.json | smoke|table9|…)
     PYTHONPATH=src python -m repro campaign run (spec.json | builtin-name)
@@ -126,6 +129,11 @@ def main(argv: list[str] | None = None) -> int:
                          help="comma-separated workflow families")
     trace_p.add_argument("--node-events", action="store_true",
                          help="inject mid-trace drift/failure/recovery events")
+    trace_p.add_argument("--chaos", metavar="JSON",
+                         help="inject seeded failure/drift storms instead: "
+                         "chaos_events kwargs as JSON, e.g. "
+                         '\'{"failure_rate": 0.01, "horizon": 1200}\' '
+                         "({} for defaults; overrides --node-events)")
 
     serve_p = sub.add_parser("serve", help="run a trace through the "
                              "event-driven scheduling service")
@@ -142,6 +150,16 @@ def main(argv: list[str] | None = None) -> int:
                          "replays are deterministic per seed)")
     serve_p.add_argument("--records", action="store_true",
                          help="include per-submission records in the output")
+    serve_p.add_argument("--max-retries", type=int, default=3,
+                         help="per-submission requeue budget after "
+                         "preemption / transient infeasibility")
+    serve_p.add_argument("--backoff-base", type=float, default=1.0,
+                         help="first-retry backoff (virtual seconds; "
+                         "doubles per retry up to --backoff-cap)")
+    serve_p.add_argument("--backoff-cap", type=float, default=60.0)
+    serve_p.add_argument("--fallback", default="",
+                         help="comma-separated solver degradation chain "
+                         "for single solves, e.g. ga,heft")
 
     camp_p = sub.add_parser("campaign", help="declarative multi-scenario "
                             "experiments (repro.campaigns)")
@@ -185,6 +203,7 @@ def main(argv: list[str] | None = None) -> int:
             rate=args.rate,
             families=tuple(f.strip() for f in args.families.split(",") if f.strip()),
             node_events=args.node_events,
+            chaos=json.loads(args.chaos) if args.chaos else None,
         )
         path = trace.save(args.out)
         print(f"wrote {len(trace.submissions)} submissions "
@@ -201,6 +220,12 @@ def main(argv: list[str] | None = None) -> int:
                 max_batch=args.max_batch,
                 jitter=args.jitter,
                 seed=args.seed,
+                max_retries=args.max_retries,
+                backoff_base=args.backoff_base,
+                backoff_cap=args.backoff_cap,
+                fallback=tuple(
+                    t.strip() for t in args.fallback.split(",") if t.strip()
+                ),
             ),
         )
         payload = result.summary()

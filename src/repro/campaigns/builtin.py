@@ -13,6 +13,9 @@ exporter that keeps the legacy ``BENCH_*.json`` payloads byte-compatible:
   paper's optimality-gap analysis;
 * ``service`` — the 200-submission mixed-family arrival trace through the
   event-driven service (``trace`` runner) → ``BENCH_service.json``;
+* ``chaos``   — the robustness lane: the same trace runner under seeded
+  failure/recovery/drift storms (:func:`repro.service.chaos_events`) with
+  retries and a solver fallback chain enabled → ``BENCH_chaos.json``;
 * ``engine``  — per-backend population-evaluation throughput at three shape
   buckets (``engine-bench`` runner) → ``BENCH_engine.json``.
 
@@ -123,6 +126,42 @@ def service_campaign(num_submissions: int = 200, seed: int = 0) -> Campaign:
     )
 
 
+def chaos_campaign(num_submissions: int = 120, seed: int = 0) -> Campaign:
+    """The CI robustness lane: a seeded arrival stream under failure /
+    recovery / drift storms, with retries + a ``ga → heft`` fallback chain.
+
+    Rates are calibrated to the *execution backlog*, not the ~30-second
+    arrival span: the 120-submission stream keeps nodes busy for upwards of
+    a thousand virtual seconds, so storms run over ``horizon=1200`` at
+    rates giving a handful of outages and drifts landing on in-flight work
+    (real salvage + lost-work accounting) without degenerating into a
+    blackout."""
+    return Campaign(
+        name="chaos",
+        runner="trace",
+        runner_options={
+            "num_submissions": num_submissions,
+            "seed": seed,
+            "rate": 4.0,
+            "burst_prob": 0.15,
+            "burst_size": 8,
+            "chaos": {
+                "horizon": 1200.0,
+                "failure_rate": 0.004,
+                "outage_mean": 60.0,
+                "drift_rate": 0.01,
+                "drift_range": [0.4, 1.6],
+            },
+            "batch_window": 0.5,
+            "max_batch": 32,
+            "max_retries": 4,
+            "backoff_base": 0.5,
+            "backoff_cap": 30.0,
+            "fallback": ["ga", "heft"],
+        },
+    )
+
+
 #: (label, tasks, nodes, population) — three distinct pow2 shape buckets
 ENGINE_SHAPES = (
     {"shape": "small", "size": 24, "nodes": 4, "population": 64},
@@ -151,6 +190,7 @@ BUILTIN_CAMPAIGNS: dict[str, Callable[[], Campaign]] = {
     "smoke": smoke_campaign,
     "table9": table9_campaign,
     "service": service_campaign,
+    "chaos": chaos_campaign,
     "engine": engine_campaign,
 }
 
@@ -185,6 +225,7 @@ def run_trace(
     ro = campaign.runner_options
     n = int(ro.get("num_submissions", 200))
     seed = int(ro.get("seed", 0))
+    chaos = ro.get("chaos")
     trace = generate_trace(
         n,
         seed=seed,
@@ -192,14 +233,21 @@ def run_trace(
         burst_prob=float(ro.get("burst_prob", 0.1)),
         burst_size=int(ro.get("burst_size", 8)),
         node_events=bool(ro.get("node_events", False)),
+        chaos=dict(chaos) if chaos is not None else None,
     )
     t0 = time.perf_counter()
+    solve_budget = ro.get("solve_budget")
     result = serve_trace(
         trace,
         config=ServiceConfig(
             batch_window=float(ro.get("batch_window", 0.25)),
             max_batch=int(ro.get("max_batch", 32)),
             seed=seed,
+            max_retries=int(ro.get("max_retries", 3)),
+            backoff_base=float(ro.get("backoff_base", 1.0)),
+            backoff_cap=float(ro.get("backoff_cap", 60.0)),
+            fallback=tuple(ro.get("fallback", ())),
+            solve_budget=None if solve_budget is None else float(solve_budget),
         ),
         registry=registry,
     )
@@ -223,6 +271,10 @@ def run_trace(
                 "makespan": rec_json["observed_makespan"],
                 "cache_hit": rec.cache_hit,
                 "batched": rec.batched,
+                "retries": rec.retries,
+                "rescheduled_tasks": rec.rescheduled_tasks,
+                "lost_work_seconds": rec.lost_work_seconds,
+                "reason": rec.reason or "",
             }
         )
     meta = {
@@ -243,7 +295,8 @@ def run_trace(
         dtypes={"cell": "int", "cache_hit": "bool", "batched": "bool",
                 "makespan": "float", "predicted_makespan": "float",
                 "arrival": "float", "queue_delay": "float",
-                "turnaround": "float"},
+                "turnaround": "float", "retries": "int",
+                "rescheduled_tasks": "int", "lost_work_seconds": "float"},
     )
 
 
@@ -412,6 +465,46 @@ def run_service_bench(
         ("service_batching", float("nan"),
          f"groups={s['batched_groups']};submissions={s['batched_submissions']}"),
         ("service_events", float("nan"), f"count={s['events']}"),
+    ]
+
+
+def run_chaos_bench(
+    num_submissions: int = 120,
+    *,
+    seed: int = 0,
+    out_path: str | Path = "BENCH_chaos.json",
+) -> list[tuple]:
+    """`--campaign chaos`: seeded failure storms through the fault-tolerant
+    service → robustness rows + ``BENCH_chaos.json``."""
+    rs = run_campaign(chaos_campaign(num_submissions, seed))
+    stats = rs.meta["stats"]
+    s = stats["summary"]
+    wall = stats["wall_seconds"]
+    rb = s["robustness"]
+    qd = s.get("queue_delay", {})
+    stretch = rb.get("makespan_stretch", {})
+    payload = {
+        "num_submissions": num_submissions,
+        "seed": seed,
+        "wall_seconds": wall,
+        "summary": s,
+    }
+    Path(out_path).write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return [
+        ("chaos_outcomes", wall * 1e6,
+         f"completed={s['completed']}/{s['submissions']};"
+         f"rejected={s['rejected']};failed={s['failed']}"),
+        ("chaos_retries", float("nan"),
+         f"retries={rb['retries']};preempted={rb['preempted_submissions']};"
+         f"rescheduled_tasks={rb['rescheduled_tasks']}"),
+        ("chaos_lost_work", float("nan"),
+         f"seconds={rb['lost_work_seconds']:.3f}"),
+        ("chaos_queue_delay", float("nan"),
+         f"p95={qd.get('p95', float('nan')):.2f};"
+         f"p99={qd.get('p99', float('nan')):.2f}"),
+        ("chaos_stretch", float("nan"),
+         f"mean={stretch.get('mean', float('nan')):.2f};"
+         f"max={stretch.get('max', float('nan')):.2f}"),
     ]
 
 

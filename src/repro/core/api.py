@@ -43,6 +43,7 @@ from __future__ import annotations
 import dataclasses
 import difflib
 import json
+import time
 from pathlib import Path
 from typing import Any, Callable, Iterable, Mapping, Sequence
 
@@ -388,6 +389,21 @@ class Policy:
     final: str = "heft"
 
     @staticmethod
+    def chain(*techniques: str) -> "Policy":
+        """A pure fallback chain — try each technique in order, accept the
+        first valid schedule, the last entry unconditionally final.  The
+        declarative form of graceful degradation (``milp → ga → heft``):
+        ``Policy.chain("milp", "ga", "heft")`` routes exactly like the
+        imperative wrapper :func:`solve_with_fallback` walks its chain."""
+        if not techniques:
+            raise ValueError("Policy.chain needs at least one technique")
+        *head, final = techniques
+        return Policy(
+            rules=tuple(PolicyRule(t, forward_kwargs=False) for t in head),
+            final=final,
+        )
+
+    @staticmethod
     def paper_hybrid(
         milp_task_threshold: int = 25,
         mh_task_threshold: int = 600,
@@ -724,6 +740,94 @@ def route_problem(
     return reg.solve(
         technique, problem, weights, **technique_kwargs(reg, technique, opts)
     )
+
+
+class FallbackExhausted(RuntimeError):
+    """Every technique of a fallback chain raised; carries per-step errors."""
+
+    def __init__(self, errors: Sequence[str]) -> None:
+        super().__init__("; ".join(errors) or "empty fallback chain")
+        self.errors = tuple(errors)
+
+
+def solve_with_fallback(
+    problem: ScheduleProblem,
+    weights: ObjectiveWeights = ObjectiveWeights(),
+    *,
+    technique: str = "auto",
+    chain: Sequence[str] = (),
+    options: Mapping[str, Any] | None = None,
+    registry: SolverRegistry | None = None,
+    engine: str = "auto",
+    policy: Policy | None = None,
+    time_budget: float | None = None,
+) -> SolveReport:
+    """Graceful-degradation solve: the requested ``technique`` first, then
+    each ``chain`` entry in order, accepting the first *valid* schedule.
+
+    Unlike :meth:`Policy.route` (whose defensive net is deliberately narrow
+    — approximate techniques' errors are bugs), this wrapper survives ANY
+    step exception: a multi-tenant service must degrade one submission, not
+    crash the run.  Every failed step is recorded in the returned report's
+    ``fallbacks`` (``"tech:ErrorType: msg"``), so the caller can persist a
+    per-submission error trail.
+
+    ``time_budget`` (wall seconds, optional) bounds the whole attempt: each
+    time-limited technique (``needs_time_limit`` capability, e.g. MILP) has
+    its ``time_limit`` option clamped to the remaining budget, and once the
+    budget is spent every non-final step is skipped so the chain drops
+    straight to its cheapest technique instead of hanging.  Budgeted routing
+    trades replay determinism of the *technique choice* for bounded latency
+    — leave it ``None`` (the default) when bit-identical replay matters.
+
+    Raises :class:`FallbackExhausted` when every step raised; returns the
+    last (invalid) report when steps completed but none produced a valid
+    schedule, so infeasibility still surfaces as ``violations != 0``.
+    """
+    reg = registry if registry is not None else REGISTRY
+    attempts = [technique] + [c for c in chain if c != technique]
+    deadline = None if time_budget is None else time.monotonic() + float(time_budget)
+    errors: list[str] = []
+    invalid: SolveReport | None = None
+    last = len(attempts) - 1
+    for i, tech in enumerate(attempts):
+        remaining = None if deadline is None else deadline - time.monotonic()
+        if remaining is not None and remaining <= 0 and i < last:
+            errors.append(f"{tech}:skipped(budget)")
+            continue
+        opts = dict(options or {})
+        if (
+            remaining is not None
+            and tech in reg
+            and reg.capabilities(tech).needs_time_limit
+        ):
+            scoped = opts.get(tech)
+            scoped = dict(scoped) if isinstance(scoped, Mapping) else {}
+            limit = scoped.get("time_limit", remaining)
+            scoped["time_limit"] = min(float(limit), remaining)
+            opts[tech] = scoped
+        try:
+            rep = route_problem(
+                problem,
+                weights,
+                technique=tech,
+                policy=policy if i == 0 else None,
+                options=opts,
+                registry=reg,
+                engine=engine,
+            )
+        except Exception as e:  # noqa: BLE001 — degradation is the contract
+            errors.append(f"{tech}:{type(e).__name__}: {e}")
+            continue
+        if rep.schedule is not None and rep.schedule.violations == 0:
+            rep.fallbacks = tuple(errors) + rep.fallbacks
+            return rep
+        errors.append(f"{tech}:violations={rep.schedule.violations}")
+        invalid = rep
+    if invalid is not None:
+        invalid.fallbacks = tuple(errors)
+        return invalid
+    raise FallbackExhausted(errors)
 
 
 def fold_engine_options(

@@ -29,6 +29,7 @@ from repro.service.service import (
     ServiceConfig,
     ServiceResult,
     SubmissionRecord,
+    retry_backoff,
     serve_trace,
 )
 from repro.service.state import ContinuumState, NodeStatus
@@ -38,6 +39,7 @@ from repro.service.traces import (
     Submission,
     Trace,
     arrival_times,
+    chaos_events,
     continuum_system,
     generate_trace,
     load_trace,
@@ -63,9 +65,11 @@ __all__ = [
     "SubmissionRecord",
     "Trace",
     "arrival_times",
+    "chaos_events",
     "continuum_system",
     "generate_trace",
     "load_trace",
+    "retry_backoff",
     "serve_trace",
     "solve_cache_key",
     "trace_from_json",

@@ -30,12 +30,13 @@ import dataclasses
 from typing import Any
 
 from repro.core.api import (
+    FallbackExhausted,
     SolverRegistry,
     route_problem,
+    solve_with_fallback,
     technique_kwargs,
 )
 from repro.core.evaluator import Schedule
-from repro.core.milp import MilpSizeError
 from repro.core.workload_model import ScheduleProblem, canonical_hash
 from repro.engine.packed import bucket_of
 from repro.service.cache import SolveCache
@@ -55,6 +56,8 @@ class PreparedSubmission:
     cache_hit: bool = False
     batched: bool = False
     error: str | None = None
+    #: per-step error trail when a fallback chain degraded this solve
+    fallbacks: tuple[str, ...] = ()
 
 
 @dataclasses.dataclass
@@ -70,9 +73,26 @@ class AdmissionStats:
 
 
 class AdmissionBatcher:
-    def __init__(self, registry: SolverRegistry, cache: SolveCache) -> None:
+    def __init__(
+        self,
+        registry: SolverRegistry,
+        cache: SolveCache,
+        *,
+        fallback: tuple[str, ...] = (),
+        solve_budget: float | None = None,
+    ) -> None:
         self.registry = registry
         self.cache = cache
+        #: graceful-degradation chain for single solves (e.g. ``("ga",
+        #: "heft")``): when the requested technique raises or yields an
+        #: invalid schedule, each chain entry is tried in order via
+        #: :func:`repro.core.api.solve_with_fallback`.  Empty ⇒ the legacy
+        #: one-shot route (byte-compatible fault-free lane).
+        self.fallback = tuple(fallback)
+        #: optional wall-clock budget (seconds) for one submission's whole
+        #: chain — clamps MILP time limits and skips to the last resort once
+        #: spent.  None keeps routing fully deterministic.
+        self.solve_budget = solve_budget
 
     def _group_key(self, prep: PreparedSubmission) -> tuple[Any, ...] | None:
         """Batch-compatibility key, or None when the submission can only be
@@ -151,9 +171,10 @@ class AdmissionBatcher:
                 reports = batch_fn(
                     [m.problem for m in members], first.weights, **kw
                 )
-            except (MilpSizeError, ValueError, KeyError, TypeError):
+            except Exception:  # noqa: BLE001
                 # a bad member must not take the whole group down with it —
-                # retry one by one so only the culprit is rejected
+                # whatever the batch backend raised, retry one by one so only
+                # the culprit is rejected (and its error recorded)
                 singles.extend(members)
                 continue
             if reports is None:
@@ -171,17 +192,33 @@ class AdmissionBatcher:
         for prep in singles:
             sub = prep.submission
             try:
-                rep = route_problem(
-                    prep.problem,
-                    sub.weights,
-                    technique=sub.technique,
-                    options=sub.solver_options,
-                    registry=self.registry,
-                )
-            except (MilpSizeError, ValueError, KeyError, TypeError) as e:
-                # TypeError covers misspelled solver_options — the techniques
-                # take keyword-only params, so a tenant typo must reject the
-                # one submission, not crash the multi-tenant service
+                if self.fallback:
+                    rep = solve_with_fallback(
+                        prep.problem,
+                        sub.weights,
+                        technique=sub.technique,
+                        chain=self.fallback,
+                        options=sub.solver_options,
+                        registry=self.registry,
+                        time_budget=self.solve_budget,
+                    )
+                    prep.fallbacks = rep.fallbacks
+                else:
+                    rep = route_problem(
+                        prep.problem,
+                        sub.weights,
+                        technique=sub.technique,
+                        options=sub.solver_options,
+                        registry=self.registry,
+                    )
+            except FallbackExhausted as e:
+                # every chain step raised; the message is the full trail
+                prep.error = f"FallbackExhausted: {e}"
+                continue
+            except Exception as e:  # noqa: BLE001 — a tenant's bad options
+                # (misspelled kwargs → TypeError, oversized MILP → size
+                # error, or any solver bug) must reject the one submission
+                # with a recorded reason, not crash the multi-tenant service
                 prep.error = f"{type(e).__name__}: {e}"
                 continue
             stats.solver_calls += 1
@@ -198,6 +235,7 @@ class AdmissionBatcher:
             for prep in dup:
                 prep.schedule = rep.schedule
                 prep.error = rep.error
+                prep.fallbacks = rep.fallbacks
                 if servable:
                     prep.cache_hit = True
                     self.cache.stats.hits += 1

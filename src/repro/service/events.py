@@ -25,7 +25,18 @@ Event kinds (the ``kind`` field):
 ``node-failure``    a node dropped out of the continuum (trace-injected)
 ``node-recovery``   a failed node came back (trace-injected)
 ``rejected``        a submission could not be scheduled (infeasible)
+``preempted``       a node failure cancelled a submission's in-flight
+                    remainder (salvaged prefix + requeued rest)
+``requeue``         a preempted submission re-enters the admission queue
+                    after its virtual-time backoff
+``failed``          a submission exhausted its retry budget (terminal)
 ==================  ========================================================
+
+Scheduled events are *cancellable*: ``push`` returns the :class:`Event` as a
+cancellation token, and :meth:`EventLoop.cancel` marks it dead — a cancelled
+event is silently skipped when its time comes, never handled, never logged.
+This is what lets a node failure retract the pre-computed ``completion`` /
+``task-finished`` events of work that will now never happen.
 """
 
 from __future__ import annotations
@@ -63,6 +74,7 @@ class EventLoop:
     def __init__(self) -> None:
         self._heap: list[tuple[float, int, Event]] = []
         self._seq = 0
+        self._cancelled: set[int] = set()
         self.now = 0.0
         self.log: list[dict[str, Any]] = []
 
@@ -73,12 +85,25 @@ class EventLoop:
         heapq.heappush(self._heap, (t, ev.seq, ev))
         return ev
 
+    def cancel(self, ev: Event) -> bool:
+        """Retract a still-pending scheduled event (``ev`` is the token
+        ``push`` returned).  Idempotent; returns True when newly cancelled.
+        Only pending events may be cancelled — cancelling an event that
+        already popped is undefined (the caller tracks pendingness)."""
+        if ev.seq in self._cancelled:
+            return False
+        self._cancelled.add(ev.seq)
+        return True
+
     def pop(self) -> Event | None:
-        if not self._heap:
-            return None
-        t, _, ev = heapq.heappop(self._heap)
-        self.now = t
-        return ev
+        while self._heap:
+            t, seq, ev = heapq.heappop(self._heap)
+            if seq in self._cancelled:
+                self._cancelled.discard(seq)
+                continue  # cancelled: skip without advancing the clock
+            self.now = t
+            return ev
+        return None
 
     def record(self, event: Event) -> None:
         self.log.append(event.to_json())
@@ -90,14 +115,15 @@ class EventLoop:
         self.record(ev)
 
     def __len__(self) -> int:
-        return len(self._heap)
+        return len(self._heap) - len(self._cancelled)
 
     def __bool__(self) -> bool:
-        return bool(self._heap)
+        return len(self) > 0
 
     def drain(self) -> Iterator[Event]:
-        """Iterate events in clock order until the heap is empty."""
-        while self._heap:
+        """Iterate live events in clock order until the heap is empty."""
+        while True:
             ev = self.pop()
-            assert ev is not None
+            if ev is None:
+                return
             yield ev

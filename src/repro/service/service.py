@@ -23,8 +23,23 @@ by the virtual-clock event loop of :mod:`repro.service.events`:
 * ``node-drift`` / ``node-failure`` / ``node-recovery`` events mutate the
   continuum mid-run; future admissions route around them.
 
+Fault tolerance: a ``node-failure`` *preempts* every in-flight submission
+with unfinished tasks on the dead node — their pre-computed
+``task-finished``/``completion`` events are cancelled, the dead node's
+reserved occupancy is released (lost-work seconds accounted), the finished
+task prefix is salvaged, and the remainder requeues as a reduced
+sub-workflow after a capped exponential backoff in *virtual* time
+(:func:`retry_backoff`).  A per-submission retry budget
+(``ServiceConfig.max_retries``) bounds the loop; exhausting it ends the
+record in the terminal ``failed`` status with a recorded reason.  Admission
+infeasibility while part of the continuum is down is treated as transient
+and retried the same way.  Solver-level degradation is separate: a
+``ServiceConfig.fallback`` chain routes single solves through
+:func:`repro.core.api.solve_with_fallback`.
+
 Everything is deterministic: same trace + seed ⇒ bit-identical event log
-and per-submission makespans (asserted in tests).
+and per-submission makespans (asserted in tests) — backoff is computed in
+virtual time, so chaos runs replay exactly.
 """
 
 from __future__ import annotations
@@ -41,7 +56,7 @@ import numpy as np
 from repro.core.api import REGISTRY, SolverRegistry
 from repro.core.simulator import ExecutionReport, execute
 from repro.core.system_model import System
-from repro.core.workload_model import Workload, build_problem
+from repro.core.workload_model import Workflow, Workload, build_problem
 from repro.engine.packed import PackStats, pack_cache
 from repro.service.admission import AdmissionBatcher, PreparedSubmission
 from repro.service.cache import SolveCache, solve_cache_key
@@ -50,12 +65,32 @@ from repro.service.state import ContinuumState
 from repro.service.traces import Submission, Trace, load_trace
 
 
+def retry_backoff(attempt: int, *, base: float = 1.0, cap: float = 60.0) -> float:
+    """Capped exponential backoff (virtual seconds) before retry number
+    ``attempt`` (1-based): ``min(cap, base * 2**(attempt - 1))``.
+
+    Deliberately jitter-free — backoff runs on the *virtual* clock, so a
+    chaos run replays bit-identically at a fixed seed."""
+    if attempt < 1:
+        raise ValueError(f"attempt must be >= 1, got {attempt}")
+    return min(float(cap), float(base) * 2.0 ** (attempt - 1))
+
+
 @dataclasses.dataclass(frozen=True)
 class ServiceConfig:
     """Service knobs.  ``batch_window`` is how long (virtual seconds) the
     admission queue holds a submission hoping for batchable company;
     ``max_batch`` bounds one admission's size (the rest re-admit
-    immediately after, preserving order)."""
+    immediately after, preserving order).
+
+    Fault-tolerance knobs: ``max_retries`` is the per-submission budget of
+    requeues (preemption or transient infeasibility) before the terminal
+    ``failed`` status; ``backoff_base``/``backoff_cap`` shape
+    :func:`retry_backoff`; ``fallback`` is the solver degradation chain for
+    single solves (e.g. ``("ga", "heft")``); ``solve_budget`` optionally
+    bounds one submission's whole chain in wall seconds (leaves technique
+    choice timing-dependent — keep ``None`` when replay determinism
+    matters)."""
 
     batch_window: float = 0.25
     max_batch: int = 32
@@ -64,6 +99,11 @@ class ServiceConfig:
     jitter: float = 0.0
     seed: int = 0
     log_task_events: bool = True
+    max_retries: int = 3
+    backoff_base: float = 1.0
+    backoff_cap: float = 60.0
+    fallback: tuple[str, ...] = ()
+    solve_budget: float | None = None
 
     def __post_init__(self) -> None:
         if self.max_batch < 1:
@@ -78,6 +118,14 @@ class ServiceConfig:
             )
         if self.jitter < 0:
             raise ValueError(f"jitter must be >= 0, got {self.jitter}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.backoff_base <= 0:
+            raise ValueError(f"backoff_base must be > 0, got {self.backoff_base}")
+        if self.backoff_cap <= 0:
+            raise ValueError(f"backoff_cap must be > 0, got {self.backoff_cap}")
+        if self.solve_budget is not None and self.solve_budget <= 0:
+            raise ValueError(f"solve_budget must be > 0, got {self.solve_budget}")
 
     def to_json(self) -> dict[str, Any]:
         return dataclasses.asdict(self)
@@ -102,7 +150,12 @@ class SubmissionRecord:
     turnaround: float = math.nan
     cache_hit: bool = False
     batched: bool = False
-    status: str = "queued"  # queued | running | completed | rejected
+    retries: int = 0  # requeues consumed (preemption / transient infeasibility)
+    rescheduled_tasks: int = 0  # tasks sent back to admission by preemptions
+    lost_work_seconds: float = 0.0  # busy-seconds burned on cancelled windows
+    reason: str | None = None  # terminal reason for rejected / failed
+    fallbacks: list[str] = dataclasses.field(default_factory=list)
+    status: str = "queued"  # queued | running | completed | rejected | failed
 
     def to_json(self) -> dict[str, Any]:
         # NaN marks not-yet/never-happened timestamps internally; serialize
@@ -176,7 +229,58 @@ class ServiceResult:
                 "max": float(turnaround.max()),
             }
             out["queue_delay_mean"] = float(delays.mean())
+            out["queue_delay"] = {
+                "p50": float(np.percentile(delays, 50)),
+                "p95": float(np.percentile(delays, 95)),
+                "p99": float(np.percentile(delays, 99)),
+                "max": float(delays.max()),
+            }
+        # SLO / robustness metrics — all-zero on a fault-free run (new keys
+        # only; pre-existing fields above stay byte-compatible)
+        out["failed"] = sum(1 for r in self.records if r.status == "failed")
+        stretch = [
+            r.observed_makespan / r.predicted_makespan
+            for r in completed
+            if r.retries > 0 and r.predicted_makespan > 0
+        ]
+        robustness: dict[str, Any] = {
+            "retries": int(sum(r.retries for r in self.records)),
+            "preempted_submissions": sum(
+                1 for r in self.records if r.rescheduled_tasks > 0
+            ),
+            "rescheduled_tasks": int(
+                sum(r.rescheduled_tasks for r in self.records)
+            ),
+            "lost_work_seconds": float(
+                sum(r.lost_work_seconds for r in self.records)
+            ),
+        }
+        if stretch:
+            # failure-induced makespan stretch: observed over originally
+            # predicted, for completed submissions that were preempted
+            robustness["makespan_stretch"] = {
+                "mean": float(np.mean(stretch)),
+                "max": float(np.max(stretch)),
+            }
+        out["robustness"] = robustness
         return out
+
+
+def _reduced_workflow(wf: Workflow, done: set[str], attempt: int) -> Workflow:
+    """The unfinished remainder of ``wf`` as a standalone workflow.
+
+    The salvaged ``done`` set is dependency-closed by construction (a task
+    can only finish after its predecessors finished), so dropping done tasks
+    and their incoming dep edges leaves a valid DAG.  The ``~r<attempt>``
+    name suffix keeps retry shapes distinguishable in logs and content
+    hashes."""
+    base = wf.name.split("~r", 1)[0]
+    tasks = tuple(
+        dataclasses.replace(t, deps=tuple(d for d in t.deps if d not in done))
+        for t in wf.tasks
+        if t.name not in done
+    )
+    return dataclasses.replace(wf, name=f"{base}~r{attempt}", tasks=tasks)
 
 
 @dataclasses.dataclass
@@ -184,6 +288,9 @@ class _InFlight:
     prepared: PreparedSubmission
     report: ExecutionReport
     t0: float
+    #: seq → cancellation token for every still-scheduled task-finished /
+    #: completion event of this dispatch (preemption retracts them)
+    pending: dict[int, Event] = dataclasses.field(default_factory=dict)
 
 
 class SchedulingService:
@@ -201,7 +308,12 @@ class SchedulingService:
         self.registry = registry if registry is not None else REGISTRY
         self.state = ContinuumState(system, smoothing=config.smoothing)
         self.cache = SolveCache(config.cache_capacity)
-        self.batcher = AdmissionBatcher(self.registry, self.cache)
+        self.batcher = AdmissionBatcher(
+            self.registry,
+            self.cache,
+            fallback=config.fallback,
+            solve_budget=config.solve_budget,
+        )
         self.loop = EventLoop()
         self.records: dict[str, SubmissionRecord] = {}
         self.solver_calls = 0
@@ -232,15 +344,26 @@ class SchedulingService:
         self._admit_batch(batch_ids)
 
     def _on_task_finished(self, ev: Event) -> None:
-        pass  # occupancy was reserved at dispatch; the log entry is the point
+        # occupancy was reserved at dispatch; drop the cancellation token
+        # (``get``: a task finishing exactly at a preemption instant may
+        # outlive its submission's in-flight entry — the work did happen)
+        fl = self._inflight.get(ev.payload["id"])
+        if fl is not None:
+            fl.pending.pop(ev.seq, None)
 
     def _on_completion(self, ev: Event) -> None:
         sid = ev.payload["id"]
         fl = self._inflight.pop(sid)
+        self.state.retire(sid)
         self.state.observe(fl.prepared.problem, fl.report, fl.prepared.baked)
         rec = self.records[sid]
         rec.finished = self.loop.now
-        rec.observed_makespan = float(fl.report.makespan)
+        if rec.retries:
+            # spans first dispatch → final finish, across every preemption
+            # and requeue (the failure-induced stretch the summary reports)
+            rec.observed_makespan = rec.finished - rec.dispatched
+        else:
+            rec.observed_makespan = float(fl.report.makespan)
         rec.turnaround = rec.finished - rec.arrival
         rec.status = "completed"
 
@@ -248,10 +371,90 @@ class SchedulingService:
         self.state.set_drift(ev.payload["node"], ev.payload["factor"])
 
     def _on_node_failure(self, ev: Event) -> None:
-        self.state.fail(ev.payload["node"])
+        node = ev.payload["node"]
+        self.state.fail(node)
+        idx = self.state.index_of(node)
+        now = self.loop.now
+        victims = [
+            sid
+            for sid, fl in self._inflight.items()
+            if any(
+                log.node == idx and fl.t0 + log.finish > now
+                for log in fl.report.logs
+            )
+        ]
+        for sid in victims:
+            self._preempt(sid, node)
 
     def _on_node_recovery(self, ev: Event) -> None:
         self.state.recover(ev.payload["node"])
+
+    def _on_requeue(self, ev: Event) -> None:
+        self._queue.append(ev.payload["id"])
+        if not self._admit_scheduled:
+            self.loop.push(self.loop.now + self.config.batch_window, "admit")
+            self._admit_scheduled = True
+
+    # ---- fault tolerance ------------------------------------------------------
+    def _preempt(self, sid: str, node: str) -> None:
+        """A node failure invalidated ``sid``'s in-flight execution: cancel
+        its still-scheduled events, release its reserved occupancy, salvage
+        the finished task prefix, and requeue the remainder."""
+        now = self.loop.now
+        fl = self._inflight.pop(sid)
+        for pev in fl.pending.values():
+            if pev.time > now:  # same-time events already fired or will —
+                self.loop.cancel(pev)  # only genuinely-future ones retract
+        lost, _cancelled = self.state.release(sid, now)
+        sub = self._submissions[sid]
+        done = {log.task for log in fl.report.logs if fl.t0 + log.finish <= now}
+        rescheduled = len(sub.workflow.tasks) - len(done)
+        rec = self.records[sid]
+        rec.rescheduled_tasks += rescheduled
+        rec.lost_work_seconds += lost
+        self._submissions[sid] = dataclasses.replace(
+            sub,
+            workflow=_reduced_workflow(sub.workflow, done, rec.retries + 1),
+        )
+        self.loop.emit(
+            "preempted",
+            id=sid,
+            node=node,
+            salvaged=len(done),
+            rescheduled=rescheduled,
+            lost_work=lost,
+        )
+        self._requeue_or_fail(sid, cause=f"preempted by failure of {node}")
+
+    def _requeue_or_fail(self, sid: str, *, cause: str) -> None:
+        """Spend one retry on ``sid`` (backoff in virtual time) or, with the
+        budget exhausted, end it in the terminal ``failed`` status."""
+        rec = self.records[sid]
+        if rec.retries >= self.config.max_retries:
+            rec.status = "failed"
+            rec.finished = self.loop.now
+            rec.turnaround = rec.finished - rec.arrival
+            rec.reason = (
+                f"retry budget exhausted ({self.config.max_retries}); "
+                f"last: {cause}"
+            )
+            self.loop.emit("failed", id=sid, reason=rec.reason)
+            return
+        rec.retries += 1
+        rec.status = "queued"
+        delay = retry_backoff(
+            rec.retries,
+            base=self.config.backoff_base,
+            cap=self.config.backoff_cap,
+        )
+        self.loop.push(
+            self.loop.now + delay,
+            "requeue",
+            id=sid,
+            retry=rec.retries,
+            backoff=delay,
+            cause=cause,
+        )
 
     # ---- admission + dispatch -----------------------------------------------
     def _admit_batch(self, batch_ids: list[str]) -> None:
@@ -281,18 +484,28 @@ class SchedulingService:
 
         for prep in prepared:
             rec = self.records[prep.submission.id]
-            rec.admitted = now
+            if math.isnan(rec.admitted):
+                rec.admitted = now
             rec.cache_hit = prep.cache_hit
             rec.batched = prep.batched
+            if prep.fallbacks:
+                rec.fallbacks = list(prep.fallbacks)
             sched = prep.schedule
             if sched is None or sched.violations != 0:
-                rec.status = "rejected"
-                self.loop.emit(
-                    "rejected",
-                    id=prep.submission.id,
-                    reason=prep.error
-                    or f"violations={sched.violations if sched else 'unsolved'}",
+                reason = (
+                    prep.error
+                    or f"violations={sched.violations if sched else 'unsolved'}"
                 )
+                if prep.error is None and not all(self.state.up.values()):
+                    # infeasible while part of the continuum is down: treat
+                    # as transient — back off and retry rather than reject
+                    self._requeue_or_fail(
+                        prep.submission.id, cause=f"{reason} (node down)"
+                    )
+                    continue
+                rec.status = "rejected"
+                rec.reason = reason
+                self.loop.emit("rejected", id=prep.submission.id, reason=reason)
                 continue
             rec.technique_used = sched.technique
             self._dispatch(prep)
@@ -314,12 +527,16 @@ class SchedulingService:
             seed=seed,
             strict=False,
         )
-        self.state.reserve(report, t0)
+        self.state.reserve(report, t0, sid=sub.id)
         rec = self.records[sub.id]
-        rec.dispatched = t0
-        rec.queue_delay = delay
-        rec.predicted_makespan = float(sched.makespan)
+        if math.isnan(rec.dispatched):
+            # first dispatch only — on a retry the original timestamps (and
+            # the original predicted makespan, the stretch baseline) stand
+            rec.dispatched = t0
+            rec.predicted_makespan = float(sched.makespan)
+        rec.queue_delay += delay  # accumulates across requeues
         rec.status = "running"
+        extra: dict[str, Any] = {"retry": rec.retries} if rec.retries else {}
         self.loop.emit(
             "dispatch",
             id=sub.id,
@@ -329,18 +546,24 @@ class SchedulingService:
             predicted_makespan=float(sched.makespan),
             cache_hit=prep.cache_hit,
             batched=prep.batched,
+            **extra,
         )
+        pending: dict[int, Event] = {}
         if self.config.log_task_events:
             for log in report.logs:
-                self.loop.push(
+                tev = self.loop.push(
                     t0 + log.finish,
                     "task-finished",
                     id=sub.id,
                     task=log.task,
                     node=self.state.node_names[log.node],
                 )
-        self.loop.push(t0 + report.makespan, "completion", id=sub.id)
-        self._inflight[sub.id] = _InFlight(prepared=prep, report=report, t0=t0)
+                pending[tev.seq] = tev
+        cev = self.loop.push(t0 + report.makespan, "completion", id=sub.id)
+        pending[cev.seq] = cev
+        self._inflight[sub.id] = _InFlight(
+            prepared=prep, report=report, t0=t0, pending=pending
+        )
 
     # ---- the run loop -------------------------------------------------------
     _HANDLERS = {
@@ -351,6 +574,7 @@ class SchedulingService:
         "node-drift": _on_node_drift,
         "node-failure": _on_node_failure,
         "node-recovery": _on_node_recovery,
+        "requeue": _on_requeue,
     }
 
     def run(self, trace: Trace) -> ServiceResult:
@@ -381,6 +605,15 @@ class SchedulingService:
                 raise ValueError(
                     f"trace event {nev.kind!r} at t={nev.time} names unknown "
                     f"node {nev.node!r}; system has {sorted(known)}"
+                )
+            if nev.kind == "node-drift" and (
+                nev.factor is None or not float(nev.factor) > 0
+            ):
+                # same fail-fast-at-source rationale as unknown nodes;
+                # ``not >`` (rather than ``<=``) also catches NaN
+                raise ValueError(
+                    f"trace drift event at t={nev.time} for node "
+                    f"{nev.node!r} needs a factor > 0, got {nev.factor!r}"
                 )
             payload: dict[str, Any] = {"node": nev.node}
             if nev.factor is not None:

@@ -22,6 +22,16 @@ solve the service performs:
   deterministic queueing delay per dispatch), which is what turns 200 near
   simultaneous tenants into a meaningful p95 turnaround instead of 200
   independent simulations.
+
+Reservations are *revocable*: each dispatched submission's windows are held
+under its id until the work either completes (:meth:`ContinuumState.retire`
+folds them into the permanent occupancy base) or is preempted by a node
+failure (:meth:`ContinuumState.release` drops the unfinished windows,
+keeping only the time the nodes really spent, and reports the lost-work
+seconds).  Releasing rebuilds the frontiers from the retained base plus the
+surviving live reservations, so a dead node's queue-delay frontier never
+keeps inflating with work that was cancelled — and a later ``recover`` does
+not resurrect it.
 """
 
 from __future__ import annotations
@@ -62,9 +72,16 @@ class ContinuumState:
         self.true_factors = {name: 1.0 for name in self.node_names}
         self.up = {name: True for name in self.node_names}
         # occupancy state, indexed like the problem's node axis; the dict
-        # views below are derived from these arrays
-        self._frontier = np.zeros(len(self.node_names))
-        self._busy = np.zeros(len(self.node_names))
+        # views below are derived from these arrays.  The live arrays are
+        # always retired-base ⊕ live reservations, so a release can rebuild
+        # them exactly (frontier is a max — it cannot be "subtracted")
+        n = len(self.node_names)
+        self._frontier = np.zeros(n)
+        self._busy = np.zeros(n)
+        self._retired_frontier = np.zeros(n)
+        self._retired_busy = np.zeros(n)
+        #: submission id → (nodes, starts, finishes) of its reserved windows
+        self._live: dict[str, tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
         self.windows = 0  # reserved windows committed so far
 
     @property
@@ -113,16 +130,65 @@ class ContinuumState:
         latest = float(self._frontier[used].max()) if used.size else now
         return max(0.0, latest - now)
 
-    def reserve(self, report: ExecutionReport, t0: float) -> None:
+    def reserve(self, report: ExecutionReport, t0: float, sid: str | None = None) -> None:
         """Commit an execution's observed per-task windows (absolute time
         ``t0 + log``) into the node frontiers — one vectorized occupancy
-        fold shared with the engine simulator."""
+        fold shared with the engine simulator.
+
+        With ``sid`` the windows are held as a *revocable* reservation under
+        that submission id (``retire`` on completion, ``release`` on
+        preemption); without it they fold permanently."""
         if report.logs:
             nodes = np.array([log.node for log in report.logs], dtype=np.int64)
             starts = t0 + np.array([log.start for log in report.logs])
             finishes = t0 + np.array([log.finish for log in report.logs])
             accumulate_occupancy(self._frontier, self._busy, nodes, starts, finishes)
+            if sid is not None:
+                self._live[sid] = (nodes, starts, finishes)
+            else:
+                accumulate_occupancy(
+                    self._retired_frontier, self._retired_busy,
+                    nodes, starts, finishes,
+                )
         self.windows += len(report.logs)
+
+    def retire(self, sid: str) -> None:
+        """A reserved submission completed: fold its windows into the
+        permanent occupancy base and drop the revocable handle."""
+        win = self._live.pop(sid, None)
+        if win is not None:
+            accumulate_occupancy(self._retired_frontier, self._retired_busy, *win)
+
+    def release(self, sid: str, at: float) -> tuple[float, int]:
+        """A reserved submission was preempted at time ``at``: drop its
+        unfinished windows and rebuild the frontiers.
+
+        Windows that finished by ``at`` are kept whole (that work really
+        happened); windows straddling ``at`` are truncated — the node *was*
+        busy until the preemption, but the partial execution is wasted.
+        Returns ``(lost_work_seconds, cancelled_windows)``: the busy-seconds
+        burned on tasks that will be re-run and how many windows were cut."""
+        win = self._live.pop(sid, None)
+        if win is None:
+            return 0.0, 0
+        nodes, starts, finishes = win
+        done = finishes <= at
+        truncated = np.minimum(finishes, at)
+        keep = done | (truncated > starts)
+        accumulate_occupancy(
+            self._retired_frontier, self._retired_busy,
+            nodes[keep], starts[keep], truncated[keep],
+        )
+        lost = float(np.clip(truncated - starts, 0.0, None)[~done].sum())
+        self._rebuild_occupancy()
+        return lost, int((~done).sum())
+
+    def _rebuild_occupancy(self) -> None:
+        """Recompute the live frontiers: retired base ⊕ live reservations."""
+        self._frontier = self._retired_frontier.copy()
+        self._busy = self._retired_busy.copy()
+        for win in self._live.values():
+            accumulate_occupancy(self._frontier, self._busy, *win)
 
     # ---- feedback + trace events --------------------------------------------
     def baked_factors(self) -> dict[str, float]:
@@ -148,8 +214,18 @@ class ContinuumState:
             )
         return node
 
+    def index_of(self, node: str) -> int:
+        """Node-axis index of ``node`` (the problem/report node numbering)."""
+        return self._index[self._known(node)]
+
     def set_drift(self, node: str, factor: float) -> None:
-        self.true_factors[self._known(node)] = float(factor)
+        f = float(factor)
+        if not f > 0:  # also catches NaN
+            raise ValueError(
+                f"drift factor must be > 0, got {factor!r} for node {node!r} "
+                "(a stopped node is a node-failure event, not a zero speed)"
+            )
+        self.true_factors[self._known(node)] = f
 
     def fail(self, node: str) -> None:
         self.up[self._known(node)] = False

@@ -201,6 +201,87 @@ def load_trace(path: str | Path) -> Trace:
 # -----------------------------------------------------------------------------
 
 
+def chaos_events(
+    system: System,
+    horizon: float,
+    *,
+    seed: int = 0,
+    failure_rate: float = 0.02,
+    outage_mean: float = 40.0,
+    drift_rate: float = 0.05,
+    drift_range: tuple[float, float] = (0.4, 1.6),
+    keep_one_up: bool = True,
+) -> tuple[NodeEvent, ...]:
+    """Seeded failure/recovery/drift *storms* over ``[0, horizon)`` — the
+    distributional counterpart of ``generate_trace``'s three hand-placed
+    node events, for chaos-style robustness campaigns.
+
+    Two independent Poisson processes over the whole continuum:
+
+    * **failures** at ``failure_rate`` events per virtual second; each picks
+      a uniformly random currently-up node and takes it down for an
+      exponential outage of mean ``outage_mean`` seconds (the paired
+      ``node-recovery`` is emitted even when it lands past ``horizon``).
+      With ``keep_one_up`` (default) a failure that would black out the
+      last standing node is skipped — an empty continuum can only mass-fail
+      every submission, which measures nothing;
+    * **drifts** at ``drift_rate`` events per virtual second; each sets a
+      uniformly random node's true speed to ``uniform(*drift_range)``
+      (bounds must be positive — a zero speed is a failure, not a drift).
+
+    A pure function of its arguments: one ``numpy`` Generator seeded by
+    ``seed`` drives everything, so the same call is bit-identical run over
+    run (hypothesis-guarded in the tests)."""
+    if horizon <= 0:
+        raise ValueError(f"horizon must be > 0, got {horizon}")
+    if failure_rate < 0 or drift_rate < 0:
+        raise ValueError("failure_rate and drift_rate must be >= 0")
+    if outage_mean <= 0:
+        raise ValueError(f"outage_mean must be > 0, got {outage_mean}")
+    lo, hi = float(drift_range[0]), float(drift_range[1])
+    if not 0 < lo <= hi:
+        raise ValueError(
+            f"drift_range must satisfy 0 < lo <= hi, got {drift_range!r}"
+        )
+    rng = np.random.default_rng(seed)
+    names = [n.name for n in system.nodes]
+    events: list[NodeEvent] = []
+
+    down_until: dict[str, float] = {}
+    t = 0.0
+    while failure_rate > 0:
+        t += float(rng.exponential(1.0 / failure_rate))
+        if t >= horizon:
+            break
+        for node in [n for n, until in down_until.items() if until <= t]:
+            del down_until[node]
+        up = [n for n in names if n not in down_until]
+        if keep_one_up and len(up) <= 1:
+            continue  # never black out the whole continuum
+        if not up:
+            continue
+        node = up[int(rng.integers(0, len(up)))]
+        outage = float(rng.exponential(outage_mean))
+        events.append(NodeEvent(time=t, kind="node-failure", node=node))
+        events.append(
+            NodeEvent(time=t + outage, kind="node-recovery", node=node)
+        )
+        down_until[node] = t + outage
+
+    t = 0.0
+    while drift_rate > 0:
+        t += float(rng.exponential(1.0 / drift_rate))
+        if t >= horizon:
+            break
+        node = names[int(rng.integers(0, len(names)))]
+        factor = float(rng.uniform(lo, hi))
+        events.append(
+            NodeEvent(time=t, kind="node-drift", node=node, factor=factor)
+        )
+
+    return tuple(sorted(events, key=lambda e: (e.time, e.kind, e.node)))
+
+
 def arrival_times(
     n: int,
     *,
@@ -269,6 +350,7 @@ def generate_trace(
     families: Sequence[str] = FAMILIES,
     tenants: int = 8,
     node_events: bool = False,
+    chaos: Mapping[str, Any] | None = None,
     system: System | None = None,
     name: str = "trace",
 ) -> Trace:
@@ -278,7 +360,14 @@ def generate_trace(
     speed), a failure of the last node at 60% of the span and its recovery
     at 80% — the service must keep admitting around them.  Targets are drawn
     from the *embedded* system (N2 / A2 on the default continuum), so the
-    generated trace is always consumable by ``serve_trace``."""
+    generated trace is always consumable by ``serve_trace``.
+
+    ``chaos`` (kwargs for :func:`chaos_events`, e.g. ``{"failure_rate":
+    0.02, "drift_rate": 0.05}``) replaces the hand-placed events with seeded
+    failure/recovery/drift storms — the robustness campaign axis.  It takes
+    precedence over ``node_events``.  Storms default to the arrival span;
+    pass ``"horizon"`` to stretch them over the (much longer) execution
+    backlog so failures land on *running* work, not just queued work."""
     rng = np.random.default_rng(seed)
     system = system if system is not None else continuum_system()
     times = arrival_times(
@@ -301,8 +390,12 @@ def generate_trace(
             )
         )
     events: tuple[NodeEvent, ...] = ()
-    if node_events:
-        span = times[-1] if times else 1.0
+    span = times[-1] if times else 1.0
+    if chaos is not None:
+        ckw = dict(chaos)
+        horizon = float(ckw.pop("horizon", span))
+        events = chaos_events(system, horizon, seed=seed + 2, **ckw)
+    elif node_events:
         names = [n.name for n in system.nodes]
         drift_node = names[min(1, len(names) - 1)]
         fail_node = names[-1]
@@ -312,18 +405,24 @@ def generate_trace(
             NodeEvent(time=0.6 * span, kind="node-failure", node=fail_node),
             NodeEvent(time=0.8 * span, kind="node-recovery", node=fail_node),
         )
+    meta: dict[str, Any] = {
+        "seed": seed,
+        "rate": rate,
+        "burst_prob": burst_prob,
+        "burst_size": burst_size,
+        "families": list(families),
+        "tenants": tenants,
+        "node_events": bool(node_events),
+    }
+    if chaos is not None:
+        meta["chaos"] = {
+            k: list(v) if isinstance(v, tuple) else v
+            for k, v in dict(chaos).items()
+        }
     return Trace(
         name=name,
         system=system,
         submissions=tuple(subs),
         events=events,
-        meta={
-            "seed": seed,
-            "rate": rate,
-            "burst_prob": burst_prob,
-            "burst_size": burst_size,
-            "families": list(families),
-            "tenants": tenants,
-            "node_events": bool(node_events),
-        },
+        meta=meta,
     )

@@ -12,7 +12,7 @@ from repro.core.workload_model import (
     stgs_workflows,
     topological_order,
 )
-from repro.service import arrival_times, generate_trace
+from repro.service import arrival_times, chaos_events, continuum_system, generate_trace
 
 
 # ---------------------------------------------------------------------------
@@ -48,6 +48,17 @@ def test_arrival_trace_deterministic():
     assert json.dumps(a.to_json(), sort_keys=True) == json.dumps(
         b.to_json(), sort_keys=True
     )
+
+
+def test_chaos_trace_deterministic():
+    """A chaos-storm trace is a pure function of its seed, end to end."""
+    kw = dict(seed=9, chaos={"failure_rate": 0.1, "drift_rate": 0.2,
+                             "outage_mean": 10.0})
+    a = generate_trace(16, **kw)
+    b = generate_trace(16, **kw)
+    assert a.to_json() == b.to_json()
+    assert a.meta["chaos"]["failure_rate"] == 0.1
+    assert any(e.kind == "node-failure" for e in a.events)
     assert generate_trace(32, seed=6).to_json() != a.to_json()
 
 
@@ -114,6 +125,35 @@ if HAVE_HYPOTHESIS:
         assert len(a) == n
         assert all(t1 <= t2 for t1, t2 in zip(a, a[1:]))
         assert all(t >= 0.0 for t in a)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        horizon=st.floats(min_value=1.0, max_value=500.0),
+        failure_rate=st.floats(min_value=0.0, max_value=0.5),
+        drift_rate=st.floats(min_value=0.0, max_value=0.5),
+    )
+    def test_chaos_events_deterministic_and_well_formed(
+        seed, horizon, failure_rate, drift_rate
+    ):
+        system = continuum_system()
+        kw = dict(seed=seed, failure_rate=failure_rate, drift_rate=drift_rate)
+        a = chaos_events(system, horizon, **kw)
+        assert a == chaos_events(system, horizon, **kw)
+        names = {n.name for n in system.nodes}
+        assert all(e.node in names for e in a)
+        assert all(x.time <= y.time for x, y in zip(a, a[1:]))
+        # drifts carry a positive factor; failures pair with recoveries
+        assert all(
+            e.factor is not None and e.factor > 0
+            for e in a if e.kind == "node-drift"
+        )
+        kinds = [e.kind for e in a]
+        assert kinds.count("node-failure") == kinds.count("node-recovery")
+        # only paired recoveries may land past the horizon
+        assert all(
+            e.time < horizon for e in a if e.kind != "node-recovery"
+        )
 else:  # pragma: no cover
 
     def test_hypothesis_unavailable_noted():

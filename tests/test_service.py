@@ -3,6 +3,7 @@ the solve-cache hot path (zero solver invocations on repeats), admission
 batching, node drift/failure handling, trace I/O, and the serve CLI."""
 
 import json
+import math
 import subprocess
 import sys
 from pathlib import Path
@@ -376,6 +377,304 @@ def test_contention_delays_overlapping_tenants():
     assert r0.queue_delay == 0.0
     assert r1.queue_delay == pytest.approx(r0.observed_makespan)
     assert r1.turnaround > r0.turnaround
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance: preemption, requeue/backoff, terminal failure
+# ---------------------------------------------------------------------------
+
+def test_event_loop_cancellation_skips_silently():
+    loop = EventLoop()
+    keep = loop.push(1.0, "keep")
+    drop = loop.push(2.0, "drop")
+    loop.push(3.0, "tail")
+    assert loop.cancel(drop) is True
+    assert loop.cancel(drop) is False  # idempotent
+    assert len(loop) == 2
+    kinds = [ev.kind for ev in loop.drain()]
+    assert kinds == ["keep", "tail"]
+    assert keep.seq not in loop._cancelled
+
+
+def test_retry_backoff_doubles_then_caps():
+    from repro.service import retry_backoff
+
+    assert [retry_backoff(i, base=1.0, cap=10.0) for i in range(1, 6)] == [
+        1.0, 2.0, 4.0, 8.0, 10.0,
+    ]
+    with pytest.raises(ValueError, match="attempt"):
+        retry_backoff(0)
+
+
+def test_release_drops_cancelled_occupancy_and_recover_does_not_resurrect():
+    """Satellite regression: a failed node's frontier must stop reflecting
+    cancelled work, keep the truncated busy time, and stay deflated across
+    a recovery."""
+    from repro.core.simulator import ExecutionReport, TaskLog
+    from repro.service import ContinuumState
+
+    st = ContinuumState(_single_node_system())
+    rep = ExecutionReport(
+        logs=[TaskLog("T0", 0, 0.0, 10.0, 10.0)],
+        makespan=10.0, predicted_makespan=10.0, slowdown=1.0,
+    )
+    st.reserve(rep, t0=0.0, sid="s0")
+    assert st.frontier["N1"] == 10.0
+    st.fail("N1")
+    lost, cancelled = st.release("s0", at=1.0)
+    assert lost == pytest.approx(1.0) and cancelled == 1
+    # only the really-elapsed second remains on the frontier...
+    assert st.frontier["N1"] == pytest.approx(1.0)
+    st.recover("N1")
+    # ...and recovery must not resurrect the cancelled window
+    assert st.frontier["N1"] == pytest.approx(1.0)
+    assert st.busy_seconds["N1"] == pytest.approx(1.0)
+    # releasing an unknown/already-released sid is a no-op
+    assert st.release("s0", at=5.0) == (0.0, 0)
+
+
+def test_midrun_failure_preempts_salvages_and_completes_after_recovery():
+    """The tentpole end to end on one node: failure mid-task cancels the
+    stale completion, salvages the finished prefix, requeues the remainder
+    with backoff, and the submission completes after recovery."""
+    wf = _chain("C", [2.0, 2.0, 2.0])  # runs [0.25,2.25][2.25,4.25][4.25,6.25]
+    trace = Trace(
+        name="preempt",
+        system=_single_node_system(),
+        submissions=(_sub(0, wf, t=0.0),),
+        events=(
+            NodeEvent(time=3.0, kind="node-failure", node="N1"),
+            NodeEvent(time=10.0, kind="node-recovery", node="N1"),
+        ),
+    )
+    cfg = ServiceConfig(max_retries=5, backoff_base=1.0, backoff_cap=8.0)
+    r = SchedulingService(trace.system, cfg).run(trace)
+    rec = r.records[0]
+    assert rec.status == "completed"
+    assert rec.retries >= 2  # preemption + transient infeasibility while down
+    assert rec.rescheduled_tasks == 2  # T1 (mid-flight) and T2 (future)
+    assert rec.lost_work_seconds == pytest.approx(0.75)  # T1 ran 2.25→3.0
+    pre = [e for e in r.event_log if e["kind"] == "preempted"]
+    assert len(pre) == 1
+    assert pre[0]["salvaged"] == 1 and pre[0]["rescheduled"] == 2
+    # the pre-computed completion for t=6.25 was cancelled: exactly one
+    # completion fires, after the recovery
+    comps = [e for e in r.event_log if e["kind"] == "completion"]
+    assert len(comps) == 1 and comps[0]["time"] > 10.0
+    assert any(e["kind"] == "requeue" for e in r.event_log)
+    # stretch metrics surface in the summary
+    s = r.summary()
+    assert s["robustness"]["retries"] == rec.retries
+    assert s["robustness"]["lost_work_seconds"] == pytest.approx(0.75)
+    assert s["robustness"]["makespan_stretch"]["mean"] > 1.0
+    # and the chaos path stays replayable
+    r2 = SchedulingService(trace.system, cfg).run(trace)
+    assert r.event_log == r2.event_log
+    assert r.makespans() == r2.makespans()
+
+
+def test_preemption_releases_dead_node_occupancy_for_later_tenants():
+    """Satellite regression at the service level: with the preempted work
+    terminally failed (max_retries=0), a later submission must see a
+    frontier reflecting only the salvaged second, not the cancelled ten."""
+    a = Workflow("long", (Task("T0", cores=2, work=10.0,
+                               features=frozenset({"F1"})),))
+    b = _chain("B", [1.0])
+    trace = Trace(
+        name="stale-occ",
+        system=_single_node_system(),
+        submissions=(_sub(0, a, t=0.0), _sub(1, b, t=5.0)),
+        events=(
+            NodeEvent(time=1.0, kind="node-failure", node="N1"),
+            NodeEvent(time=2.0, kind="node-recovery", node="N1"),
+        ),
+    )
+    r = SchedulingService(
+        trace.system, ServiceConfig(max_retries=0)
+    ).run(trace)
+    ra, rb = r.records
+    assert ra.status == "failed"
+    assert "retry budget exhausted" in ra.reason
+    assert r.makespans()["s000"] is None
+    # stale occupancy would have forced rb to wait until t≈10.25
+    assert rb.status == "completed"
+    assert rb.queue_delay == 0.0
+    assert any(e["kind"] == "failed" and e["id"] == "s000"
+               for e in r.event_log)
+    assert r.summary()["failed"] == 1
+
+
+def test_failure_before_admission_retries_until_recovery():
+    """A submission whose admission window opens during a full outage is
+    transiently infeasible: it must back off and complete post-recovery
+    instead of being rejected."""
+    trace = Trace(
+        name="down-at-admit",
+        system=_single_node_system(),
+        submissions=(_sub(0, _chain("C", [1.0, 1.0]), t=0.5),),
+        events=(
+            NodeEvent(time=0.0, kind="node-failure", node="N1"),
+            NodeEvent(time=4.0, kind="node-recovery", node="N1"),
+        ),
+    )
+    r = SchedulingService(
+        trace.system, ServiceConfig(max_retries=5, backoff_base=1.0)
+    ).run(trace)
+    rec = r.records[0]
+    assert rec.status == "completed"
+    assert rec.retries > 0
+    assert rec.rescheduled_tasks == 0  # never dispatched before the outage
+    assert not any(e["kind"] == "rejected" for e in r.event_log)
+
+
+def test_retry_budget_exhaustion_is_terminal_failed_with_reason():
+    trace = Trace(
+        name="budget",
+        system=_single_node_system(),
+        submissions=(_sub(0, _chain("C", [4.0]), t=0.0),),
+        events=(NodeEvent(time=1.0, kind="node-failure", node="N1"),),
+    )
+    r = SchedulingService(
+        trace.system, ServiceConfig(max_retries=1, backoff_base=0.5)
+    ).run(trace)
+    rec = r.records[0]
+    assert rec.status == "failed"
+    assert "retry budget exhausted (1)" in rec.reason
+    assert math.isnan(rec.observed_makespan)
+    assert rec.finished > 0 and rec.turnaround > 0
+    json.dumps(rec.to_json(), allow_nan=False)  # still strict JSON
+    fails = [e for e in r.event_log if e["kind"] == "failed"]
+    assert len(fails) == 1 and fails[0]["reason"] == rec.reason
+
+
+def test_drift_after_dispatch_does_not_rewrite_inflight_work():
+    """Drift lands between dispatch and completion: the in-flight execution
+    keeps its dispatch-time speeds; only later submissions see the change."""
+    wf = _chain("C", [2.0, 2.0])
+    trace = Trace(
+        name="drift-mid",
+        system=_single_node_system(),
+        submissions=(_sub(0, wf, t=0.0), _sub(1, wf, t=30.0)),
+        events=(NodeEvent(time=1.0, kind="node-drift", node="N1", factor=0.5),),
+    )
+    r = SchedulingService(trace.system, ServiceConfig()).run(trace)
+    r0, r1 = r.records
+    assert r0.status == r1.status == "completed"
+    # in-flight work unaffected (model and truth agreed at dispatch time)
+    assert r0.observed_makespan == pytest.approx(r0.predicted_makespan)
+    # the later tenant executes at the drifted speed: twice as slow as the
+    # (not yet converged) model predicts
+    assert r1.observed_makespan == pytest.approx(2.0 * r1.predicted_makespan)
+
+
+def test_set_drift_rejects_nonpositive_factors():
+    from repro.service import ContinuumState
+
+    st = ContinuumState(_single_node_system())
+    for bad in (0.0, -1.0, float("nan")):
+        with pytest.raises(ValueError, match="drift factor"):
+            st.set_drift("N1", bad)
+    # and the service fails fast at run() on a bad trace event
+    trace = Trace(
+        name="bad-drift",
+        system=_single_node_system(),
+        submissions=(_sub(0, _chain("C", [1.0]), t=1.0),),
+        events=(NodeEvent(time=0.0, kind="node-drift", node="N1", factor=0.0),),
+    )
+    with pytest.raises(ValueError, match="factor > 0"):
+        SchedulingService(trace.system, ServiceConfig()).run(trace)
+
+
+def test_unexpected_solver_exception_rejects_with_recorded_error():
+    """An arbitrary (non-ValueError/TypeError) solver crash must reject the
+    one submission with a recorded reason, not abort the run."""
+    from repro.core.api import REGISTRY, SolverRegistry
+    from repro.core.evaluator import ObjectiveWeights
+
+    reg = SolverRegistry()
+
+    def boom(problem, weights=ObjectiveWeights(), **kw):
+        raise RuntimeError("synthetic solver crash")
+
+    reg.register("boom", boom)
+    reg.register("heft", REGISTRY.get("heft").fn)
+    subs = (
+        _sub(0, _chain("A", [1.0, 2.0]), t=0.0, technique="boom"),
+        _sub(1, _chain("B", [2.0, 1.0]), t=0.0, technique="heft"),
+    )
+    trace = Trace(name="crash", system=_two_node_system(), submissions=subs)
+    svc = SchedulingService(trace.system, ServiceConfig(batch_window=0.5),
+                            registry=reg)
+    r = svc.run(trace)
+    assert [rec.status for rec in r.records] == ["rejected", "completed"]
+    assert r.records[0].reason == "RuntimeError: synthetic solver crash"
+
+
+def test_fallback_chain_completes_submission_via_degraded_technique():
+    from repro.core.api import REGISTRY, SolverRegistry
+    from repro.core.evaluator import ObjectiveWeights
+
+    reg = SolverRegistry()
+
+    def boom(problem, weights=ObjectiveWeights(), **kw):
+        raise RuntimeError("synthetic solver crash")
+
+    reg.register("boom", boom)
+    reg.register("heft", REGISTRY.get("heft").fn)
+    trace = Trace(
+        name="fallback",
+        system=_two_node_system(),
+        submissions=(_sub(0, _chain("A", [1.0, 2.0]), t=0.0, technique="boom"),),
+    )
+    svc = SchedulingService(
+        trace.system, ServiceConfig(fallback=("heft",)), registry=reg
+    )
+    r = svc.run(trace)
+    rec = r.records[0]
+    assert rec.status == "completed"
+    assert rec.technique_used == "heft"
+    assert rec.fallbacks and rec.fallbacks[0].startswith("boom:RuntimeError")
+
+
+def test_chaos_trace_zero_silently_lost_and_bit_identical_replay():
+    """Acceptance: a chaos trace with mid-run failures ends every record in
+    a terminal status (with a reason when not completed) and replays
+    bit-identically at the fixed seed."""
+    trace = generate_trace(
+        20, seed=3, rate=2.0,
+        chaos={"horizon": 400.0, "failure_rate": 0.02, "outage_mean": 30.0,
+               "drift_rate": 0.02},
+    )
+    assert any(e.kind == "node-failure" for e in trace.events)
+    cfg = ServiceConfig(batch_window=0.5, seed=3, max_retries=3,
+                        backoff_base=0.5, backoff_cap=16.0)
+    a = SchedulingService(trace.system, cfg).run(trace)
+    b = SchedulingService(trace.system, cfg).run(trace)
+    assert a.event_log == b.event_log
+    assert a.makespans() == b.makespans()
+    assert [r.to_json() for r in a.records] == [r.to_json() for r in b.records]
+    for rec in a.records:
+        assert rec.status in ("completed", "rejected", "failed")
+        if rec.status != "completed":
+            assert rec.reason or any(
+                e["kind"] == "rejected" and e["id"] == rec.id
+                for e in a.event_log
+            )
+    # summary totals account for every submission
+    s = a.summary()
+    assert s["completed"] + s["rejected"] + s["failed"] == len(a.records)
+    json.dumps(s, allow_nan=False)  # strict JSON including new metric blocks
+
+
+def test_service_config_rejects_degenerate_fault_knobs():
+    with pytest.raises(ValueError, match="max_retries"):
+        ServiceConfig(max_retries=-1)
+    with pytest.raises(ValueError, match="backoff_base"):
+        ServiceConfig(backoff_base=0.0)
+    with pytest.raises(ValueError, match="backoff_cap"):
+        ServiceConfig(backoff_cap=0.0)
+    with pytest.raises(ValueError, match="solve_budget"):
+        ServiceConfig(solve_budget=0.0)
 
 
 # ---------------------------------------------------------------------------

@@ -90,3 +90,87 @@ def test_fitness_penalty_keeps_mh_feasible():
     prob = build_problem(system, Workload((wf,)))
     res = ga(prob, seed=1, pop_size=24, generations=25)
     assert res.schedule.violations == 0
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: solve_with_fallback
+# ---------------------------------------------------------------------------
+
+def _crashy_registry():
+    """A registry where 'boom' always raises and 'heft' is the real one."""
+    from repro.core.api import REGISTRY, SolverRegistry
+    from repro.core.evaluator import ObjectiveWeights
+
+    reg = SolverRegistry()
+
+    def boom(problem, weights=ObjectiveWeights(), **kw):
+        raise RuntimeError("synthetic solver crash")
+
+    reg.register("boom", boom)
+    reg.register("heft", REGISTRY.get("heft").fn)
+    return reg
+
+
+def _small_problem():
+    return build_problem(mri_system(), mri_workload())
+
+
+def test_solve_with_fallback_degrades_past_a_crashing_technique():
+    from repro.core.api import solve_with_fallback
+
+    rep = solve_with_fallback(
+        _small_problem(), technique="boom", chain=("heft",),
+        registry=_crashy_registry(),
+    )
+    assert rep.schedule is not None and rep.schedule.violations == 0
+    assert rep.schedule.technique == "heft"
+    # the error trail names the failed step and what it raised
+    assert rep.fallbacks and rep.fallbacks[0].startswith("boom:RuntimeError")
+
+
+def test_solve_with_fallback_exhausted_raises_with_full_trail():
+    from repro.core.api import FallbackExhausted, solve_with_fallback
+
+    reg = _crashy_registry()
+    with pytest.raises(FallbackExhausted) as exc:
+        solve_with_fallback(
+            _small_problem(), technique="boom", chain=("boom",), registry=reg
+        )
+    assert exc.value.errors == ("boom:RuntimeError: synthetic solver crash",)
+
+
+def test_solve_with_fallback_spent_budget_skips_to_last_resort():
+    from repro.core.api import solve_with_fallback
+
+    # an already-expired budget must skip every non-final step (recorded as
+    # skipped) and still produce the cheapest technique's valid schedule
+    rep = solve_with_fallback(
+        _small_problem(), technique="boom", chain=("heft",),
+        registry=_crashy_registry(), time_budget=1e-9,
+    )
+    assert rep.schedule is not None and rep.schedule.violations == 0
+    assert rep.schedule.technique == "heft"
+    assert "boom:skipped(budget)" in rep.fallbacks
+
+
+def test_solve_with_fallback_returns_last_invalid_report():
+    """Steps that complete but stay infeasible surface as violations, not an
+    exception — the caller decides rejection."""
+    from repro.core import Task, Workflow
+    from repro.core.api import solve_with_fallback
+
+    wf = Workflow("impossible", (Task("T0", features=frozenset({"F404"})),))
+    prob = build_problem(mri_system(), Workload((wf,)))
+    rep = solve_with_fallback(prob, technique="heft", chain=())
+    assert rep.schedule is not None and rep.schedule.violations > 0
+    assert any(f.startswith("heft:violations=") for f in rep.fallbacks)
+
+
+def test_policy_chain_builds_fallback_policy():
+    from repro.core.api import Policy
+
+    pol = Policy.chain("milp", "ga", "heft")
+    assert [r.technique for r in pol.rules] == ["milp", "ga"]
+    assert pol.final == "heft"
+    with pytest.raises(ValueError, match="at least one"):
+        Policy.chain()
