@@ -18,6 +18,10 @@ reader and kernel microbenches.  Prints ``name,us_per_call,derived`` CSV.
                                                        # robustness lane: seeded
                                                        # failure storms
                                                        # → BENCH_chaos.json
+    PYTHONPATH=src python -m benchmarks.run --campaign topology
+                                                       # generated continua +
+                                                       # twin calibration
+                                                       # → BENCH_topology.json
     PYTHONPATH=src python -m benchmarks.run --scenario f.json  # time one
                                                        # orchestrated Scenario
 
@@ -107,6 +111,11 @@ def main(argv: list[str] | None = None) -> None:
         if args.campaign == "chaos":
             # the robustness lane has its own SLO-centric export
             _print_suite("chaos", builtin.run_chaos_bench)
+            return
+        if args.campaign == "topology":
+            # the continuum lane adds twin-calibration + generator-scale
+            # rows beyond the generic campaign export
+            _print_suite("topology", builtin.run_topology_bench)
             return
         run = builtin.run_named_campaign(args.campaign)
         print("name,us_per_call,derived")

@@ -18,6 +18,15 @@
                                                     [--max-retries 3]
                                                     [--fallback ga,heft]
                                                     [--records]
+    PYTHONPATH=src python -m repro topology generate (spec.json | tiny|small|…)
+                                                    [--out system.json]
+                                                    [--seed 0]
+    PYTHONPATH=src python -m repro topology calibrate (spec.json | preset)
+                                                    [--perturb-seed 7]
+                                                    [--samples 32]
+                                                    [--noise 0.05]
+                                                    [--steps 300]
+                                                    [--out report.json]
     PYTHONPATH=src python -m repro campaign expand (spec.json | smoke|table9|…)
     PYTHONPATH=src python -m repro campaign run (spec.json | builtin-name)
                                                 [--runner inline|service]
@@ -101,6 +110,73 @@ def _campaign_main(args) -> int:
     return 0
 
 
+def _resolve_topology(spec: str, seed: int | None):
+    from repro.topology import load_spec, resolve_spec
+
+    try:
+        ts = load_spec(spec) if Path(spec).is_file() else resolve_spec(spec)
+    except ValueError as e:
+        raise SystemExit(str(e)) from None
+    if seed is not None:
+        ts = ts.replace(seed=seed)
+    return ts
+
+
+def _topology_main(args) -> int:
+    import time
+
+    from repro.topology import cached_system, calibration_report, tier_slices
+
+    spec = _resolve_topology(args.spec, args.seed)
+
+    if args.topology_cmd == "generate":
+        from repro.core.system_model import system_to_json
+
+        t0 = time.perf_counter()
+        system = cached_system(spec)
+        seconds = time.perf_counter() - t0
+        tiers = " ".join(
+            f"{name}={sl.stop - sl.start}" for name, sl in tier_slices(spec).items()
+        )
+        print(f"# {spec.name}: {system.num_nodes} nodes ({tiers}) "
+              f"generated in {seconds:.3f}s, seed={spec.seed}", file=sys.stderr)
+        payload = json.dumps(system_to_json(system), indent=2, sort_keys=True)
+        if args.out:
+            Path(args.out).write_text(payload + "\n")
+            print(f"wrote {args.out}", file=sys.stderr)
+        else:
+            print(payload)
+        return 0
+
+    # calibrate: perturb the twin, observe noisily, fit, report twin error
+    from repro.core.workload_model import Workload, random_layered_workflow
+
+    system = cached_system(spec)
+    size = args.tasks
+    workload = Workload(
+        (
+            random_layered_workflow(
+                size, name=f"W{size}", seed=size, max_cores=4,
+                feature_pool=("F1",),
+            ),
+        )
+    )
+    report = calibration_report(
+        system,
+        workload,
+        perturb_seed=args.perturb_seed,
+        samples_per_node=args.samples,
+        transfer_samples=args.transfer_samples,
+        noise=args.noise,
+        steps=args.steps,
+    )
+    payload = json.dumps(report, indent=2, sort_keys=True)
+    print(payload)
+    if args.out:
+        Path(args.out).write_text(payload + "\n")
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     parser = argparse.ArgumentParser(prog="repro", description=__doc__)
     sub = parser.add_subparsers(dest="cmd", required=True)
@@ -161,6 +237,37 @@ def main(argv: list[str] | None = None) -> int:
                          help="comma-separated solver degradation chain "
                          "for single solves, e.g. ga,heft")
 
+    top_p = sub.add_parser("topology", help="generated tiered continua + "
+                           "digital-twin calibration (repro.topology)")
+    tsub = top_p.add_subparsers(dest="topology_cmd", required=True)
+
+    tgen = tsub.add_parser("generate", help="expand a topology spec into a "
+                           "system JSON (Fig. 7 format + dtr matrix)")
+    tgen.add_argument("spec", help="topology spec JSON file or preset name "
+                      "(tiny | small | medium | large)")
+    tgen.add_argument("--seed", type=int, help="override the spec's seed")
+    tgen.add_argument("--out", help="write the system JSON here "
+                      "(default: stdout)")
+
+    tcal = tsub.add_parser("calibrate", help="perturb a generated continuum, "
+                           "fit factors from noisy observations, report "
+                           "twin-vs-truth makespan error before/after")
+    tcal.add_argument("spec", help="topology spec JSON file or preset name")
+    tcal.add_argument("--seed", type=int, help="override the spec's seed")
+    tcal.add_argument("--perturb-seed", type=int, default=7,
+                      help="seed for the 0.5-2.0x truth speed factors")
+    tcal.add_argument("--samples", type=int, default=32,
+                      help="observed task durations per node")
+    tcal.add_argument("--transfer-samples", type=int, default=0,
+                      help="observed link transfers (0 = speeds only)")
+    tcal.add_argument("--noise", type=float, default=0.05,
+                      help="lognormal observation noise sigma")
+    tcal.add_argument("--steps", type=int, default=300,
+                      help="gradient-descent steps")
+    tcal.add_argument("--tasks", type=int, default=48,
+                      help="size of the probe workload")
+    tcal.add_argument("--out", help="also write the report JSON here")
+
     camp_p = sub.add_parser("campaign", help="declarative multi-scenario "
                             "experiments (repro.campaigns)")
     csub = camp_p.add_subparsers(dest="campaign_cmd", required=True)
@@ -193,6 +300,9 @@ def main(argv: list[str] | None = None) -> int:
 
     if args.cmd == "campaign":
         return _campaign_main(args)
+
+    if args.cmd == "topology":
+        return _topology_main(args)
 
     if args.cmd == "trace":
         from repro.service import generate_trace

@@ -17,7 +17,10 @@ exporter that keeps the legacy ``BENCH_*.json`` payloads byte-compatible:
   failure/recovery/drift storms (:func:`repro.service.chaos_events`) with
   retries and a solver fallback chain enabled → ``BENCH_chaos.json``;
 * ``engine``  — per-backend population-evaluation throughput at three shape
-  buckets (``engine-bench`` runner) → ``BENCH_engine.json``.
+  buckets (``engine-bench`` runner) → ``BENCH_engine.json``;
+* ``topology`` — generated tiered continua (:mod:`repro.topology`): tier
+  scale × technique plus the digital-twin calibration headline
+  (twin-vs-truth makespan error before/after) → ``BENCH_topology.json``.
 
 Use :func:`builtin_campaign` to get a spec by name (it round-trips through
 JSON like any user spec) and :func:`run_builtin` / the per-lane helpers to
@@ -162,6 +165,39 @@ def chaos_campaign(num_submissions: int = 120, seed: int = 0) -> Campaign:
     )
 
 
+#: topology-lane scale points: generated-continuum preset × workload size.
+#: Sizes follow the node counts (16 / 64) so each cell has work to spread.
+TOPOLOGY_SCALES = ({"topology": "tiny", "size": 24},
+                   {"topology": "small", "size": 48})
+
+
+def topology_campaign(
+    *,
+    scales: tuple[dict, ...] = TOPOLOGY_SCALES,
+    techniques: tuple[str, ...] = ("heft", "ga"),
+) -> Campaign:
+    """The CI topology lane: generated tiered continua (``repro.topology``)
+    swept over tier scale × technique through the inline runner.  Cells
+    compile their ``topology`` coordinate through the fingerprint-keyed
+    spec → ``System`` cache, so both techniques share one expansion."""
+    return Campaign(
+        name="topology",
+        axes=(
+            Axis("scale", tuple(scales), zipped=True),
+            Axis("technique", tuple(techniques)),
+        ),
+        defaults={
+            "system": "topology",
+            "family": "layered",
+            "engine": "auto",
+            "solver_options": {
+                "ga": {"seed": 0, "pop_size": 24, "generations": 8},
+            },
+        },
+        runner="inline",
+    )
+
+
 #: (label, tasks, nodes, population) — three distinct pow2 shape buckets
 ENGINE_SHAPES = (
     {"shape": "small", "size": 24, "nodes": 4, "population": 64},
@@ -192,6 +228,7 @@ BUILTIN_CAMPAIGNS: dict[str, Callable[[], Campaign]] = {
     "service": service_campaign,
     "chaos": chaos_campaign,
     "engine": engine_campaign,
+    "topology": topology_campaign,
 }
 
 
@@ -530,6 +567,62 @@ def run_engine_bench_export(
             "candidates_per_second": float(r["candidates_per_second"]),
         }
     payload["pack_cache"] = rs.meta["stats"]["pack_cache"]
+    Path(out_path).write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return rows
+
+
+def run_topology_bench(
+    out_path: str | Path = "BENCH_topology.json",
+) -> list[tuple]:
+    """`--campaign topology`: tier scale × technique over generated continua
+    plus the digital-twin calibration headline → ``BENCH_topology.json``.
+
+    Per scale point, the twin experiment perturbs node speeds by seeded
+    0.5–2.0× factors, synthesizes noisy monitor observations, calibrates
+    (:func:`repro.topology.calibrate`), and reports twin-vs-truth makespan
+    error before and after.  A 1000-node generation timing row tracks the
+    generator's scale budget."""
+    from repro.core.workload_model import Workload, random_layered_workflow
+    from repro.topology import PRESETS, cached_system, calibration_report, generate
+
+    rs = run_campaign(topology_campaign())
+    rows = campaign_rows(rs)
+    calibration: dict[str, Any] = {}
+    for scale in TOPOLOGY_SCALES:
+        preset = str(scale["topology"])
+        system = cached_system(PRESETS[preset]())
+        size = int(scale["size"])
+        workload = Workload(
+            (
+                random_layered_workflow(
+                    size, name=f"W{size}", seed=size, max_cores=4,
+                    feature_pool=("F1",),
+                ),
+            )
+        )
+        rep = calibration_report(
+            system, workload, perturb_seed=7, samples_per_node=16,
+            noise=0.05, steps=200,
+        )
+        calibration[preset] = rep
+        rows.append(
+            (f"topology_{preset}_twin", float("nan"),
+             f"err_before={rep['twin_error_before']:.3f};"
+             f"err_after={rep['twin_error_after']:.3f};"
+             f"factor_rel_mae={rep['speed_factor_rel_mae']:.4f}")
+        )
+    t0 = time.perf_counter()
+    large = generate(PRESETS["large"]())
+    gen_seconds = time.perf_counter() - t0
+    rows.append(
+        ("topology_generate_large", gen_seconds * 1e6,
+         f"nodes={large.num_nodes}")
+    )
+    payload = {
+        "campaign": rs.to_json(),
+        "calibration": calibration,
+        "generate_large": {"nodes": large.num_nodes, "seconds": gen_seconds},
+    }
     Path(out_path).write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     return rows
 

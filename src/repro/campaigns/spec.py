@@ -440,9 +440,20 @@ def cell_system(coords: Mapping[str, Any]) -> System:
             raise ValueError("synthetic system needs a 'nodes' (or 'size') coordinate")
         # seeded by its own size, mirroring bench_table9_scale
         return synthetic_system(int(nodes), seed=int(nodes))
+    if kind == "topology":
+        from repro.topology import cached_system, resolve_spec
+
+        spec = coords.get("topology")
+        if spec is None:
+            raise ValueError(
+                "topology system needs a 'topology' coordinate "
+                "(a preset name or an inline spec dict)"
+            )
+        # fingerprint-keyed memo: cells sharing a topology expand it once
+        return cached_system(resolve_spec(spec))
     from repro.core.api import did_you_mean
 
-    options = ("synthetic", "mri", "continuum")
+    options = ("synthetic", "mri", "continuum", "topology")
     raise ValueError(
         f"unknown system kind {kind!r}; options {options}{did_you_mean(kind, options)}"
     )

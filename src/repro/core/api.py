@@ -606,7 +606,7 @@ class Scenario:
     orchestration: OrchestrationConfig = OrchestrationConfig()
     solver_options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
-    _RESERVED_SECTIONS = ("scenario", "nodes", "dtr_matrix")
+    _RESERVED_SECTIONS = ("scenario", "nodes", "dtr_matrix", "topology")
 
     def to_json(self) -> dict:
         for wf in self.workload.workflows:
@@ -684,6 +684,17 @@ def scenario_from_json(obj: Mapping[str, Any] | str) -> Scenario:
             f"'tasks' mapping"
         )
     system, workload = load_config(obj)
+    if "topology" in obj:
+        # inline generated continuum (repro.topology): a seeded tiered
+        # TopologySpec — or a preset name — in place of explicit "nodes"
+        if system is not None:
+            raise ValueError(
+                "scenario file has both a 'nodes' section and a 'topology' "
+                "spec; pick one system source"
+            )
+        from repro.topology import cached_system, resolve_spec
+
+        system = cached_system(resolve_spec(obj["topology"]))
     if system is None or workload is None:
         missing = "nodes" if system is None else "workflow"
         raise ValueError(f"scenario config is missing its {missing} section")

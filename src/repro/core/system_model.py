@@ -123,8 +123,21 @@ class System:
 
     def __post_init__(self) -> None:
         n = len(self.nodes)
+        if self.dtr.ndim != 2 or self.dtr.shape[0] != self.dtr.shape[1]:
+            raise ValueError(f"dtr matrix must be square, got {self.dtr.shape}")
         if self.dtr.shape != (n, n):
             raise ValueError(f"dtr must be [{n},{n}], got {self.dtr.shape}")
+        # fail fast on malformed rates — a NaN or negative GB/s here would
+        # otherwise surface much later as a nonsense makespan
+        if np.isnan(self.dtr).any():
+            bad = np.argwhere(np.isnan(self.dtr))[0]
+            raise ValueError(f"dtr contains NaN (first at {tuple(bad)})")
+        if (self.dtr < 0).any():
+            bad = np.argwhere(self.dtr < 0)[0]
+            raise ValueError(
+                f"dtr contains negative transfer rates (first at "
+                f"{tuple(bad)}: {self.dtr[tuple(bad)]})"
+            )
 
     @property
     def num_nodes(self) -> int:
@@ -198,7 +211,16 @@ def system_from_json(obj: Mapping[str, Any] | str) -> System:
     nodes = [node_from_json(name, spec) for name, spec in obj["nodes"].items()]
     dtr = None
     if "dtr_matrix" in obj:
-        dtr = np.asarray(obj["dtr_matrix"], dtype=np.float64)
+        rows = obj["dtr_matrix"]
+        if not rows or any(len(r) != len(rows) for r in rows):
+            raise ValueError(
+                f"dtr_matrix must be square, got "
+                f"{len(rows)}x{[len(r) for r in rows]}"
+            )
+        dtr = np.asarray(rows, dtype=np.float64)
+        # decode the JSON encoding of +inf (system_to_json writes -1.0,
+        # since JSON has no Infinity) so the matrix round-trips losslessly
+        dtr = np.where(dtr == -1.0, np.inf, dtr)
     return make_system(nodes, dtr)
 
 

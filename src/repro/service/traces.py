@@ -321,7 +321,12 @@ def _pick_workflow(
         wf = stgs_workflows()[
             ("W5_STGS1", "W6_STGS2", "W7_STGS3")[int(rng.integers(0, 3))]
         ]
-        return wf, "ga", dict(GA_OPTIONS)
+        # tenants tune their own GA seed: identical *content* under varying
+        # options misses the solve cache but reuses the engine's
+        # fingerprint-keyed pack (the admission batcher's warming path) —
+        # without this, every content-identical resubmission is absorbed by
+        # the solve cache and the pack LRU never sees a repeat
+        return wf, "ga", dict(GA_OPTIONS, seed=int(rng.integers(0, 4)))
     if family == "random":
         size = int(rng.choice([6, 8, 10, 12]))
         wf = random_layered_workflow(
@@ -352,6 +357,7 @@ def generate_trace(
     node_events: bool = False,
     chaos: Mapping[str, Any] | None = None,
     system: System | None = None,
+    topology: Any = None,
     name: str = "trace",
 ) -> Trace:
     """Generate a seeded mixed-family arrival trace.
@@ -367,8 +373,22 @@ def generate_trace(
     failure/recovery/drift storms — the robustness campaign axis.  It takes
     precedence over ``node_events``.  Storms default to the arrival span;
     pass ``"horizon"`` to stretch them over the (much longer) execution
-    backlog so failures land on *running* work, not just queued work."""
+    backlog so failures land on *running* work, not just queued work.
+
+    ``topology`` draws the tenants' continuum from a generated tiered
+    topology (:mod:`repro.topology`): a preset name, spec dict, or
+    :class:`~repro.topology.TopologySpec`.  Note the ``"tpu"`` family
+    requires F9 nodes, which tiered topologies do not provide — pick
+    ``families`` accordingly."""
     rng = np.random.default_rng(seed)
+    topology_spec = None
+    if topology is not None:
+        if system is not None:
+            raise ValueError("pass either system= or topology=, not both")
+        from repro.topology import cached_system, resolve_spec
+
+        topology_spec = resolve_spec(topology)
+        system = cached_system(topology_spec)
     system = system if system is not None else continuum_system()
     times = arrival_times(
         num_submissions, rate=rate, seed=seed + 1,
@@ -418,6 +438,11 @@ def generate_trace(
         meta["chaos"] = {
             k: list(v) if isinstance(v, tuple) else v
             for k, v in dict(chaos).items()
+        }
+    if topology_spec is not None:
+        meta["topology"] = {
+            "name": topology_spec.name,
+            "fingerprint": topology_spec.fingerprint(),
         }
     return Trace(
         name=name,

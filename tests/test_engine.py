@@ -285,6 +285,26 @@ def test_pack_reused_across_solve_cache_misses():
     assert result.pack_cache["hit_rate"] > 0.6
 
 
+def test_generated_stgs_trace_warms_pack_cache():
+    """Pin the trace-generator behavior that makes the pack LRU observable:
+    stgs submissions vary their GA seed per tenant, so content-identical
+    resubmissions miss the *solve* cache (distinct option keys) yet reuse
+    the fingerprint-keyed *pack*.  Before this, every repeat carried the
+    same options, was absorbed by the solve cache before reaching a solver,
+    and the service lane reported pack hit_rate == 0.0 forever."""
+    from repro.service import ServiceConfig, generate_trace, serve_trace
+
+    pack_cache().clear()
+    # stgs only: three distinct workflows across 24 submissions, so repeated
+    # content is certain; seeds drawn from {0..3} guarantee repeated
+    # (workflow, options) pairs never all collapse into the solve cache
+    trace = generate_trace(24, seed=5, rate=6.0, families=("stgs",))
+    result = serve_trace(trace, config=ServiceConfig(batch_window=0.5, seed=5))
+    assert all(r.status == "completed" for r in result.records)
+    assert result.pack_cache["hits"] > 0
+    assert 0.0 < result.pack_cache["hit_rate"] <= 1.0
+
+
 # -----------------------------------------------------------------------------
 # registry + scenario-level engine selection
 # -----------------------------------------------------------------------------

@@ -216,7 +216,10 @@ def test_dead_link_blocks_even_zero_data_edges():
              {"processing_speed": 1.0, "data_transfer_rate": 10.0})
         for i in range(2)
     ]
-    dead = np.where(np.eye(2, dtype=bool), np.inf, np.nan)  # no inter-node link
+    # no inter-node link: off-diagonal +inf is the canonical dead-link
+    # encoding (it JSON-round-trips as -1.0; NaN rates are rejected at
+    # System construction)
+    dead = np.full((2, 2), np.inf)
     system = make_system(nodes, dtr=dead)
     wf = Workflow(
         "W",

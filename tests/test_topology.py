@@ -1,0 +1,379 @@
+"""Seeded continuum topology generator + jax digital-twin calibration.
+
+Covers the `repro.topology` subsystem's invariants:
+
+* determinism — same spec/seed ⇒ byte-identical System JSON (fuzzed),
+* spec JSON round trip + strict parsing,
+* tier invariants — counts, speed ranges, and the latency hierarchy
+  (HPC island links > intra-HPC > any inter-tier path),
+* System dtr validation fail-fast (NaN / negative / non-square) and the
+  lossless +inf ↔ -1.0 JSON round trip,
+* calibration recovery — 0.5–2.0× perturbed speeds fitted back within
+  5% relative MAE, twin makespan error shrinking after calibration,
+* integration — campaign `topology` axis, inline Scenario topology.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import Workload, build_problem, random_layered_workflow
+from repro.engine import pack
+from repro.core.system_model import (
+    System,
+    make_system,
+    mri_system,
+    system_from_json,
+    system_to_json,
+)
+from repro.topology import (
+    LinkProfile,
+    PRESETS,
+    TierSpec,
+    TopologySpec,
+    cached_system,
+    calibrate,
+    calibration_report,
+    generate,
+    island_ids,
+    least_squares_factors,
+    perturbed_truth,
+    resolve_spec,
+    spec_from_json,
+    synthesize_observations,
+    tier_slices,
+    tiered_spec,
+)
+
+
+def _system_bytes(system) -> bytes:
+    return json.dumps(system_to_json(system), sort_keys=True).encode()
+
+
+# ---------------------------------------------------------------------------
+# spec validation + round trip
+# ---------------------------------------------------------------------------
+
+
+def test_link_profile_folds_latency_into_rate():
+    # effective rate = S / (latency + S / bandwidth): latency-free links
+    # saturate at the bandwidth, chatty links are dominated by latency
+    ideal = LinkProfile(bandwidth=1.25)
+    assert ideal.effective_rate(0.0625) == pytest.approx(1.25)
+    wan = LinkProfile(bandwidth=1.25, latency=2e-2)
+    assert wan.effective_rate(0.0625) < 1.25
+    # smaller reference transfers pay proportionally more latency
+    assert wan.effective_rate(0.001) < wan.effective_rate(0.0625)
+
+
+def test_path_profile_chains_uplinks():
+    spec = tiered_spec(1)
+    iot, hpc = 0, 3
+    path = spec.path_profile(iot, hpc)
+    uplinks = [spec.tiers[i].uplink for i in range(iot, hpc)]
+    assert path.bandwidth == min(u.bandwidth for u in uplinks)
+    assert path.latency == pytest.approx(sum(u.latency for u in uplinks))
+    # symmetric: same path class in both directions
+    back = spec.path_profile(hpc, iot)
+    assert back == path
+
+
+def test_spec_json_round_trip_and_fingerprint():
+    spec = tiered_spec(2, seed=11, name="rt")
+    again = spec_from_json(spec.to_json())
+    assert again == spec
+    assert again.fingerprint() == spec.fingerprint()
+    # bare header (no {"topology": ...} wrapper) parses too
+    assert spec_from_json(spec.to_json()["topology"]) == spec
+    # a spec edit changes the fingerprint
+    assert spec.replace(seed=12).fingerprint() != spec.fingerprint()
+
+
+def test_spec_validation_fails_fast():
+    with pytest.raises(ValueError, match="at least one tier"):
+        TopologySpec(name="empty", tiers=())
+    tier = tiered_spec(1).tiers[0]
+    with pytest.raises(ValueError, match="duplicate tier"):
+        TopologySpec(name="dup", tiers=(tier, tier))
+    with pytest.raises(ValueError, match="ref_transfer_mb"):
+        TopologySpec(name="bad", tiers=(tier,), ref_transfer_mb=0.0)
+    with pytest.raises(ValueError, match="island_link"):
+        TierSpec(
+            name="hpc", count=4, speed=(1.0, 2.0), cores=(8,),
+            memory=(1.0, 2.0), features=("F1",),
+            link=LinkProfile(bandwidth=1.0),
+            uplink=LinkProfile(bandwidth=1.0),
+            islands=2,  # islands > 1 without an island_link
+        )
+    with pytest.raises(ValueError, match="unknown"):
+        spec_from_json({"name": "x", "tiers": [], "bogus": 1})
+
+
+def test_resolve_spec_presets_and_errors():
+    assert resolve_spec("tiny").num_nodes == 16
+    assert resolve_spec("small").num_nodes == 64
+    spec = tiered_spec(1)
+    assert resolve_spec(spec) is spec
+    assert resolve_spec(spec.to_json()) == spec
+    assert resolve_spec(json.dumps(spec.to_json())) == spec
+    with pytest.raises(ValueError, match="unknown topology preset"):
+        resolve_spec("tinny")
+
+
+# ---------------------------------------------------------------------------
+# deterministic expansion
+# ---------------------------------------------------------------------------
+
+
+def test_generate_bit_identical_at_fixed_seed():
+    spec = tiered_spec(2, seed=3)
+    assert _system_bytes(generate(spec)) == _system_bytes(generate(spec))
+    # a different seed reshuffles draws (jitter + speeds)
+    other = generate(spec.replace(seed=4))
+    assert _system_bytes(other) != _system_bytes(generate(spec))
+
+
+def test_cached_system_memoizes_by_fingerprint():
+    spec = tiered_spec(1, seed=9, name="memo")
+    first = cached_system(spec)
+    # an equal-but-distinct spec object maps to the same System instance
+    assert cached_system(tiered_spec(1, seed=9, name="memo")) is first
+
+
+def test_tier_invariants_small_preset():
+    spec = PRESETS["small"]()
+    system = generate(spec)
+    slices = tier_slices(spec)
+    assert system.num_nodes == spec.num_nodes == 64
+    for tier in spec.tiers:
+        sl = slices[tier.name]
+        nodes = system.nodes[sl]
+        assert len(nodes) == tier.count
+        lo, hi = tier.speed
+        for node in nodes:
+            assert node.name.startswith(tier.name)
+            assert lo <= node.properties["processing_speed"] <= hi
+            assert node.resources["cores"] in tier.cores
+            assert tier.memory[0] <= node.resources["memory"] <= tier.memory[1]
+            assert frozenset(tier.features) == node.features
+
+    # latency hierarchy: island links beat the HPC fabric, which beats
+    # every cross-tier path (jitter is mean-preserving and small)
+    isl = island_ids(spec)
+    hpc = slices["hpc"]
+    dtr = system.dtr
+    same_island = (isl[:, None] == isl[None, :]) & (isl[:, None] >= 0)
+    np.fill_diagonal(same_island, False)
+    hpc_mask = np.zeros_like(same_island)
+    hpc_mask[hpc, hpc] = True
+    np.fill_diagonal(hpc_mask, False)
+    intra_hpc = hpc_mask & ~same_island
+    tier_of = np.repeat(
+        np.arange(len(spec.tiers)), [t.count for t in spec.tiers]
+    )
+    inter_tier = tier_of[:, None] != tier_of[None, :]
+    assert dtr[same_island].min() > dtr[intra_hpc].max()
+    assert dtr[intra_hpc].min() > dtr[inter_tier].max()
+
+
+def test_island_ids_contiguous_and_unique():
+    spec = PRESETS["small"]()  # hpc tier: 8 nodes in 2 islands
+    isl = island_ids(spec)
+    hpc = tier_slices(spec)["hpc"]
+    assert (isl[: hpc.start] == -1).all()  # only hpc is islanded
+    hpc_ids = isl[hpc]
+    assert set(hpc_ids) == {0, 1}
+    assert (np.diff(hpc_ids) >= 0).all()  # contiguous blocks
+
+
+# ---------------------------------------------------------------------------
+# System dtr validation + lossless JSON round trip (satellite)
+# ---------------------------------------------------------------------------
+
+
+def _two_nodes():
+    return mri_system().nodes[:2]
+
+
+def test_system_rejects_bad_dtr():
+    nodes = _two_nodes()
+    with pytest.raises(ValueError, match="square"):
+        make_system(nodes, np.ones((2, 3)))
+    with pytest.raises(ValueError, match="NaN"):
+        make_system(nodes, np.array([[np.inf, np.nan], [1.0, np.inf]]))
+    with pytest.raises(ValueError, match="negative"):
+        make_system(nodes, np.array([[np.inf, -0.5], [1.0, np.inf]]))
+
+
+def test_system_json_rejects_ragged_dtr():
+    obj = system_to_json(make_system(_two_nodes()))
+    obj["dtr_matrix"][0] = obj["dtr_matrix"][0][:1]
+    with pytest.raises(ValueError, match="square"):
+        system_from_json(obj)
+
+
+def test_system_json_round_trips_infinite_links():
+    dtr = np.array([[np.inf, 0.125], [np.inf, np.inf]])  # dead 1→0 link
+    system = make_system(_two_nodes(), dtr)
+    obj = system_to_json(system)
+    # JSON has no Infinity: encoded as the -1.0 sentinel...
+    assert obj["dtr_matrix"][1][0] == -1.0
+    # ...and decoded back to +inf, losslessly
+    again = system_from_json(obj)
+    assert np.array_equal(again.dtr, dtr)
+    assert _system_bytes(again) == _system_bytes(system)
+
+
+def test_generated_topology_round_trips_through_system_json():
+    system = generate(tiered_spec(1, seed=5))
+    assert _system_bytes(system_from_json(system_to_json(system))) == (
+        _system_bytes(system)
+    )
+
+
+# ---------------------------------------------------------------------------
+# digital-twin calibration
+# ---------------------------------------------------------------------------
+
+
+def _tiny_packed():
+    system = generate(tiered_spec(1, seed=2))
+    wf = random_layered_workflow(
+        24, name="probe", seed=24, max_cores=4, feature_pool=("F1",)
+    )
+    workload = Workload((wf,))
+    return system, workload, pack(build_problem(system, workload), pad=False)
+
+
+def test_calibration_recovers_perturbed_speeds_within_5pct():
+    system, _, packed = _tiny_packed()
+    _, f_true, _ = perturbed_truth(system, seed=7, link_range=(1.0, 1.0))
+    obs = synthesize_observations(
+        packed, speed_factors=f_true, samples_per_node=32, noise=0.05, seed=8
+    )
+    result = calibrate(packed, obs, steps=300)
+    covered = result.coverage > 0
+    assert covered.all()  # every node drew samples
+    rel = np.abs(result.speed_factors[covered] / f_true[covered] - 1.0)
+    assert rel.mean() < 0.05
+    # GD converged onto the closed-form separable optimum
+    np.testing.assert_allclose(
+        result.speed_factors, result.baseline_speed_factors, rtol=1e-3
+    )
+    assert result.loss[1] < result.loss[0]
+
+
+def test_least_squares_shrinks_unobserved_nodes_to_one():
+    _, _, packed = _tiny_packed()
+    n = packed.num_nodes
+    f_true = np.full(n, 2.0)
+    obs = synthesize_observations(
+        packed, speed_factors=f_true, samples_per_node=4, noise=0.0, seed=1
+    )
+    # keep observations for node 0 only
+    keep = obs.node == 0
+    import dataclasses
+
+    pruned = dataclasses.replace(
+        obs,
+        task=obs.task[keep],
+        node=obs.node[keep],
+        duration=obs.duration[keep],
+    )
+    f, _ = least_squares_factors(packed, pruned, l2=1e-6)
+    assert f[0] == pytest.approx(2.0, rel=1e-2)
+    np.testing.assert_allclose(f[1:], 1.0)
+
+
+def test_calibration_report_shrinks_twin_error():
+    system, workload, _ = _tiny_packed()
+    report = calibration_report(
+        system, workload, perturb_seed=7, samples_per_node=32,
+        noise=0.05, steps=300,
+    )
+    assert report["nodes"] == 16
+    assert report["speed_factor_rel_mae"] < 0.05
+    assert report["twin_error_after"] < report["twin_error_before"]
+    assert report["twin_error_after"] < 0.05
+    # the fitted factors beat (or match) nothing-fitted by construction;
+    # the closed-form baseline is in the same band as the GD fit
+    assert report["baseline_rel_mae"] < 0.10
+
+
+# ---------------------------------------------------------------------------
+# integration: campaign axis + inline Scenario topology
+# ---------------------------------------------------------------------------
+
+
+def test_cell_system_topology_axis():
+    from repro.campaigns.spec import cell_system
+
+    system = cell_system({"system": "topology", "topology": "tiny"})
+    assert system is cached_system(resolve_spec("tiny"))
+    inline = tiered_spec(1, seed=21).to_json()
+    assert cell_system({"system": "topology", "topology": inline}).num_nodes == 16
+    with pytest.raises(ValueError, match="'topology' coordinate"):
+        cell_system({"system": "topology"})
+
+
+def test_scenario_inline_topology():
+    from repro.core.api import scenario_from_json
+
+    wf_section = {
+        "t1": {"work": 1.0, "resources": {"cores": 1}, "features": ["F1"]}
+    }
+    scenario = scenario_from_json(
+        {
+            "scenario": {"name": "topo", "technique": "heft"},
+            "topology": tiered_spec(1, seed=13).to_json()["topology"],
+            "wf": {"tasks": wf_section},
+        }
+    )
+    assert scenario.system.num_nodes == 16
+    with pytest.raises(ValueError, match="pick one system source"):
+        scenario_from_json(
+            {
+                "scenario": {"name": "topo"},
+                "nodes": system_to_json(mri_system())["nodes"],
+                "topology": "tiny",
+                "wf": {"tasks": wf_section},
+            }
+        )
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzz (optional dependency, mirrored from test_property.py)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - container without hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        scale=st.integers(min_value=1, max_value=4),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_topology_expansion_deterministic(scale, seed):
+        spec = tiered_spec(scale, seed=seed)
+        a, b = generate(spec), generate(spec)
+        assert _system_bytes(a) == _system_bytes(b)
+        assert a.num_nodes == 16 * scale
+        # spec JSON survives a round trip under fuzzed parameters too
+        assert spec_from_json(spec.to_json()) == spec
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_topology_dtr_always_valid(seed):
+        system = generate(tiered_spec(1, seed=seed))
+        off = ~np.eye(system.num_nodes, dtype=bool)
+        assert np.isfinite(system.dtr[off]).all()
+        assert (system.dtr[off] > 0).all()
+        assert np.isinf(np.diag(system.dtr)).all()
