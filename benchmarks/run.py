@@ -85,8 +85,28 @@ def main(argv: list[str] | None = None) -> None:
                       help="time one orchestrated Scenario JSON end to end")
     parser.add_argument("--full", action="store_true",
                         help="default set only: add the 5000x5000 scale row")
+    parser.add_argument("--trace", metavar="PATH",
+                        help="record a Perfetto trace of the run to PATH "
+                        "(plus PATH.metrics.json)")
     args = parser.parse_args(argv)
 
+    if args.trace:
+        from pathlib import Path
+
+        from repro import obs
+
+        out = Path(args.trace)
+        obs.enable_tracing()
+        try:
+            _run_mode(args)
+        finally:
+            obs.write_trace(out)
+            obs.write_metrics(out.with_suffix(".metrics.json"))
+        return
+    _run_mode(args)
+
+
+def _run_mode(args: argparse.Namespace) -> None:
     if args.scenario:
         _run_scenario(args.scenario)
         return

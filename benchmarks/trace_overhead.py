@@ -1,0 +1,70 @@
+"""Tracing-overhead gate: traced vs untraced ``--campaign smoke``.
+
+    PYTHONPATH=src python -m benchmarks.trace_overhead --trace smoke.trace.json
+
+Runs the smoke campaign three times — once to warm jit/pack caches, once
+untraced, once traced (writing the Perfetto trace + flat metrics to the
+``--trace`` path) — and fails when the traced run exceeds the untraced run
+by more than ``--max-overhead-pct`` (plus a small absolute slack so that
+sub-second baselines don't fail on scheduler jitter).  CI runs this in the
+scheduling lane and uploads the trace as an artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+
+def _timed_smoke() -> float:
+    from repro.campaigns import builtin
+
+    t0 = time.perf_counter()
+    builtin.run_named_campaign("smoke", out_path=None)
+    return time.perf_counter() - t0
+
+
+def main(argv: list[str] | None = None) -> None:
+    parser = argparse.ArgumentParser(prog="benchmarks.trace_overhead")
+    parser.add_argument("--trace", metavar="PATH", default="smoke.trace.json",
+                        help="where the traced run writes its Perfetto trace")
+    parser.add_argument("--max-overhead-pct", type=float, default=5.0,
+                        help="fail when traced exceeds untraced by more "
+                        "than this percentage (default 5)")
+    parser.add_argument("--slack-seconds", type=float, default=0.25,
+                        help="absolute slack added to the budget so short "
+                        "baselines tolerate scheduler jitter")
+    args = parser.parse_args(argv)
+
+    from repro import obs
+
+    _timed_smoke()  # warmup: jit compilation + pack cache temperature
+    untraced = _timed_smoke()
+
+    out = Path(args.trace)
+    obs.enable_tracing()
+    try:
+        traced = _timed_smoke()
+    finally:
+        obs.write_trace(out)
+        obs.write_metrics(out.with_suffix(".metrics.json"))
+        obs.disable_tracing()
+
+    budget = untraced * (1.0 + args.max_overhead_pct / 100.0) + args.slack_seconds
+    overhead_pct = (traced - untraced) / untraced * 100.0
+    spans = len(obs.TRACER.spans)
+    print(f"untraced_seconds={untraced:.3f}")
+    print(f"traced_seconds={traced:.3f}")
+    print(f"overhead_pct={overhead_pct:+.2f}")
+    print(f"spans={spans}")
+    print(f"trace={out}")
+    if traced > budget:
+        raise SystemExit(
+            f"tracing overhead {overhead_pct:+.2f}% exceeds budget "
+            f"({args.max_overhead_pct}% + {args.slack_seconds}s slack)"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -177,8 +177,32 @@ def _topology_main(args) -> int:
     return 0
 
 
+def _obs_main(args) -> int:
+    from repro import obs
+
+    try:
+        summary = obs.summarize_trace(args.trace_file)
+    except (OSError, ValueError) as e:
+        raise SystemExit(f"invalid trace file {args.trace_file!r}: {e}") from None
+    if args.json:
+        print(json.dumps(summary, indent=2))
+        return 0
+    print(f"# {args.trace_file}: {summary['events']} events "
+          f"({summary['wall_spans']} wall spans, "
+          f"{summary['virtual_spans']} virtual spans) — valid trace_event JSON")
+    print(f"{'category':24s} {'count':>8s} {'total_ms':>10s}")
+    for cat, agg in summary["categories"].items():
+        print(f"{cat or '-':24s} {agg['count']:8d} {agg['total_us'] / 1e3:10.1f}")
+    print("# hottest spans (cumulative wall time):")
+    for row in summary["top_spans_us"]:
+        print(f"  {row['name']:32s} {row['total_us'] / 1e3:10.1f} ms")
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     parser = argparse.ArgumentParser(prog="repro", description=__doc__)
+    parser.add_argument("--verbose", action="store_true",
+                        help="enable INFO logging on the repro.* namespace")
     sub = parser.add_subparsers(dest="cmd", required=True)
 
     run_p = sub.add_parser("run", help="run a scenario through the orchestrator")
@@ -191,6 +215,9 @@ def main(argv: list[str] | None = None) -> int:
     run_p.add_argument("--out", help="also write the summary JSON here")
     run_p.add_argument("--out-dir", default="/tmp/repro_executor",
                        help="artifact directory for render backends")
+    run_p.add_argument("--trace", dest="trace_out", metavar="PATH",
+                       help="write a Perfetto trace of this run to PATH "
+                       "(+ PATH-adjacent .metrics.json)")
 
     sub.add_parser("techniques", help="list registered solver techniques")
     sub.add_parser("engines", help="list registered evaluation engines")
@@ -236,6 +263,9 @@ def main(argv: list[str] | None = None) -> int:
     serve_p.add_argument("--fallback", default="",
                          help="comma-separated solver degradation chain "
                          "for single solves, e.g. ga,heft")
+    serve_p.add_argument("--trace", dest="trace_out", metavar="PATH",
+                         help="write a Perfetto trace of this run to PATH "
+                         "(+ PATH-adjacent .metrics.json)")
 
     top_p = sub.add_parser("topology", help="generated tiered continua + "
                            "digital-twin calibration (repro.topology)")
@@ -286,6 +316,9 @@ def main(argv: list[str] | None = None) -> int:
                       "(default milp; 'none' disables)")
     crun.add_argument("--metric", default="makespan",
                       help="metric column for the gap report")
+    crun.add_argument("--trace", dest="trace_out", metavar="PATH",
+                      help="write a Perfetto trace of this run to PATH "
+                      "(+ PATH-adjacent .metrics.json)")
 
     crep = csub.add_parser("report", help="optimality-gap report from saved "
                            "ResultSet JSON")
@@ -296,7 +329,36 @@ def main(argv: list[str] | None = None) -> int:
     crep.add_argument("--per-cell", action="store_true",
                       help="print per-cell gaps instead of the aggregate")
 
+    obs_p = sub.add_parser("obs", help="summarize + validate a Perfetto "
+                           "trace written by a --trace run")
+    obs_p.add_argument("trace_file", help="trace_event JSON file")
+    obs_p.add_argument("--json", action="store_true",
+                       help="print the machine-readable summary JSON")
+
     args = parser.parse_args(argv)
+
+    from repro import obs
+
+    if args.verbose:
+        obs.setup_logging()
+    trace_out = getattr(args, "trace_out", None)
+    if trace_out:
+        obs.enable_tracing()
+    try:
+        return _dispatch(args)
+    finally:
+        if trace_out:
+            out = Path(trace_out)
+            obs.write_trace(out)
+            metrics_path = out.with_suffix(".metrics.json")
+            obs.write_metrics(metrics_path)
+            print(f"# wrote trace {out} (open in https://ui.perfetto.dev) "
+                  f"and metrics {metrics_path}", file=sys.stderr)
+
+
+def _dispatch(args) -> int:
+    if args.cmd == "obs":
+        return _obs_main(args)
 
     if args.cmd == "campaign":
         return _campaign_main(args)
@@ -339,6 +401,10 @@ def main(argv: list[str] | None = None) -> int:
             ),
         )
         payload = result.summary()
+        if args.trace_out:
+            from repro import obs
+
+            payload["telemetry"] = obs.telemetry()
         if args.records:
             payload["records"] = [r.to_json() for r in result.records]
         summary = json.dumps(payload, indent=2)

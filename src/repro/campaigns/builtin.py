@@ -456,10 +456,11 @@ def run_smoke(out_path: str | Path = "BENCH_table9.json") -> list[tuple]:
     """`--smoke`: the smoke campaign → legacy rows + ``BENCH_table9.json``."""
     rs = run_campaign(smoke_campaign())
     rows = table9_rows(rs)
-    payload = {
+    payload: dict[str, Any] = {
         name: {"us_per_call": None if us != us else float(us), "derived": derived}
         for name, us, derived in rows
     }
+    payload["telemetry"] = rs.meta.get("telemetry", {})
     Path(out_path).write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     return rows
 
@@ -480,6 +481,7 @@ def run_service_bench(
         "seed": seed,
         "wall_seconds": wall,
         "summary": s,
+        "telemetry": rs.meta.get("telemetry", {}),
     }
     Path(out_path).write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     ta = s.get("turnaround", {})
@@ -525,6 +527,7 @@ def run_chaos_bench(
         "seed": seed,
         "wall_seconds": wall,
         "summary": s,
+        "telemetry": rs.meta.get("telemetry", {}),
     }
     Path(out_path).write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     return [
@@ -567,6 +570,7 @@ def run_engine_bench_export(
             "candidates_per_second": float(r["candidates_per_second"]),
         }
     payload["pack_cache"] = rs.meta["stats"]["pack_cache"]
+    payload["telemetry"] = rs.meta.get("telemetry", {})
     Path(out_path).write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     return rows
 
@@ -622,6 +626,7 @@ def run_topology_bench(
         "campaign": rs.to_json(),
         "calibration": calibration,
         "generate_large": {"nodes": large.num_nodes, "seconds": gen_seconds},
+        "telemetry": rs.meta.get("telemetry", {}),
     }
     Path(out_path).write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     return rows
@@ -702,6 +707,7 @@ def run_named_campaign(
             "campaign": campaign.name,
             "wall_seconds": wall,
             "results": rs.to_json(),
+            "telemetry": rs.meta.get("telemetry", {}),
         }
         if vs and rs.baseline_present(vs):
             payload["deviation_vs"] = rs.deviation_report(vs).to_json()

@@ -43,6 +43,7 @@ from typing import Any, Callable
 
 import numpy as np
 
+from repro import obs
 from repro.core.api import (
     REGISTRY,
     Scenario,
@@ -63,7 +64,7 @@ from repro.core.workload_model import (
     canonical_hash,
     problem_fingerprint,
 )
-from repro.engine.packed import PackStats, bucket_of, pack_cache
+from repro.engine.packed import bucket_of, pack_cache
 from repro.service.cache import CacheStats
 from repro.campaigns.results import ResultSet
 from repro.campaigns.spec import Campaign, CampaignCell, cell_scenario
@@ -99,7 +100,16 @@ def run_campaign(
             f"unknown campaign runner {name!r}{did_you_mean(name, RUNNERS)}; "
             f"options {sorted(RUNNERS)}"
         )
-    return fn(campaign, registry=registry)
+    # every runner gets the same telemetry treatment: a campaign-level span
+    # and a meta["telemetry"] block of the metrics accumulated by this run
+    metrics0 = obs.METRICS.snapshot()
+    with obs.TRACER.span(
+        "campaign.run", cat="campaign",
+        args={"campaign": campaign.name, "runner": name},
+    ):
+        result = fn(campaign, registry=registry)
+    result.meta["telemetry"] = obs.telemetry(metrics0)
+    return result
 
 
 # ---------------------------------------------------------------------------
@@ -280,21 +290,25 @@ def run_inline(
         kw = technique_kwargs(reg, first.technique, opts)
         batch_fn = reg.get(first.technique).batch_fn
         assert batch_fn is not None  # _group_key guarantees it
-        t0 = time.perf_counter()
+        sp = obs.TRACER.timed(
+            "campaign.batch", cat="campaign",
+            args={"technique": first.technique, "size": len(members)},
+        )
         try:
             # direct batch_fn call (not solve_batch) so a runtime decline
             # (None) is visible and falls back to singles, mirroring the
             # service's admission batcher
-            reports = batch_fn(
-                [m.problem for m in members], first.weights, **kw
-            )
+            with sp:
+                reports = batch_fn(
+                    [m.problem for m in members], first.weights, **kw
+                )
         except (MilpSizeError, ValueError, KeyError, TypeError):
             singles.extend(members)  # retry singly; only the culprit fails
             continue
         if reports is None:
             singles.extend(members)
             continue
-        wall_us = (time.perf_counter() - t0) * 1e6
+        wall_us = sp.wall_us
         solver_calls += len(members)
         batched_groups += 1
         batched_submissions += len(members)
@@ -308,23 +322,27 @@ def run_inline(
     for prep in singles:
         sc = prep.scenario
         assert sc is not None and prep.problem is not None
-        t0 = time.perf_counter()
+        sp = obs.TRACER.timed(
+            "campaign.cell", cat="campaign",
+            args={"cell": prep.cell.index, "technique": sc.technique},
+        )
         try:
-            rep = route_problem(
-                prep.problem,
-                sc.weights,
-                technique=sc.technique,
-                policy=sc.policy,
-                options=sc.solver_options,
-                registry=reg,
-                engine=sc.engine,
-            )
+            with sp:
+                rep = route_problem(
+                    prep.problem,
+                    sc.weights,
+                    technique=sc.technique,
+                    policy=sc.policy,
+                    options=sc.solver_options,
+                    registry=reg,
+                    engine=sc.engine,
+                )
         except (MilpSizeError, ValueError, KeyError, TypeError) as e:
-            prep.wall_us = (time.perf_counter() - t0) * 1e6
+            prep.wall_us = sp.wall_us
             prep.status = f"failed({type(e).__name__})"
             prep.error = str(e)
             continue
-        prep.wall_us = (time.perf_counter() - t0) * 1e6
+        prep.wall_us = sp.wall_us
         prep.schedule = rep.schedule
         prep.fallbacks = rep.fallbacks
         prep.status = "ok"
@@ -374,9 +392,7 @@ def run_inline(
             prep.observed_makespan = float(xrep.makespan)
             prep.slowdown = float(xrep.slowdown)
 
-    pack_delta = PackStats(
-        *(b - a for a, b in zip(pack0, pack_cache().stats.snapshot()))
-    )
+    pack_delta = pack_cache().stats.delta(pack0)
     rows = [_base_row(p, coord_cols, executed=do_execute) for p in preps]
     meta = {
         "campaign": campaign.name,

@@ -49,6 +49,7 @@ from typing import Any, Callable, Iterable, Mapping, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core import heuristics, metaheuristics
 from repro.core.evaluator import ObjectiveWeights, Schedule
 from repro.core.milp import MilpSizeError, solve_milp
@@ -63,6 +64,8 @@ from repro.core.workload_model import (
     canonical_hash,
     workload_to_json,
 )
+
+_LOG = obs.logger("core.api")
 
 
 def did_you_mean(key: Any, options: Iterable[Any]) -> str:
@@ -745,12 +748,20 @@ def route_problem(
     "scenario says technique X with options O" contract."""
     reg = registry if registry is not None else REGISTRY
     opts = fold_engine_options(reg, options, engine)
-    if policy is not None or technique in ("auto", "policy"):
-        pol = policy if policy is not None else Policy.paper_hybrid()
-        return pol.route(problem, weights, registry=reg, **opts)
-    return reg.solve(
-        technique, problem, weights, **technique_kwargs(reg, technique, opts)
-    )
+    with obs.TRACER.span(
+        "solve.route", cat="solve",
+        args={"technique": technique, "tasks": problem.num_tasks},
+    ) as sp:
+        if policy is not None or technique in ("auto", "policy"):
+            pol = policy if policy is not None else Policy.paper_hybrid()
+            rep = pol.route(problem, weights, registry=reg, **opts)
+        else:
+            rep = reg.solve(
+                technique, problem, weights, **technique_kwargs(reg, technique, opts)
+            )
+        if rep.schedule is not None:
+            sp.set(resolved=rep.schedule.technique)
+        return rep
 
 
 class FallbackExhausted(RuntimeError):
@@ -801,42 +812,59 @@ def solve_with_fallback(
     errors: list[str] = []
     invalid: SolveReport | None = None
     last = len(attempts) - 1
-    for i, tech in enumerate(attempts):
-        remaining = None if deadline is None else deadline - time.monotonic()
-        if remaining is not None and remaining <= 0 and i < last:
-            errors.append(f"{tech}:skipped(budget)")
-            continue
-        opts = dict(options or {})
-        if (
-            remaining is not None
-            and tech in reg
-            and reg.capabilities(tech).needs_time_limit
-        ):
-            scoped = opts.get(tech)
-            scoped = dict(scoped) if isinstance(scoped, Mapping) else {}
-            limit = scoped.get("time_limit", remaining)
-            scoped["time_limit"] = min(float(limit), remaining)
-            opts[tech] = scoped
-        try:
-            rep = route_problem(
-                problem,
-                weights,
-                technique=tech,
-                policy=policy if i == 0 else None,
-                options=opts,
-                registry=reg,
-                engine=engine,
-            )
-        except Exception as e:  # noqa: BLE001 — degradation is the contract
-            errors.append(f"{tech}:{type(e).__name__}: {e}")
-            continue
-        if rep.schedule is not None and rep.schedule.violations == 0:
-            rep.fallbacks = tuple(errors) + rep.fallbacks
-            return rep
-        errors.append(f"{tech}:violations={rep.schedule.violations}")
-        invalid = rep
+    with obs.TRACER.span(
+        "solve.with_fallback", cat="solve", args={"technique": technique}
+    ) as chain_sp:
+        for i, tech in enumerate(attempts):
+            remaining = None if deadline is None else deadline - time.monotonic()
+            if remaining is not None and remaining <= 0 and i < last:
+                errors.append(f"{tech}:skipped(budget)")
+                continue
+            opts = dict(options or {})
+            if (
+                remaining is not None
+                and tech in reg
+                and reg.capabilities(tech).needs_time_limit
+            ):
+                scoped = opts.get(tech)
+                scoped = dict(scoped) if isinstance(scoped, Mapping) else {}
+                limit = scoped.get("time_limit", remaining)
+                scoped["time_limit"] = min(float(limit), remaining)
+                opts[tech] = scoped
+            with obs.TRACER.span(
+                "solve.attempt", cat="solve", args={"technique": tech, "step": i}
+            ) as sp:
+                try:
+                    rep = route_problem(
+                        problem,
+                        weights,
+                        technique=tech,
+                        policy=policy if i == 0 else None,
+                        options=opts,
+                        registry=reg,
+                        engine=engine,
+                    )
+                except Exception as e:  # noqa: BLE001 — degradation is the contract
+                    errors.append(f"{tech}:{type(e).__name__}: {e}")
+                    sp.set(error=errors[-1])
+                    _LOG.info("fallback: technique %s failed (%s: %s)",
+                              tech, type(e).__name__, e)
+                    continue
+            if rep.schedule is not None and rep.schedule.violations == 0:
+                rep.fallbacks = tuple(errors) + rep.fallbacks
+                chain_sp.set(resolved=tech, steps=i + 1)
+                if errors:
+                    _LOG.info("fallback: degraded to %s after %d failed step(s)",
+                              tech, len(errors))
+                return rep
+            errors.append(f"{tech}:violations={rep.schedule.violations}")
+            sp.set(error=errors[-1])
+            invalid = rep
+        chain_sp.set(errors=tuple(errors))
     if invalid is not None:
         invalid.fallbacks = tuple(errors)
+        _LOG.warning("fallback chain produced only invalid schedules: %s",
+                     "; ".join(errors))
         return invalid
     raise FallbackExhausted(errors)
 

@@ -27,6 +27,7 @@ from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core.workload_model import BIG_PENALTY, ScheduleProblem
 from repro.engine.packed import (
     FITNESS_ARRAY_KEYS,
@@ -112,6 +113,20 @@ def fitness_cache_sizes(usage_mode: str = "fixed") -> tuple[int, int]:
         _population_core(usage_mode)._cache_size(),
         _batched_population_core(usage_mode)._cache_size(),
     )
+
+
+def _jit_cache_collector() -> dict[str, int]:
+    single_f, batched_f = fitness_cache_sizes("fixed")
+    single_w, batched_w = fitness_cache_sizes("weighted")
+    return {
+        "single_fixed": single_f,
+        "batched_fixed": batched_f,
+        "single_weighted": single_w,
+        "batched_weighted": batched_w,
+    }
+
+
+obs.METRICS.register_collector("engine_jit_cache", _jit_cache_collector)
 
 
 def _pad_population(assignments, tasks_bucket: int):
@@ -321,9 +336,14 @@ class JaxEngine(ScheduleEngine):
         arrays = packed.device_arrays()
         core = _population_core(w.usage_mode)
         tb = packed.bucket[0]
+        bucket, mode = packed.bucket, w.usage_mode
 
         def fitness(assignments):
-            return core(_pad_population(assignments, tb), arrays, w.alpha, w.beta)
+            # compile-vs-execute split: a call during which the jit cache
+            # grew is a compile; the rest are steady-state executes
+            with obs.FITNESS.measure("jax", bucket, mode,
+                                     cache_size=core._cache_size):
+                return core(_pad_population(assignments, tb), arrays, w.alpha, w.beta)
 
         return fitness
 
@@ -339,7 +359,9 @@ class JaxEngine(ScheduleEngine):
         def fitness(assignments):
             import jax.numpy as jnp
 
-            return core(jnp.asarray(assignments), arrays, w.alpha, w.beta)
+            with obs.FITNESS.measure("jax-batch", bucket, w.usage_mode,
+                                     cache_size=core._cache_size):
+                return core(jnp.asarray(assignments), arrays, w.alpha, w.beta)
 
         fitness.bucket = bucket  # type: ignore[attr-defined]
         fitness.num_instances = len(problems)  # type: ignore[attr-defined]
@@ -373,6 +395,12 @@ class PallasEngine(ScheduleEngine):
 
         def fitness(assignments):
             a = _pad_population(assignments, tb).astype(jnp.int32)
+            # no jit-cache probe for the kernel path: the first call per
+            # bucket (autotune + kernel build) counts as the compile
+            with obs.FITNESS.measure("pallas", packed.bucket, w.usage_mode):
+                return _pallas_obj(a)
+
+        def _pallas_obj(a):
             makespan, violations = kops.population_makespan(
                 a,
                 durations=arrays["durations"],

@@ -32,6 +32,7 @@ from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core.workload_model import ScheduleProblem, problem_fingerprint
 
 _INF = 1e30
@@ -226,6 +227,14 @@ class PackStats:
     def snapshot(self) -> tuple[int, int, int]:
         return (self.hits, self.misses, self.evictions)
 
+    def delta(self, before: tuple[int, int, int]) -> "PackStats":
+        """Stats accumulated since ``before`` (a :meth:`snapshot` tuple).
+
+        The one place the ``after - before`` idiom lives — the service
+        summary, the campaign runner and the obs metrics delta all go
+        through here."""
+        return PackStats(*(b - a for a, b in zip(before, self.snapshot())))
+
     def to_json(self) -> dict[str, Any]:
         return {
             "hits": self.hits,
@@ -299,6 +308,18 @@ def pack_cache() -> PackCache:
     return _PACK_CACHE
 
 
+obs.METRICS.register_collector(
+    "pack_cache",
+    lambda: {
+        "hits": _PACK_CACHE.stats.hits,
+        "misses": _PACK_CACHE.stats.misses,
+        "evictions": _PACK_CACHE.stats.evictions,
+        "entries": len(_PACK_CACHE),
+        "retained_bytes": _PACK_CACHE.retained_bytes,
+    },
+)
+
+
 def pack(
     problem: ScheduleProblem,
     bucket: Bucket | None = None,
@@ -315,13 +336,19 @@ def pack(
     rebuild (tests)."""
     if bucket is None:
         bucket = bucket_of(problem, core_cap) if pad else exact_bucket(problem, core_cap)
-    if not use_cache:
-        return _build(problem, bucket, None, core_cap)
-    fingerprint = problem_fingerprint(problem)
-    key = (fingerprint, bucket, core_cap)
-    return _PACK_CACHE.get_or_build(
-        key, lambda: _build(problem, bucket, fingerprint, core_cap)
-    )
+    # span per pack() call, hit or miss: trace structure must not depend on
+    # cache temperature or replayed traces would not fingerprint identically
+    with obs.TRACER.span(
+        "engine.pack", cat="engine",
+        args={"bucket": "x".join(str(d) for d in bucket)},
+    ):
+        if not use_cache:
+            return _build(problem, bucket, None, core_cap)
+        fingerprint = problem_fingerprint(problem)
+        key = (fingerprint, bucket, core_cap)
+        return _PACK_CACHE.get_or_build(
+            key, lambda: _build(problem, bucket, fingerprint, core_cap)
+        )
 
 
 def stack_packed(

@@ -21,6 +21,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -121,6 +122,7 @@ def population_makespan(
     use = force or _CONFIG.use_pallas
     choice = _autotune_makespan(P, T, N, cmax, maxp, tile) if use else None
     if choice is not None:
+        obs.METRICS.counter("engine.dispatch.pallas").inc()
         tile, stream = choice
         pad = (-P) % tile
         if pad:
@@ -142,6 +144,9 @@ def population_makespan(
             interpret=_CONFIG.resolve_interpret(),
         )
         return mk[:P], viol[:P]
+    # trace-time count only: under jit this records per compilation, not
+    # per executed call (the pallas engine path above is never jitted)
+    obs.METRICS.counter("engine.dispatch.ref").inc()
     return ref.population_makespan_ref(
         assignments,
         durations=durations,

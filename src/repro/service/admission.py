@@ -29,6 +29,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+from repro import obs
 from repro.core.api import (
     FallbackExhausted,
     SolverRegistry,
@@ -118,6 +119,28 @@ class AdmissionBatcher:
             ),
         )
 
+    def _solve_single(self, prep: PreparedSubmission, sub: Submission):
+        """One per-submission solve (fallback chain when configured)."""
+        if self.fallback:
+            rep = solve_with_fallback(
+                prep.problem,
+                sub.weights,
+                technique=sub.technique,
+                chain=self.fallback,
+                options=sub.solver_options,
+                registry=self.registry,
+                time_budget=self.solve_budget,
+            )
+            prep.fallbacks = rep.fallbacks
+            return rep
+        return route_problem(
+            prep.problem,
+            sub.weights,
+            technique=sub.technique,
+            options=sub.solver_options,
+            registry=self.registry,
+        )
+
     def admit(self, prepared: list[PreparedSubmission]) -> AdmissionStats:
         """Fill each ``PreparedSubmission.schedule`` in place; returns stats.
 
@@ -168,9 +191,13 @@ class AdmissionBatcher:
                 # decline (None — e.g. a per-instance-only backend option)
                 # is visible and routes to singles instead of being counted
                 # as a batch that never happened
-                reports = batch_fn(
-                    [m.problem for m in members], first.weights, **kw
-                )
+                with obs.TRACER.span(
+                    "admission.batch_solve", cat="service",
+                    args={"technique": first.technique, "size": len(members)},
+                ):
+                    reports = batch_fn(
+                        [m.problem for m in members], first.weights, **kw
+                    )
             except Exception:  # noqa: BLE001
                 # a bad member must not take the whole group down with it —
                 # whatever the batch backend raised, retry one by one so only
@@ -192,25 +219,11 @@ class AdmissionBatcher:
         for prep in singles:
             sub = prep.submission
             try:
-                if self.fallback:
-                    rep = solve_with_fallback(
-                        prep.problem,
-                        sub.weights,
-                        technique=sub.technique,
-                        chain=self.fallback,
-                        options=sub.solver_options,
-                        registry=self.registry,
-                        time_budget=self.solve_budget,
-                    )
-                    prep.fallbacks = rep.fallbacks
-                else:
-                    rep = route_problem(
-                        prep.problem,
-                        sub.weights,
-                        technique=sub.technique,
-                        options=sub.solver_options,
-                        registry=self.registry,
-                    )
+                with obs.TRACER.span(
+                    "admission.solve", cat="service",
+                    args={"id": sub.id, "technique": sub.technique},
+                ):
+                    rep = self._solve_single(prep, sub)
             except FallbackExhausted as e:
                 # every chain step raised; the message is the full trail
                 prep.error = f"FallbackExhausted: {e}"
@@ -239,6 +252,8 @@ class AdmissionBatcher:
                 if servable:
                     prep.cache_hit = True
                     self.cache.stats.hits += 1
+                    obs.METRICS.counter("service.solve_cache.hits").inc()
                 else:
                     self.cache.stats.misses += 1
+                    obs.METRICS.counter("service.solve_cache.misses").inc()
         return stats

@@ -20,6 +20,7 @@ import dataclasses
 from collections import OrderedDict
 from typing import Any, Mapping
 
+from repro import obs
 from repro.core.evaluator import ObjectiveWeights, Schedule
 from repro.core.workload_model import (
     ScheduleProblem,
@@ -87,9 +88,11 @@ class SolveCache:
         sched = self._entries.get(key)
         if sched is None:
             self.stats.misses += 1
+            obs.METRICS.counter("service.solve_cache.misses").inc()
             return None
         self._entries.move_to_end(key)
         self.stats.hits += 1
+        obs.METRICS.counter("service.solve_cache.hits").inc()
         return sched
 
     def put(self, key: str, schedule: Schedule) -> None:
@@ -100,6 +103,7 @@ class SolveCache:
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
             self.stats.evictions += 1
+            obs.METRICS.counter("service.solve_cache.evictions").inc()
 
     def __len__(self) -> int:
         return len(self._entries)

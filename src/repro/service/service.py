@@ -53,16 +53,19 @@ from typing import Any
 
 import numpy as np
 
+from repro import obs
 from repro.core.api import REGISTRY, SolverRegistry
 from repro.core.simulator import ExecutionReport, execute
 from repro.core.system_model import System
 from repro.core.workload_model import Workflow, Workload, build_problem
-from repro.engine.packed import PackStats, pack_cache
+from repro.engine.packed import pack_cache
 from repro.service.admission import AdmissionBatcher, PreparedSubmission
 from repro.service.cache import SolveCache, solve_cache_key
 from repro.service.events import Event, EventLoop
 from repro.service.state import ContinuumState
 from repro.service.traces import Submission, Trace, load_trace
+
+_LOG = obs.logger("service")
 
 
 def retry_backoff(attempt: int, *, base: float = 1.0, cap: float = 60.0) -> float:
@@ -222,17 +225,20 @@ class ServiceResult:
             "nodes": self.nodes,
         }
         if len(turnaround):
+            # nearest-rank percentiles (repro.obs.nearest_rank): always an
+            # observed latency, never an interpolated one — the honest SLO
+            # read for small samples
             out["turnaround"] = {
                 "mean": float(turnaround.mean()),
-                "p50": float(np.percentile(turnaround, 50)),
-                "p95": float(np.percentile(turnaround, 95)),
+                "p50": obs.nearest_rank(turnaround, 50),
+                "p95": obs.nearest_rank(turnaround, 95),
                 "max": float(turnaround.max()),
             }
             out["queue_delay_mean"] = float(delays.mean())
             out["queue_delay"] = {
-                "p50": float(np.percentile(delays, 50)),
-                "p95": float(np.percentile(delays, 95)),
-                "p99": float(np.percentile(delays, 99)),
+                "p50": obs.nearest_rank(delays, 50),
+                "p95": obs.nearest_rank(delays, 95),
+                "p99": obs.nearest_rank(delays, 99),
                 "max": float(delays.max()),
             }
         # SLO / robustness metrics — all-zero on a fault-free run (new keys
@@ -355,7 +361,9 @@ class SchedulingService:
         sid = ev.payload["id"]
         fl = self._inflight.pop(sid)
         self.state.retire(sid)
-        self.state.observe(fl.prepared.problem, fl.report, fl.prepared.baked)
+        with obs.TRACER.span("state.observe", cat="service.state"):
+            self.state.observe(fl.prepared.problem, fl.report, fl.prepared.baked)
+        obs.METRICS.counter("service.completed").inc()
         rec = self.records[sid]
         rec.finished = self.loop.now
         if rec.retries:
@@ -405,7 +413,13 @@ class SchedulingService:
         for pev in fl.pending.values():
             if pev.time > now:  # same-time events already fired or will —
                 self.loop.cancel(pev)  # only genuinely-future ones retract
-        lost, _cancelled = self.state.release(sid, now)
+        with obs.TRACER.span("state.release", cat="service.state",
+                             args={"id": sid, "node": node}):
+            lost, _cancelled = self.state.release(sid, now)
+        obs.METRICS.counter("service.preemptions").inc()
+        obs.METRICS.counter("service.lost_work_seconds").inc(lost)
+        _LOG.info("preempted %s (failure of %s, %.1fs lost work)",
+                  sid, node, lost)
         sub = self._submissions[sid]
         done = {log.task for log in fl.report.logs if fl.t0 + log.finish <= now}
         rescheduled = len(sub.workflow.tasks) - len(done)
@@ -438,8 +452,11 @@ class SchedulingService:
                 f"retry budget exhausted ({self.config.max_retries}); "
                 f"last: {cause}"
             )
+            obs.METRICS.counter("service.failed").inc()
+            _LOG.warning("failed %s: %s", sid, rec.reason)
             self.loop.emit("failed", id=sid, reason=rec.reason)
             return
+        obs.METRICS.counter("service.requeues").inc()
         rec.retries += 1
         rec.status = "queued"
         delay = retry_backoff(
@@ -460,7 +477,8 @@ class SchedulingService:
     def _admit_batch(self, batch_ids: list[str]) -> None:
         now = self.loop.now
         prepared: list[PreparedSubmission] = []
-        effective = self.state.effective_system()
+        with obs.TRACER.span("state.effective_system", cat="service.state"):
+            effective = self.state.effective_system()
         baked = self.state.baked_factors()
         for sid in batch_ids:
             sub = self._submissions[sid]
@@ -477,10 +495,19 @@ class SchedulingService:
                     baked=baked,
                 )
             )
-        stats = self.batcher.admit(prepared)
+        with obs.TRACER.span("service.admit", cat="service",
+                             args={"batch": len(batch_ids)}):
+            stats = self.batcher.admit(prepared)
         self.solver_calls += stats.solver_calls
         self.batched_groups += stats.batched_groups
         self.batched_submissions += stats.batched_submissions
+        obs.METRICS.counter("service.solver_calls").inc(stats.solver_calls)
+        obs.METRICS.counter("service.admission.batched_groups").inc(
+            stats.batched_groups
+        )
+        obs.METRICS.counter("service.admission.batched_submissions").inc(
+            stats.batched_submissions
+        )
 
         for prep in prepared:
             rec = self.records[prep.submission.id]
@@ -505,6 +532,8 @@ class SchedulingService:
                     continue
                 rec.status = "rejected"
                 rec.reason = reason
+                obs.METRICS.counter("service.rejected").inc()
+                _LOG.info("rejected %s: %s", prep.submission.id, reason)
                 self.loop.emit("rejected", id=prep.submission.id, reason=reason)
                 continue
             rec.technique_used = sched.technique
@@ -516,18 +545,22 @@ class SchedulingService:
         assert sched is not None
         now = self.loop.now
         delay = self.state.queue_delay(sched.assignment, now)
+        obs.METRICS.histogram("service.queue_delay").observe(delay)
         t0 = now + delay
         # derived, stable per-submission seed — jitter replays identically
         seed = zlib.crc32(f"{self.config.seed}:{sub.id}".encode()) & 0x7FFFFFFF
-        report = execute(
-            prep.problem,
-            sched,
-            speed_factors=self.state.residual_factors(),
-            jitter=self.config.jitter,
-            seed=seed,
-            strict=False,
-        )
-        self.state.reserve(report, t0, sid=sub.id)
+        with obs.TRACER.span("service.dispatch", cat="service",
+                             args={"id": sub.id}):
+            report = execute(
+                prep.problem,
+                sched,
+                speed_factors=self.state.residual_factors(),
+                jitter=self.config.jitter,
+                seed=seed,
+                strict=False,
+            )
+            with obs.TRACER.span("state.reserve", cat="service.state"):
+                self.state.reserve(report, t0, sid=sub.id)
         rec = self.records[sub.id]
         if math.isnan(rec.dispatched):
             # first dispatch only — on a retry the original timestamps (and
@@ -620,16 +653,29 @@ class SchedulingService:
                 payload["factor"] = nev.factor
             self.loop.push(nev.time, nev.kind, **payload)
 
-        for ev in self.loop.drain():
-            self.loop.record(ev)
-            handler = self._HANDLERS.get(ev.kind)
-            if handler is None:
-                raise ValueError(f"unknown event kind {ev.kind!r}")
-            handler(self, ev)
+        # the tracer's virtual clock follows this loop for the duration of
+        # the run, so spans carry event-loop timestamps next to wall time
+        tracer = obs.TRACER
+        prev_clock = tracer.set_virtual_clock(lambda: self.loop.now)
+        try:
+            with tracer.span("service.run", cat="service",
+                             args={"trace": trace.name}):
+                for ev in self.loop.drain():
+                    self.loop.record(ev)
+                    handler = self._HANDLERS.get(ev.kind)
+                    if handler is None:
+                        raise ValueError(f"unknown event kind {ev.kind!r}")
+                    if tracer.enabled:
+                        with tracer.span("event." + ev.kind,
+                                         cat="service.events",
+                                         args={"seq": ev.seq}):
+                            handler(self, ev)
+                    else:
+                        handler(self, ev)
+        finally:
+            tracer.set_virtual_clock(prev_clock)
 
-        delta = PackStats(
-            *(b - a for a, b in zip(pack_stats0, pack_cache().stats.snapshot()))
-        )
+        delta = pack_cache().stats.delta(pack_stats0)
         return ServiceResult(
             trace=trace.name,
             config=self.config,

@@ -35,6 +35,7 @@ from typing import Any, Mapping
 import numpy as np
 
 from repro.core.system_model import Node, System
+from repro.obs import TRACER
 from repro.core.workload_model import ScheduleProblem, Workload, build_problem
 from repro.engine.packed import PackedProblem, pack
 from repro.engine.sim import run_schedule
@@ -414,27 +415,31 @@ def calibration_report(
     )
     problem = build_problem(system, workload)
     packed = pack(problem, pad=False)
-    obs = synthesize_observations(
-        packed,
-        speed_factors=f_true,
-        link_factors=g_true,
-        samples_per_node=samples_per_node,
-        transfer_samples=transfer_samples,
-        noise=noise,
-        seed=perturb_seed + 1,
-    )
-    result = calibrate(packed, obs, steps=steps)
+    with TRACER.span("calibrate.synthesize", cat="topology",
+                     args={"samples_per_node": samples_per_node}):
+        obs = synthesize_observations(
+            packed,
+            speed_factors=f_true,
+            link_factors=g_true,
+            samples_per_node=samples_per_node,
+            transfer_samples=transfer_samples,
+            noise=noise,
+            seed=perturb_seed + 1,
+        )
+    with TRACER.span("calibrate.fit", cat="topology", args={"steps": steps}):
+        result = calibrate(packed, obs, steps=steps)
     calibrated = apply_factors(
         system,
         result.speed_factors,
         result.link_factors if transfer_samples else None,
     )
-    before = twin_makespan_error(
-        system, truth, workload, technique=technique, options=options
-    )
-    after = twin_makespan_error(
-        calibrated, truth, workload, technique=technique, options=options
-    )
+    with TRACER.span("calibrate.evaluate", cat="topology"):
+        before = twin_makespan_error(
+            system, truth, workload, technique=technique, options=options
+        )
+        after = twin_makespan_error(
+            calibrated, truth, workload, technique=technique, options=options
+        )
     covered = result.coverage > 0
     mae = float(
         np.abs(result.speed_factors[covered] - f_true[covered]).mean()

@@ -47,6 +47,7 @@ from typing import Any, Mapping
 import numpy as np
 
 from repro.core.api import did_you_mean, reject_unknown_keys
+from repro.obs import TRACER
 from repro.core.system_model import Node, System, make_system
 from repro.core.workload_model import canonical_hash
 
@@ -378,6 +379,14 @@ def generate(spec: TopologySpec) -> System:
     Draw order is fixed — per tier in spec order: speeds, cores, memory;
     then the link-jitter matrix — so adding a tier at the end never
     reshuffles earlier tiers' draws."""
+    with TRACER.span(
+        "topology.generate", cat="topology",
+        args={"seed": spec.seed, "nodes": sum(t.count for t in spec.tiers)},
+    ):
+        return _generate(spec)
+
+
+def _generate(spec: TopologySpec) -> System:
     rng = np.random.default_rng(spec.seed)
     nodes: list[Node] = []
     for tier in spec.tiers:
