@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import time
 from pathlib import Path
 from typing import Any, Callable
@@ -349,6 +350,87 @@ def _time_fitness(fn, *args, iters=3, warmup=1):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+#: device-scaling probe: shard counts tried (devices permitting) per shape
+DEVICE_SCALING_SHARDS = (1, 2, 4, 8)
+#: instance-family width of the probe (matches a realistic batch group)
+DEVICE_SCALING_INSTANCES = 8
+
+
+def _device_scaling_section(rng: np.random.Generator) -> dict[str, Any]:
+    """Sharded batched-fitness throughput at 1/2/4/8 devices (medium+large).
+
+    Per shape: an 8-instance family (same bucket, distinct workflows) is
+    evaluated through :meth:`JaxEngine.batched_fitness` — ``shard=None`` is
+    the single-device ``_batched_population_core`` baseline, ``shard=d``
+    stripes the instance axis over a d-device mesh.  Outputs are checked
+    bit-identical to the baseline while we're at it (the equivalence tests
+    assert it; the bench records it next to the numbers it justifies)."""
+    from repro.core import Workload, build_problem, synthetic_system
+    from repro.core.workload_model import random_layered_workflow
+    from repro.engine import ENGINES
+    from repro.engine.shard import local_device_count
+
+    devices = local_device_count()
+    section: dict[str, Any] = {
+        "instances": DEVICE_SCALING_INSTANCES,
+        "devices_available": devices,
+        "shapes": {},
+    }
+    engine = ENGINES.get("jax")
+    for spec in ENGINE_SHAPES:
+        label = str(spec["shape"])
+        if label == "small":
+            continue  # compile dominates; scaling is meaningless there
+        tasks, nodes = int(spec["size"]), int(spec["nodes"])
+        pop = int(spec["population"])
+        system = synthetic_system(nodes, seed=nodes)
+        problems = [
+            build_problem(
+                system,
+                Workload((random_layered_workflow(
+                    tasks, seed=tasks + i, max_cores=8, feature_pool=("F1",)
+                ),)),
+            )
+            for i in range(DEVICE_SCALING_INSTANCES)
+        ]
+        baseline = engine.batched_fitness(problems, shard=None)
+        Tb = baseline.bucket[0]
+        A = np.zeros((DEVICE_SCALING_INSTANCES, pop, Tb), np.int32)
+        A[:, :, :tasks] = rng.integers(
+            0, problems[0].num_nodes, (DEVICE_SCALING_INSTANCES, pop, tasks)
+        )
+        ref = [np.asarray(x) for x in baseline(A)]
+        per_device: dict[str, Any] = {}
+        identical = True
+        for d in DEVICE_SCALING_SHARDS:
+            if d > devices:
+                continue
+            fitness = baseline if d == 1 else engine.batched_fitness(
+                problems, shard=d
+            )
+            us = _time_fitness(fitness, A, iters=3, warmup=1)
+            if d > 1:
+                out = [np.asarray(x) for x in fitness(A)]
+                identical = identical and all(
+                    np.array_equal(a, b) for a, b in zip(ref, out)
+                )
+            cand = DEVICE_SCALING_INSTANCES * pop
+            per_device[str(d)] = {
+                "us_per_call": float(us),
+                "candidates_per_second": cand / (us / 1e6),
+            }
+        base = per_device["1"]["candidates_per_second"]
+        best_d = max(per_device, key=int)
+        section["shapes"][label] = {
+            "population": pop,
+            "bucket": list(baseline.bucket),
+            "per_device": per_device,
+            "speedup_at_max_devices": per_device[best_d]["candidates_per_second"] / base,
+            "bit_identical_to_single_device": bool(identical),
+        }
+    return section
+
+
 @register_runner("engine-bench")
 def run_engine_bench(
     campaign: Campaign, *, registry: SolverRegistry | None = None
@@ -365,6 +447,7 @@ def run_engine_bench(
     cells = campaign.expand()
     coord_cols = campaign.coord_names(cells)
     rows = []
+    equal_pop: list[dict[str, Any]] = []
     rng = np.random.default_rng(0)
     problems: dict[str, Any] = {}
     buckets: dict[str, tuple] = {}
@@ -384,13 +467,22 @@ def run_engine_bench(
         problem = problems[label]
         bucket = buckets[label]
         divisor, iters = ENGINE_BACKENDS[backend]
-        p = max(pop // divisor, 2)
+        requested = max(pop // divisor, 2)
+        p = requested
         A = rng.integers(0, problem.num_nodes, (p, problem.num_tasks))
         if backend == "pallas" and tasks * nodes > 2048:
             # interpret-mode wall time grows ~linearly with T; keep the
             # large bucket's functional check bounded
             p = 2
             A = A[:p]
+        if p != requested:
+            # the cap used to be invisible: the row's cand/s silently
+            # compared a pop-2 run against full-population backends
+            logging.getLogger("repro.campaigns").warning(
+                "engine-bench: %s population capped %d -> %d on the %s "
+                "bucket (interpret-mode envelope)",
+                backend, requested, p, label,
+            )
         fitness = ENGINES.get(backend).population_fitness(problem)
         if backend == "oracle":
             fitness(A)  # warm caches (pred_csr etc.)
@@ -399,6 +491,18 @@ def run_engine_bench(
             us = (time.perf_counter() - t0) * 1e6
         else:
             us = _time_fitness(fitness, A, iters=iters, warmup=1)
+        if backend != "jax" and p != pop:
+            # equal-population comparison: this backend ran a reduced load
+            # (divisor and/or envelope cap), so its cand/s is NOT comparable
+            # to the jax row's — time jax at the same population for an
+            # apples-to-apples ratio instead of leaving the gap implicit
+            jax_fit = ENGINES.get("jax").population_fitness(problem)
+            jax_us = _time_fitness(jax_fit, A, iters=iters, warmup=1)
+            equal_pop.append({
+                "shape": label, "backend": backend, "population": p,
+                "us_per_call": float(us), "jax_us_per_call": float(jax_us),
+                "jax_speedup": float(us / jax_us),
+            })
         rows.append(
             {
                 "cell": cell.index,
@@ -407,6 +511,8 @@ def run_engine_bench(
                 "nodes": nodes,
                 "backend": backend,
                 "population": p,
+                "requested_population": requested,
+                "capped": p != requested,
                 "bucket": list(bucket),
                 "us_per_call": float(us),
                 "candidates_per_second": p / (us / 1e6),
@@ -416,14 +522,19 @@ def run_engine_bench(
         "campaign": campaign.name,
         "runner": "engine-bench",
         "coords": coord_cols,
-        "stats": {"pack_cache": pack_cache().stats.to_json()},
+        "stats": {
+            "pack_cache": pack_cache().stats.to_json(),
+            "equal_population": equal_pop,
+            "device_scaling": _device_scaling_section(rng),
+        },
     }
     return ResultSet.from_rows(
         rows,
         name=campaign.name,
         meta=meta,
         dtypes={"cell": "int", "size": "int", "nodes": "int",
-                "population": "int", "bucket": "json",
+                "population": "int", "requested_population": "int",
+                "capped": "bool", "bucket": "json",
                 "us_per_call": "float", "candidates_per_second": "float"},
     )
 
@@ -558,18 +669,43 @@ def run_engine_bench_export(
     for r in rs:
         name = f"engine_{r['shape']}_{r['backend']}"
         bucket = r["bucket"]
-        rows.append(
-            (name, r["us_per_call"],
-             f"bucket={'x'.join(str(b) for b in bucket)};pop={r['population']};"
-             f"cand_per_s={r['candidates_per_second']:.1f}")
+        derived = (
+            f"bucket={'x'.join(str(b) for b in bucket)};pop={r['population']};"
+            f"cand_per_s={r['candidates_per_second']:.1f}"
         )
+        if r["capped"]:
+            derived += f";capped_from={r['requested_population']}"
+        rows.append((name, r["us_per_call"], derived))
         payload[name] = {
             "us_per_call": float(r["us_per_call"]),
             "bucket": list(bucket),
             "population": int(r["population"]),
+            "requested_population": int(r["requested_population"]),
+            "capped": bool(r["capped"]),
             "candidates_per_second": float(r["candidates_per_second"]),
         }
-    payload["pack_cache"] = rs.meta["stats"]["pack_cache"]
+    stats = rs.meta["stats"]
+    for eq in stats.get("equal_population", ()):
+        rows.append(
+            (f"engine_{eq['shape']}_{eq['backend']}_eqpop", eq["us_per_call"],
+             f"pop={eq['population']};"
+             f"jax_us={eq['jax_us_per_call']:.1f};"
+             f"jax_speedup={eq['jax_speedup']:.1f}x")
+        )
+    scaling = stats.get("device_scaling", {})
+    for label, s in scaling.get("shapes", {}).items():
+        per = s["per_device"]
+        best = max(per, key=int)
+        rows.append(
+            (f"engine_{label}_shard{best}", per[best]["us_per_call"],
+             f"pop={s['population']};instances={scaling['instances']};"
+             f"cand_per_s={per[best]['candidates_per_second']:.1f};"
+             f"speedup_vs_1dev={s['speedup_at_max_devices']:.2f}x;"
+             f"bit_identical={s['bit_identical_to_single_device']}")
+        )
+    payload["equal_population"] = stats.get("equal_population", [])
+    payload["device_scaling"] = scaling
+    payload["pack_cache"] = stats["pack_cache"]
     payload["telemetry"] = rs.meta.get("telemetry", {})
     Path(out_path).write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     return rows

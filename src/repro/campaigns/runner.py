@@ -65,6 +65,7 @@ from repro.core.workload_model import (
     problem_fingerprint,
 )
 from repro.engine.packed import bucket_of, pack_cache
+from repro.engine.shard import choose_shards, local_device_count
 from repro.service.cache import CacheStats
 from repro.campaigns.results import ResultSet
 from repro.campaigns.spec import Campaign, CampaignCell, cell_scenario
@@ -256,6 +257,7 @@ def run_inline(
     solver_calls = 0
     batched_groups = 0
     batched_submissions = 0
+    sharded_groups = 0
     for cell in cells:
         prep = _Prep(cell=cell)
         preps.append(prep)
@@ -290,9 +292,14 @@ def run_inline(
         kw = technique_kwargs(reg, first.technique, opts)
         batch_fn = reg.get(first.technique).batch_fn
         assert batch_fn is not None  # _group_key guarantees it
+        # the striping the batched sweep will apply (repro.engine.shard):
+        # >1 means this group's instances run one chunk per local device
+        # instead of serializing on device 0
+        shards = choose_shards(len(members))
         sp = obs.TRACER.timed(
             "campaign.batch", cat="campaign",
-            args={"technique": first.technique, "size": len(members)},
+            args={"technique": first.technique, "size": len(members),
+                  "shards": shards},
         )
         try:
             # direct batch_fn call (not solve_batch) so a runtime decline
@@ -312,6 +319,8 @@ def run_inline(
         solver_calls += len(members)
         batched_groups += 1
         batched_submissions += len(members)
+        if shards > 1:
+            sharded_groups += 1
         for prep, rep in zip(members, reports):
             prep.schedule = rep.schedule
             prep.status = "ok"
@@ -404,6 +413,8 @@ def run_inline(
             "solver_calls": solver_calls,
             "batched_groups": batched_groups,
             "batched_submissions": batched_submissions,
+            "sharded_groups": sharded_groups,
+            "shard_devices": local_device_count(),
             "dedup_hits": cache_stats.hits,
             "cache": cache_stats.to_json(),
             "pack_cache": pack_delta.to_json(),

@@ -281,9 +281,14 @@ def _mh_solver(name: str) -> SolverFn:
 
 
 def _ga_batch(problems, weights=ObjectiveWeights(), **kw) -> list[SolveReport] | None:
-    # the sweep evaluates through the shared jnp fitness core; a 'pallas'
-    # backend request (or any other per-instance-only mode) declines batching
-    if kw.get("backend", "jnp") != "jnp":
+    # the sweep evaluates through the shared jnp fitness core (striped
+    # across the local device mesh when one exists — repro.engine.shard); a
+    # 'pallas'/'oracle' backend request or any other per-instance-only mode
+    # declines batching.  'jnp'/'jax'/'auto' all name the same jitted core,
+    # so Scenario(engine="jax") families batch instead of serializing.
+    from repro.engine.backends import resolve_engine
+
+    if resolve_engine(kw.get("backend", "jax")) != "jax":
         return None
     sweep_kw = {k: v for k, v in kw.items() if k != "backend"}
     results = metaheuristics.ga_sweep(list(problems), weights, **sweep_kw)

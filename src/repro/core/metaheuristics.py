@@ -145,7 +145,11 @@ def ga(
     elite: int = 2,
     seed: int = 0,
     backend: str = "jnp",
+    shard: int | str | None = None,
 ) -> MHResult:
+    # ``shard`` is accepted (and ignored) so scoped solver_options meant for
+    # the batched ga_sweep don't crash a singleton solve of the same family
+    del shard
     import jax
 
     t0 = time.perf_counter()
@@ -164,14 +168,11 @@ def ga(
     return _finish(problem, weights, np.asarray(best), "ga", t0, np.asarray(hist))
 
 
-@functools.lru_cache(maxsize=None)
-def _ga_sweep_core(
+def _ga_sweep_one(
     usage_mode: str, pop_size: int, generations: int, tournament: int, elite: int
 ) -> Callable:
-    """Jitted ``vmap`` of the whole GA over a stacked instance axis — one XLA
-    program per shape bucket evaluates an entire scenario family."""
-    import jax
-
+    """One instance's whole GA as a traceable function of its packed arrays
+    — the body both sweep cores (vmapped and sharded) map over."""
     from repro.engine.backends import population_fitness_from_arrays
 
     def one(arrays, logits, key, alpha, beta, mutation_rate):
@@ -189,7 +190,45 @@ def _ga_sweep_core(
             elite=elite,
         )
 
-    return jax.jit(jax.vmap(one, in_axes=(0, 0, 0, None, None, None)))
+    return one
+
+
+@functools.lru_cache(maxsize=None)
+def _ga_sweep_core(
+    usage_mode: str,
+    pop_size: int,
+    generations: int,
+    tournament: int,
+    elite: int,
+    shards: int = 1,
+) -> Callable:
+    """Jitted ``vmap`` of the whole GA over a stacked instance axis — one XLA
+    program per shape bucket evaluates an entire scenario family.
+
+    ``shards > 1`` wraps the vmapped sweep in ``shard_map`` over the local
+    1-D device mesh (:mod:`repro.engine.shard`): the instance axis splits
+    into one chunk per device and the chunks run concurrently.  Each row's
+    computation is unchanged, so sharded schedules are bit-identical to the
+    single-device sweep at fixed seed."""
+    import jax
+
+    one = _ga_sweep_one(usage_mode, pop_size, generations, tournament, elite)
+    vmapped = jax.vmap(one, in_axes=(0, 0, 0, None, None, None))
+    if shards <= 1:
+        return jax.jit(vmapped)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.engine.shard import AXIS, instance_mesh
+
+    return jax.jit(
+        shard_map(
+            vmapped,
+            mesh=instance_mesh(shards),
+            in_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P()),
+            out_specs=(P(AXIS), P(AXIS)),
+        )
+    )
 
 
 def ga_sweep(
@@ -202,6 +241,7 @@ def ga_sweep(
     mutation_rate: float = 0.08,
     elite: int = 2,
     seed: int = 0,
+    shard: int | str | None = "auto",
 ) -> list[MHResult]:
     """Run the GA on a whole family of instances in ONE compiled XLA program.
 
@@ -209,24 +249,63 @@ def ga_sweep(
     ``repro.engine.bucket_of``) and the generation loop is ``vmap``-ed across
     them — a Table IX size sweep or Fig. 11 quality grid no longer pays one
     trace/compile per point.  Per-result ``solve_time`` is the sweep wall
-    time (the instances ran concurrently)."""
+    time (the instances ran concurrently).
+
+    With more than one local device the instance axis additionally stripes
+    across the 1-D device mesh (``shard="auto"``; an int forces a shard
+    count, ``"off"``/``None``/``1`` keeps everything on one device).  The
+    per-instance PRNG streams and row computations are unchanged, so the
+    sharded sweep's schedules are bit-identical to the single-device sweep
+    at the same seed."""
     import jax
     import jax.numpy as jnp
 
+    from repro import obs
+    from repro.engine import shard as shard_mod
+
     t0 = time.perf_counter()
-    arrays, bucket = stack_packed(problems)
+    B = len(problems)
+    if shard == "auto":
+        shards = shard_mod.choose_shards(B)
+    elif shard in (None, "off", ""):
+        shards = 1
+    else:
+        shards = int(shard)
+    if shards > 1:
+        stack = shard_mod.stack_packed_sharded(problems, shards=shards)
+        arrays, bucket, Bp = stack.arrays, stack.bucket, stack.padded
+    else:
+        arrays, bucket = stack_packed(problems)
+        Bp = B
     Tb, Nb = bucket[0], bucket[1]
-    logits = np.full((len(problems), Tb, Nb), _NEG, dtype=np.float32)
+    logits = np.full((Bp, Tb, Nb), _NEG, dtype=np.float32)
     for b, problem in enumerate(problems):
         mask = _safe_feasible(problem)
         logits[b, : problem.num_tasks, : problem.num_nodes][mask] = 0.0
         logits[b, problem.num_tasks :, 0] = 0.0  # padded tasks pin to node 0
-    run = _ga_sweep_core(weights.usage_mode, pop_size, generations, tournament, elite)
-    keys = jax.random.split(jax.random.PRNGKey(seed), len(problems))
-    best, hist = run(
-        arrays, jnp.asarray(logits), keys, weights.alpha, weights.beta, mutation_rate
+    logits[B:] = logits[0]  # pad-to-shard-multiple rows replay instance 0
+    run = _ga_sweep_core(
+        weights.usage_mode, pop_size, generations, tournament, elite, shards
     )
-    best, hist = np.asarray(best), np.asarray(hist)
+    keys = np.asarray(jax.random.split(jax.random.PRNGKey(seed), B))
+    keys = np.concatenate([keys, np.repeat(keys[:1], Bp - B, axis=0)])
+    if shards > 1:
+        sharding = shard_mod.instance_sharding(shards)
+        logits_dev = jax.device_put(logits, sharding)
+        keys_dev = jax.device_put(keys, sharding)
+    else:
+        logits_dev, keys_dev = jnp.asarray(logits), jnp.asarray(keys)
+    with obs.TRACER.span(
+        "mh.ga_sweep", cat="engine",
+        args={"instances": B, "shards": shards,
+              "bucket": "x".join(str(x) for x in bucket)},
+    ):
+        best, hist = run(
+            arrays, logits_dev, keys_dev, weights.alpha, weights.beta, mutation_rate
+        )
+        best, hist = np.asarray(best)[:B], np.asarray(hist)[:B]
+    obs.METRICS.counter("mh.ga_sweep.instances").inc(B)
+    obs.METRICS.gauge("mh.ga_sweep.shards").set(shards)
     return [
         _finish(
             problem,
@@ -273,7 +352,9 @@ def pso(
 
     obj0, _ = fitness(decode(pos))
     pbest_pos, pbest_obj = pos, obj0
-    g = int(jnp.argmin(obj0))
+    # device-side argmin/gather: int(...) here would block on a host sync
+    # before the scan is even traced (dispatch stays async without it)
+    g = jnp.argmin(obj0)
     gbest_pos, gbest_obj = pos[g], obj0[g]
 
     def step(carry, _):
@@ -325,7 +406,12 @@ def sa(
     key, k0 = jax.random.split(key)
     state = jax.random.categorical(k0, logits, axis=-1, shape=(chains, T)).astype(jnp.int32)
     obj, _ = fitness(state)
-    temp0 = float(t_initial) if t_initial is not None else float(jnp.median(obj)) * 0.05 + 1e-6
+    # default temp0 stays a device scalar: float(jnp.median(...)) would force
+    # a blocking round-trip between the init fitness call and the scan
+    if t_initial is not None:
+        temp0 = jnp.asarray(float(t_initial), dtype=obj.dtype)
+    else:
+        temp0 = jnp.median(obj) * 0.05 + 1e-6
 
     def step(carry, it):
         state, obj, best_state, best_obj, key = carry

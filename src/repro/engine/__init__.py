@@ -15,7 +15,11 @@ it (the SPEC-RG layering: model → engine → solver → service):
 * :mod:`repro.engine.backends` — the :class:`EngineRegistry` of
   :class:`ScheduleEngine` backends (``oracle`` / ``jax`` / ``pallas``),
   mirroring the solver registry's capability pattern.  The f32 backends are
-  bit-for-bit equivalent (asserted by the cross-backend sweep tests).
+  bit-for-bit equivalent (asserted by the cross-backend sweep tests);
+* :mod:`repro.engine.shard` — the multi-device instance axis: batched
+  families stripe across a 1-D local-device mesh via ``shard_map`` with
+  pad-to-shard-multiple semantics, bit-identical to the single-device
+  vmapped core (the pack LRU keeps the per-shard device buffers resident).
 
 Solvers consume the engine through :func:`population_fitness_fn` /
 :func:`evaluate_population_batch`; out-of-tree backends register with
@@ -47,6 +51,14 @@ from repro.engine.packed import (
     pack_cache,
     stack_packed,
 )
+from repro.engine.shard import (
+    ShardedStack,
+    choose_shards,
+    instance_mesh,
+    local_device_count,
+    sharded_batched_fitness,
+    stack_packed_sharded,
+)
 from repro.engine.sim import CoreSim, commit_sorted, run_schedule
 
 __all__ = [
@@ -58,13 +70,17 @@ __all__ = [
     "PackCache",
     "PackedProblem",
     "ScheduleEngine",
+    "ShardedStack",
     "batched_population_fitness_fn",
     "bucket_of",
+    "choose_shards",
     "commit_sorted",
     "common_bucket",
     "default_engine",
     "evaluate_population_batch",
     "fitness_cache_sizes",
+    "instance_mesh",
+    "local_device_count",
     "pack",
     "pack_cache",
     "population_fitness_fn",
@@ -72,5 +88,7 @@ __all__ = [
     "register_engine",
     "resolve_engine",
     "run_schedule",
+    "sharded_batched_fitness",
     "stack_packed",
+    "stack_packed_sharded",
 ]

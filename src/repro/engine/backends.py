@@ -106,6 +106,38 @@ def _batched_population_core(usage_mode: str) -> Callable:
     )
 
 
+@functools.lru_cache(maxsize=None)
+def _sharded_batched_population_core(usage_mode: str, shards: int) -> Callable:
+    """:func:`_batched_population_core` striped over the local device mesh.
+
+    ``shard_map`` splits the leading (instance) axis into ``shards`` equal
+    chunks, one per device; each device runs the identical vmapped fitness
+    on its chunk, so results are bit-identical to the single-device core —
+    only wall time changes.  ``shards == 1`` returns the unsharded core
+    outright (same jitted callable, same XLA program — the degenerate mesh
+    IS today's path)."""
+    if shards <= 1:
+        return _batched_population_core(usage_mode)
+    import jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.engine.shard import AXIS, instance_mesh
+
+    vmapped = jax.vmap(
+        functools.partial(population_fitness_from_arrays, usage_mode=usage_mode),
+        in_axes=(0, 0, None, None),
+    )
+    return jax.jit(
+        shard_map(
+            vmapped,
+            mesh=instance_mesh(shards),
+            in_specs=(P(AXIS), P(AXIS), P(), P()),
+            out_specs=(P(AXIS), P(AXIS)),
+        )
+    )
+
+
 def fitness_cache_sizes(usage_mode: str = "fixed") -> tuple[int, int]:
     """(single-instance, batched) XLA compile counts for the shared fitness
     cores — the recompile telemetry the sweep tests assert on."""
@@ -123,6 +155,8 @@ def _jit_cache_collector() -> dict[str, int]:
         "batched_fixed": batched_f,
         "single_weighted": single_w,
         "batched_weighted": batched_w,
+        # distinct (usage_mode, shard-count) sharded wrappers built so far
+        "sharded_cores": _sharded_batched_population_core.cache_info().currsize,
     }
 
 
@@ -347,12 +381,32 @@ class JaxEngine(ScheduleEngine):
 
         return fitness
 
-    def batched_fitness(self, problems: Sequence[ScheduleProblem], weights=None):
+    def batched_fitness(
+        self,
+        problems: Sequence[ScheduleProblem],
+        weights=None,
+        *,
+        shard: int | str | None = "auto",
+    ):
         """Batched fitness over a family of instances (one shape bucket):
-        ``fitness(assignments [B, P, Tb]) -> (objective [B, P], makespan [B, P])``."""
+        ``fitness(assignments [B, P, Tb]) -> (objective [B, P], makespan [B, P])``.
+
+        ``shard="auto"`` stripes the instance axis across all local devices
+        (:mod:`repro.engine.shard`) when more than one is available; an int
+        forces that shard count; ``None``/``1``/``"off"`` keeps the
+        single-device vmapped path.  All choices are bit-identical in f32."""
         from repro.core.evaluator import ObjectiveWeights
+        from repro.engine import shard as shard_mod
 
         w = weights or ObjectiveWeights()
+        if shard == "auto":
+            shards = shard_mod.choose_shards(len(problems))
+        elif shard in (None, "off", ""):
+            shards = 1
+        else:
+            shards = int(shard)
+        if shards > 1:
+            return shard_mod.sharded_batched_fitness(problems, w, shards=shards)
         arrays, bucket = stack_packed(problems)
         core = _batched_population_core(w.usage_mode)
 
@@ -365,6 +419,7 @@ class JaxEngine(ScheduleEngine):
 
         fitness.bucket = bucket  # type: ignore[attr-defined]
         fitness.num_instances = len(problems)  # type: ignore[attr-defined]
+        fitness.shards = 1  # type: ignore[attr-defined]
         return fitness
 
 

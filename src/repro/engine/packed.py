@@ -245,7 +245,7 @@ class PackStats:
 
 
 class PackCache:
-    """Entry- *and* byte-bounded LRU of pack key → :class:`PackedProblem`.
+    """Entry- *and* byte-bounded LRU of pack key → packed entry.
 
     Lives *alongside* the service's solve cache: a submission that misses
     the solve cache (new weights, new technique) but names a
@@ -253,7 +253,14 @@ class PackCache:
     device buffers.  ``max_bytes`` bounds retained *host* bytes (cached
     device copies roughly double the true footprint — sized accordingly);
     a single pack larger than the whole budget is served uncached rather
-    than pinning the budget."""
+    than pinning the budget.
+
+    The cache is *mesh-aware*: besides single-instance
+    :class:`PackedProblem` entries it retains sharded stacked families
+    (:class:`repro.engine.shard.ShardedStack`) whose device buffers stay
+    resident one shard per mesh device; ``device_stats`` accumulates
+    per-device hit/miss/resident-byte accounting, surfaced through the
+    ``pack_cache`` metrics collector."""
 
     def __init__(self, capacity: int = 256, max_bytes: int = 1 << 30) -> None:
         if capacity < 1:
@@ -262,11 +269,14 @@ class PackCache:
             raise ValueError("pack cache max_bytes must be >= 1")
         self.capacity = capacity
         self.max_bytes = max_bytes
-        self._entries: OrderedDict[tuple, PackedProblem] = OrderedDict()
+        self._entries: OrderedDict[tuple, Any] = OrderedDict()
         self._bytes = 0
         self.stats = PackStats()
+        #: per-device accounting for mesh-resident entries
+        #: (``{device: {hits, misses, resident_bytes}}``)
+        self.device_stats: dict[str, dict[str, int]] = {}
 
-    def get_or_build(self, key: tuple, builder: Callable[[], PackedProblem]) -> PackedProblem:
+    def get_or_build(self, key: tuple, builder: Callable[[], Any]) -> Any:
         packed = self._entries.get(key)
         if packed is not None:
             self._entries.move_to_end(key)
@@ -282,10 +292,19 @@ class PackCache:
         while len(self._entries) > self.capacity or self._bytes > self.max_bytes:
             _, evicted = self._entries.popitem(last=False)
             self._bytes -= evicted.nbytes
+            self._release_device_bytes(evicted)
             self.stats.evictions += 1
         return packed
 
+    def _release_device_bytes(self, evicted: Any) -> None:
+        for dev, nbytes in getattr(evicted, "device_nbytes", {}).items():
+            d = self.device_stats.get(dev)
+            if d is not None:
+                d["resident_bytes"] = max(d["resident_bytes"] - nbytes, 0)
+
     def clear(self) -> None:
+        for entry in self._entries.values():
+            self._release_device_bytes(entry)
         self._entries.clear()
         self._bytes = 0
 
@@ -308,16 +327,24 @@ def pack_cache() -> PackCache:
     return _PACK_CACHE
 
 
-obs.METRICS.register_collector(
-    "pack_cache",
-    lambda: {
+def _pack_cache_collector() -> dict[str, Any]:
+    out: dict[str, Any] = {
         "hits": _PACK_CACHE.stats.hits,
         "misses": _PACK_CACHE.stats.misses,
         "evictions": _PACK_CACHE.stats.evictions,
         "entries": len(_PACK_CACHE),
         "retained_bytes": _PACK_CACHE.retained_bytes,
-    },
-)
+    }
+    # mesh-aware residency: one sub-dict per device once anything sharded
+    # has been stacked (absent on single-device hosts — keeps the metrics
+    # snapshot byte-stable for unsharded runs)
+    for dev, stats in sorted(_PACK_CACHE.device_stats.items()):
+        for field, value in stats.items():
+            out[f"device.{dev}.{field}"] = value
+    return out
+
+
+obs.METRICS.register_collector("pack_cache", _pack_cache_collector)
 
 
 def pack(
@@ -355,7 +382,11 @@ def stack_packed(
     problems: Sequence[ScheduleProblem], bucket: Bucket | None = None
 ) -> tuple[dict[str, Any], Bucket]:
     """Stack padded instances along a leading batch axis → jnp array dict
-    (one shared bucket, one device transfer for the stack)."""
+    (one shared bucket, one device transfer for the stack).
+
+    Single-device layout; :func:`repro.engine.shard.stack_packed_sharded`
+    is the multi-device sibling that stripes the same leading axis across
+    the local mesh with pad-to-shard-multiple semantics."""
     import jax.numpy as jnp
 
     bucket = common_bucket(problems) if bucket is None else bucket

@@ -1,0 +1,276 @@
+"""Multi-device instance-axis sharding for the evaluation engine.
+
+The batch paths above the engine — ``ga_sweep`` families, admission batch
+groups, deduped campaign cells — are embarrassingly parallel across
+*instances*: every instance's fitness (and its whole GA generation loop) is
+row-independent.  This module stripes that instance axis across all local
+JAX devices with a 1-D :class:`jax.sharding.Mesh` + ``shard_map``, so a
+Table-IX family solves as ONE compiled XLA program whose shards execute
+concurrently, one per device.
+
+Semantics are *pad-to-shard-multiple*: a batch of ``B`` instances striped
+over ``d`` devices is padded to ``ceil(B/d)*d`` rows by replicating instance
+0 (results for the replicas are sliced off before anything observes them).
+:func:`choose_shards` prefers a divisor of ``B`` so the common case pads
+nothing.  Because the per-row computation under ``vmap`` is identical
+whether its batch has 1 row or 64, sharded results are **bit-identical** to
+the single-device vmapped core — asserted by the equivalence tests — and a
+1-device mesh degenerates to exactly today's path (no ``shard_map`` in the
+program at all).
+
+The pack LRU (:func:`repro.engine.packed.pack_cache`) is mesh-aware here:
+:func:`stack_packed_sharded` memoizes the *sharded stacked device arrays*
+by (member fingerprints, bucket, shard count), so the per-shard device
+buffers stay resident across admission windows / campaign groups that
+re-solve the same family.  Per-device hit/byte accounting is kept on the
+cache itself and surfaced through the existing ``pack_cache`` metrics
+collector.
+
+On a CPU host, ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+exposes 8 virtual devices; each executes its shard on the host's cores, so
+CI gets real parallelism without accelerators (see README §Sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro import obs
+from repro.core.workload_model import ScheduleProblem, problem_fingerprint
+from repro.engine.packed import (
+    FITNESS_ARRAY_KEYS,
+    Bucket,
+    common_bucket,
+    pack,
+    pack_cache,
+)
+
+#: the mesh axis name every sharded engine program uses
+AXIS = "instances"
+
+
+def local_device_count() -> int:
+    """Devices available for instance striping (clamped by
+    ``REPRO_SHARD_DEVICES``; ``1`` disables sharding everywhere)."""
+    import jax
+
+    n = len(jax.local_devices())
+    clamp = os.environ.get("REPRO_SHARD_DEVICES")
+    if clamp is not None:
+        n = min(n, max(int(clamp), 1))
+    return n
+
+
+@functools.lru_cache(maxsize=None)
+def instance_mesh(devices: int):
+    """The 1-D ``(instances,)`` mesh over the first ``devices`` local
+    devices (cached — mesh identity matters for jit cache keys)."""
+    import jax
+    from jax.sharding import Mesh
+
+    avail = jax.local_devices()
+    if devices < 1 or devices > len(avail):
+        raise ValueError(f"mesh wants {devices} devices, have {len(avail)}")
+    return Mesh(np.array(avail[:devices]), (AXIS,))
+
+
+def instance_sharding(devices: int):
+    """NamedSharding striping the leading (instance) axis over the mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    return NamedSharding(instance_mesh(devices), PartitionSpec(AXIS))
+
+
+def choose_shards(batch: int, devices: int | None = None) -> int:
+    """How many devices to stripe a ``batch``-instance family over.
+
+    Prefers the largest device count that divides ``batch`` (zero padding);
+    falls back to all devices with padding when ``batch`` is indivisible but
+    larger than the fleet.  Batches of 0/1 instances and 1-device hosts
+    return 1 — the caller then uses the unsharded path unchanged."""
+    d = local_device_count() if devices is None else devices
+    if batch <= 1 or d <= 1:
+        return 1
+    if batch < d:
+        return batch  # one instance per device, no padding
+    for cand in range(d, 1, -1):
+        if batch % cand == 0:
+            return cand
+    return d
+
+
+def pad_batch(batch: int, shards: int) -> int:
+    """Instances after pad-to-shard-multiple (``ceil(batch/shards)*shards``)."""
+    return -(-batch // shards) * shards
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardedStack:
+    """A stacked instance family resident across the mesh — the pack LRU's
+    multi-device entry (device shards stay alive as long as the entry)."""
+
+    arrays: dict[str, Any]  # jax Arrays, leading axis sharded over the mesh
+    bucket: Bucket
+    instances: int  # real instances (≤ padded leading axis)
+    shards: int
+    device_nbytes: dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def padded(self) -> int:
+        return int(next(iter(self.arrays.values())).shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        return sum(self.device_nbytes.values())
+
+
+def _device_bytes(arrays: dict[str, Any]) -> dict[str, int]:
+    out: dict[str, int] = {}
+    for arr in arrays.values():
+        for s in arr.addressable_shards:
+            key = str(s.device)
+            out[key] = out.get(key, 0) + s.data.nbytes
+    return out
+
+
+def _note_device_stats(cache, per_device: dict[str, int], *, hit: bool) -> None:
+    stats = cache.device_stats
+    for dev, nbytes in per_device.items():
+        d = stats.setdefault(dev, {"hits": 0, "misses": 0, "resident_bytes": 0})
+        if hit:
+            d["hits"] += 1
+        else:
+            d["misses"] += 1
+            d["resident_bytes"] += nbytes
+
+
+def stack_packed_sharded(
+    problems: Sequence[ScheduleProblem],
+    bucket: Bucket | None = None,
+    *,
+    shards: int | None = None,
+    use_cache: bool = True,
+) -> ShardedStack:
+    """Stack an instance family along a mesh-sharded leading axis.
+
+    The sharded-and-transferred array dict is memoized in the pack LRU by
+    ``(member fingerprints, bucket, shard count)`` — a campaign group or
+    admission window that re-solves the same family reuses the per-shard
+    device buffers outright.  Individual members still flow through
+    :func:`repro.engine.packed.pack`, so the per-instance host arrays are
+    fingerprint-cached too."""
+    import jax
+
+    if not problems:
+        raise ValueError("cannot stack an empty problem family")
+    d = choose_shards(len(problems)) if shards is None else int(shards)
+    if d < 1:
+        raise ValueError(f"shard count must be >= 1, got {d}")
+    bucket = common_bucket(problems) if bucket is None else bucket
+    B, Bp = len(problems), pad_batch(len(problems), d)
+    cache = pack_cache()
+
+    def build() -> ShardedStack:
+        packs = [pack(p, bucket) for p in problems]
+        packs += [packs[0]] * (Bp - B)  # pad-to-shard-multiple: replicate
+        host = {
+            k: np.stack([pp.numpy_arrays()[k] for pp in packs])
+            for k in FITNESS_ARRAY_KEYS
+        }
+        if d == 1:
+            import jax.numpy as jnp
+
+            arrays = {k: jnp.asarray(v) for k, v in host.items()}
+        else:
+            sharding = instance_sharding(d)
+            arrays = {k: jax.device_put(v, sharding) for k, v in host.items()}
+        return ShardedStack(
+            arrays=arrays,
+            bucket=bucket,
+            instances=B,
+            shards=d,
+            device_nbytes=_device_bytes(arrays),
+        )
+
+    with obs.TRACER.span(
+        "engine.shard_stack", cat="engine",
+        args={"instances": B, "shards": d,
+              "bucket": "x".join(str(x) for x in bucket)},
+    ):
+        if not use_cache:
+            # no residency accounting: this stack never enters the LRU, so
+            # its bytes must not show up as (unreleasable) resident state
+            return build()
+        key = (
+            "shard-stack",
+            tuple(problem_fingerprint(p) for p in problems),
+            bucket,
+            d,
+        )
+        built = False
+
+        def tracked_build() -> ShardedStack:
+            nonlocal built
+            built = True
+            return build()
+
+        stack = cache.get_or_build(key, tracked_build)
+        _note_device_stats(cache, stack.device_nbytes, hit=not built)
+        obs.METRICS.gauge("engine.shard.devices").set(d)
+        obs.METRICS.counter("engine.shard.stacks").inc()
+        obs.METRICS.counter("engine.shard.padded_instances").inc(Bp - B)
+        return stack
+
+
+def shard_population(assignments, shards: int):
+    """Device-put a ``[B, P, T]`` candidate batch striped over the mesh
+    (``shards == 1``: plain transfer — today's path)."""
+    import jax
+    import jax.numpy as jnp
+
+    if shards <= 1:
+        return jnp.asarray(assignments)
+    return jax.device_put(np.asarray(assignments), instance_sharding(shards))
+
+
+def sharded_batched_fitness(
+    problems: Sequence[ScheduleProblem], weights=None, *, shards: int | None = None
+) -> Any:
+    """Batched fitness striped across the local device mesh:
+    ``fitness(assignments [B, P, Tb]) -> (objective [B, P], makespan [B, P])``.
+
+    Drop-in for :meth:`JaxEngine.batched_fitness` (same ``.bucket`` /
+    ``.num_instances`` attributes, plus ``.shards``), bit-identical in f32 to
+    the single-device vmapped core — only wall time changes."""
+    from repro.core.evaluator import ObjectiveWeights
+    from repro.engine.backends import _sharded_batched_population_core
+
+    w = weights or ObjectiveWeights()
+    stack = stack_packed_sharded(problems, shards=shards)
+    core = _sharded_batched_population_core(w.usage_mode, stack.shards)
+    B, Bp = stack.instances, stack.padded
+    bucket = stack.bucket
+
+    def fitness(assignments):
+        a = np.asarray(assignments)
+        if a.shape[0] != B:
+            raise ValueError(f"expected {B} instance rows, got {a.shape[0]}")
+        if Bp != B:  # replicate instance 0's candidates into the pad rows
+            a = np.concatenate([a, np.repeat(a[:1], Bp - B, axis=0)])
+        with obs.FITNESS.measure(
+            f"jax-shard{stack.shards}", bucket, w.usage_mode
+        ):
+            obj, mk = core(
+                shard_population(a, stack.shards), stack.arrays, w.alpha, w.beta
+            )
+        return obj[:B], mk[:B]
+
+    fitness.bucket = bucket  # type: ignore[attr-defined]
+    fitness.num_instances = B  # type: ignore[attr-defined]
+    fitness.shards = stack.shards  # type: ignore[attr-defined]
+    return fitness

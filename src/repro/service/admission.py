@@ -40,6 +40,7 @@ from repro.core.api import (
 from repro.core.evaluator import Schedule
 from repro.core.workload_model import ScheduleProblem, canonical_hash
 from repro.engine.packed import bucket_of
+from repro.engine.shard import choose_shards
 from repro.service.cache import SolveCache
 from repro.service.traces import Submission
 
@@ -66,11 +67,13 @@ class AdmissionStats:
     solver_calls: int = 0  # problems that actually reached a solver
     batched_groups: int = 0  # solve_batch invocations covering > 1 problem
     batched_submissions: int = 0  # problems covered by those invocations
+    sharded_groups: int = 0  # batched groups striped across > 1 device
 
     def merge(self, other: "AdmissionStats") -> None:
         self.solver_calls += other.solver_calls
         self.batched_groups += other.batched_groups
         self.batched_submissions += other.batched_submissions
+        self.sharded_groups += other.sharded_groups
 
 
 class AdmissionBatcher:
@@ -186,6 +189,9 @@ class AdmissionBatcher:
             )
             batch_fn = self.registry.get(first.technique).batch_fn
             assert batch_fn is not None  # _group_key guarantees it
+            # how the sweep will stripe this group over the local device
+            # mesh (repro.engine.shard) — 1 on single-device hosts
+            shards = choose_shards(len(members))
             try:
                 # call the batch fn directly (not solve_batch) so a runtime
                 # decline (None — e.g. a per-instance-only backend option)
@@ -193,7 +199,8 @@ class AdmissionBatcher:
                 # as a batch that never happened
                 with obs.TRACER.span(
                     "admission.batch_solve", cat="service",
-                    args={"technique": first.technique, "size": len(members)},
+                    args={"technique": first.technique, "size": len(members),
+                          "shards": shards},
                 ):
                     reports = batch_fn(
                         [m.problem for m in members], first.weights, **kw
@@ -210,6 +217,9 @@ class AdmissionBatcher:
             stats.solver_calls += len(members)
             stats.batched_groups += 1
             stats.batched_submissions += len(members)
+            if shards > 1:
+                stats.sharded_groups += 1
+                obs.METRICS.counter("service.admission.sharded_groups").inc()
             for prep, rep in zip(members, reports):
                 prep.schedule = rep.schedule
                 prep.batched = True
