@@ -22,6 +22,10 @@ reader and kernel microbenches.  Prints ``name,us_per_call,derived`` CSV.
                                                        # generated continua +
                                                        # twin calibration
                                                        # → BENCH_topology.json
+    PYTHONPATH=src python -m benchmarks.run --campaign cycling
+                                                       # recurring workflows +
+                                                       # hard constraints
+                                                       # → BENCH_cycling.json
     PYTHONPATH=src python -m benchmarks.run --scenario f.json  # time one
                                                        # orchestrated Scenario
 
@@ -136,6 +140,11 @@ def _run_mode(args: argparse.Namespace) -> None:
             # the continuum lane adds twin-calibration + generator-scale
             # rows beyond the generic campaign export
             _print_suite("topology", builtin.run_topology_bench)
+            return
+        if args.campaign == "cycling":
+            # the cycling lane adds the constraint-satisfaction report and
+            # the converging-stream service section
+            _print_suite("cycling", builtin.run_cycling_bench)
             return
         run = builtin.run_named_campaign(args.campaign)
         print("name,us_per_call,derived")

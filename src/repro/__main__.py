@@ -237,6 +237,11 @@ def main(argv: list[str] | None = None) -> int:
                          "chaos_events kwargs as JSON, e.g. "
                          '\'{"failure_rate": 0.01, "horizon": 1200}\' '
                          "({} for defaults; overrides --node-events)")
+    trace_p.add_argument("--cycling", metavar="JSON",
+                         help="turn a seeded fraction of submissions into "
+                         "recurring/converging streams: a CycleSpec JSON "
+                         'plus "fraction", e.g. \'{"fraction": 0.25, '
+                         '"cycles": 3, "period": 5.0}\'')
 
     serve_p = sub.add_parser("serve", help="run a trace through the "
                              "event-driven scheduling service")
@@ -376,10 +381,12 @@ def _dispatch(args) -> int:
             families=tuple(f.strip() for f in args.families.split(",") if f.strip()),
             node_events=args.node_events,
             chaos=json.loads(args.chaos) if args.chaos else None,
+            cycling=json.loads(args.cycling) if args.cycling else None,
         )
         path = trace.save(args.out)
+        cyc = sum(1 for s in trace.submissions if s.cycling is not None)
         print(f"wrote {len(trace.submissions)} submissions "
-              f"({len(trace.events)} node events) to {path}")
+              f"({len(trace.events)} node events, {cyc} cycling) to {path}")
         return 0
 
     if args.cmd == "serve":

@@ -20,7 +20,12 @@ exporter that keeps the legacy ``BENCH_*.json`` payloads byte-compatible:
   buckets (``engine-bench`` runner) → ``BENCH_engine.json``;
 * ``topology`` — generated tiered continua (:mod:`repro.topology`): tier
   scale × technique plus the digital-twin calibration headline
-  (twin-vs-truth makespan error before/after) → ``BENCH_topology.json``.
+  (twin-vs-truth makespan error before/after) → ``BENCH_topology.json``;
+* ``cycling`` — recurring workflows under hard constraints
+  (:mod:`repro.cycling`): a deadline-tightening sweep over a 3-cycle
+  unrolled DAG × {milp, heft, ga} with the constraint-satisfaction /
+  makespan trade-off report, plus a converging-stream service section
+  (warm solve-cache re-solves, replay fingerprint) → ``BENCH_cycling.json``.
 
 Use :func:`builtin_campaign` to get a spec by name (it round-trips through
 JSON like any user spec) and :func:`run_builtin` / the per-lane helpers to
@@ -223,6 +228,53 @@ def engine_campaign() -> Campaign:
     )
 
 
+#: the cycling lane's deadline-tightening sweep.  The unrolled 3-cycle
+#: layered(8) workload has an unconstrained optimum of 27.0 on the 3-node
+#: synthetic system (MILP = HEFT), so ``loose``/``snug`` are satisfiable,
+#: ``tight`` (24 < 27) is provably unsatisfiable — the MILP cell goes
+#: infeasible and the heuristics/GA report violated schedules.
+CYCLING_TIGHTNESS = (
+    {"tightness": "none"},
+    {"tightness": "loose", "constraints": {"deadline": {"W8": 40.0}}},
+    {"tightness": "snug", "constraints": {"deadline": {"W8": 28.0}}},
+    {"tightness": "tight", "constraints": {"deadline": {"W8": 24.0}}},
+)
+
+#: cycle structure shared by every cycling-lane cell (3 cycles, sink→root
+#: cross-cycle edges), unrolled to 24 tasks — inside MILP's exact window
+CYCLING_SPEC = {"cycles": 3, "period": 4.0, "cross": [["*", "*"]]}
+
+
+def cycling_campaign(
+    *,
+    techniques: tuple[str, ...] = ("milp", "heft", "ga"),
+    tightness: tuple[dict, ...] = CYCLING_TIGHTNESS,
+) -> Campaign:
+    """The CI cycling lane: recurring workflows × deadline tightness ×
+    technique through the inline runner, all three solver families under
+    the same hard constraints (MILP rows / HEFT filtering / GA penalty)."""
+    return Campaign(
+        name="cycling",
+        axes=(
+            Axis("tightness", tuple(tightness), zipped=True),
+            Axis("technique", tuple(techniques)),
+        ),
+        defaults={
+            "family": "layered",
+            "size": 8,
+            "seed": 8,
+            "nodes": 3,
+            "engine": "auto",
+            "cycling": CYCLING_SPEC,
+            "solver_options": {
+                "milp": {"time_limit": 30.0},
+                "ga": {"seed": 0, "pop_size": 48, "generations": 20},
+            },
+        },
+        runner="inline",
+    )
+
+
 BUILTIN_CAMPAIGNS: dict[str, Callable[[], Campaign]] = {
     "smoke": smoke_campaign,
     "table9": table9_campaign,
@@ -230,6 +282,7 @@ BUILTIN_CAMPAIGNS: dict[str, Callable[[], Campaign]] = {
     "chaos": chaos_campaign,
     "engine": engine_campaign,
     "topology": topology_campaign,
+    "cycling": cycling_campaign,
 }
 
 
@@ -768,6 +821,111 @@ def run_topology_bench(
     return rows
 
 
+#: converging-stream service fixture: (id, family workflow, cycling json).
+#: W1/W2 both run 10.02 virtual seconds per cycle on the continuum system,
+#: so ``cycle_deadline=12`` always meets and ``8`` always misses — the
+#: deadline-miss counter is exercised deterministically, not by luck.
+_CYCLING_STREAMS = (
+    ("s-meet", "mri-w1",
+     {"converge": {"prob": 0.5, "min_cycles": 2, "max_cycles": 6, "seed": 3},
+      "period": 5.0, "cycle_deadline": 12.0}),
+    ("s-miss", "mri-w2",
+     {"converge": {"prob": 0.5, "min_cycles": 2, "max_cycles": 6, "seed": 3},
+      "period": 5.0, "cycle_deadline": 8.0}),
+    ("s-fixed", "mri-w1", {"cycles": 3, "period": 5.0}),
+)
+
+
+def _converging_service_section() -> dict[str, Any]:
+    """Converging/recurring streams through the live service, twice.
+
+    Runs with ``jitter=0`` and no node events so observed speeds match the
+    model exactly — every spawned cycle resubmits a content-identical
+    workflow, and the solve cache must serve it warm (the re-solve hit
+    counts below are the acceptance numbers).  The second run proves the
+    whole thing replays bit-identically; the fingerprint is what the
+    pinned-replay test asserts."""
+    from repro.core.workload_model import canonical_hash, mri_w1, mri_w2
+    from repro.service import SchedulingService, ServiceConfig
+    from repro.service.traces import Submission, Trace, continuum_system
+    from repro.cycling import cycle_spec_from_json
+
+    wfs = {"mri-w1": mri_w1(), "mri-w2": mri_w2()}
+    subs = tuple(
+        Submission(
+            id=sid, tenant="t0", time=float(i), family=fam,
+            workflow=wfs[fam], technique="heft",
+            cycling=cycle_spec_from_json(dict(spec)),
+        )
+        for i, (sid, fam, spec) in enumerate(_CYCLING_STREAMS)
+    )
+    trace = Trace(name="cycling", system=continuum_system(), submissions=subs)
+    results = [
+        SchedulingService(trace.system, ServiceConfig(seed=0)).run(trace)
+        for _ in range(2)
+    ]
+    a, b = results
+    fp = [
+        canonical_hash(
+            {"events": r.event_log, "records": [x.to_json() for x in r.records]}
+        )
+        for r in results
+    ]
+    s = a.summary()
+    return {
+        "streams": a.cycling,
+        "submissions_total": len(a.records),
+        "completed": s["completed"],
+        "deadline_misses": s["deadline_misses"],
+        "solve_cache": s["cache"],
+        "solver_calls": a.solver_calls,
+        "replay_fingerprint": fp[0],
+        "replay_bit_identical": fp[0] == fp[1],
+    }
+
+
+def run_cycling_bench(
+    out_path: str | Path = "BENCH_cycling.json",
+) -> list[tuple]:
+    """`--campaign cycling`: the deadline-tightening sweep (satisfaction vs
+    makespan trade-off across MILP/HEFT/GA) plus the converging-stream
+    service section → ``BENCH_cycling.json``."""
+    rs = run_campaign(cycling_campaign())
+    rows = campaign_rows(rs)
+    report = rs.constraint_report(by=("technique",))
+    dev = rs.deviation_vs("milp")
+    for r in report:
+        rows.append(
+            (f"cycling_satisfaction_{r['technique']}", float("nan"),
+             f"rate={r['satisfaction_rate']:.2f};"
+             f"satisfied={r['satisfied_cells']}/{r['constrained_cells']};"
+             f"makespan_mean={r['makespan_mean']:.2f}")
+        )
+    infeasible = len(dev.select(baseline_status="infeasible"))
+    service = _converging_service_section()
+    rows.append(
+        ("cycling_deviation_cells", float("nan"),
+         f"rows={len(dev)};infeasible_baseline={infeasible}")
+    )
+    rows.append(
+        ("cycling_converging_service", float("nan"),
+         f"spawned={service['streams']['spawned_cycles']};"
+         f"converged={service['streams']['converged_streams']};"
+         f"cache_hits={service['solve_cache']['hits']};"
+         f"deadline_misses={service['deadline_misses']};"
+         f"replay_ok={service['replay_bit_identical']}")
+    )
+    payload = {
+        "campaign": rs.to_json(),
+        "constraint_report": report.to_json(),
+        "deviation_vs_milp": dev.to_json(),
+        "converging_service": service,
+        "telemetry": rs.meta.get("telemetry", {}),
+    }
+    Path(out_path).write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # Generic campaign export (`--campaign NAME|spec.json` → BENCH_campaign.json)
 # ---------------------------------------------------------------------------
@@ -781,7 +939,11 @@ def campaign_rows(rs: ResultSet) -> list[tuple]:
         tech = r.get("technique", r.get("technique_used", ""))
         name = f"campaign_{rs.name}_c{r['cell']:04d}_{tech}"
         if r.get("makespan") is None:
-            rows.append((name, float("nan"), r.get("status", "")))
+            # prefer the solver's own verdict ("failed(2)" = infeasible)
+            # over the runner's "ok" when the cell produced no makespan
+            rows.append(
+                (name, float("nan"), r.get("solve_status") or r.get("status", ""))
+            )
             continue
         bits = [f"makespan={r['makespan']:.2f}"]
         if r.get("status") not in (None, "ok", "completed"):

@@ -90,7 +90,10 @@ def _check(value: Any, col: Column) -> Any:
         return None
     if col.dtype == "float":
         v = float(value)
-        return None if math.isnan(v) else v
+        # non-finite normalizes to the universal missing value: an
+        # infeasible MILP's makespan=inf is "no result", and bare
+        # NaN/Infinity would break the strict-JSON round trip anyway
+        return None if not math.isfinite(v) else v
     if col.dtype == "int":
         if isinstance(value, bool) or not isinstance(value, (int, np.integer)):
             raise TypeError(f"column {col.name!r} is int; got {value!r}")
@@ -319,8 +322,14 @@ class ResultSet:
         Rows are grouped by ``within`` (default: the campaign's coordinate
         columns minus ``technique_col``); inside each group the ``exact``
         technique's finite ``metric`` is the baseline and every row gains
-        ``{metric}_exact``, ``gap`` (absolute) and ``gap_pct``.  Groups with
-        no finite baseline are dropped (the paper's '-' cells)."""
+        ``{metric}_exact``, ``gap`` (absolute), ``gap_pct`` and
+        ``baseline_status``.  Groups with no usable baseline are NOT
+        dropped: their rows carry ``gap`` / ``gap_pct`` of ``None`` and a
+        ``baseline_status`` saying *why* — ``"infeasible"`` when the exact
+        solve ran and failed (a constraint-unsatisfiable MILP is a finding,
+        not a hole in the table), ``"skipped"`` when the exact cell was
+        filtered away (the paper's '-' entries, e.g. MILP above its size
+        ceiling) or absent entirely."""
         if within is None:
             coords = self.meta.get("coords")
             if not coords:
@@ -331,13 +340,22 @@ class ResultSet:
             within = [c for c in coords if c != technique_col]
         out: list[dict[str, Any]] = []
         for kv, grp in self.group_by(*within):
-            base = None
+            base: float | None = None
+            base_status = "skipped"
             for r in grp:
-                if r.get(technique_col) == exact and r.get(metric) is not None:
+                if r.get(technique_col) != exact:
+                    continue
+                failed = "failed" in str(r.get("status") or "") or (
+                    "failed" in str(r.get("solve_status") or "")
+                )
+                if r.get(metric) is not None and not failed:
                     base = float(r[metric])
+                    base_status = "ok"
                     break
-            if base is None:
-                continue
+                if failed:
+                    # the exact solver ran and could not produce a feasible
+                    # optimum — don't let a fallback makespan pose as one
+                    base_status = "infeasible"
             for r in grp:
                 v = r.get(metric)
                 if v is None:
@@ -345,14 +363,24 @@ class ResultSet:
                 row = dict(zip(within, kv))
                 row[technique_col] = r.get(technique_col)
                 row[metric] = float(v)
+                row["baseline_status"] = base_status
                 row[f"{metric}_exact"] = base
-                row["gap"] = float(v) - base
-                row["gap_pct"] = 100.0 * (float(v) - base) / base if base else None
+                if base is None:
+                    row["gap"] = None
+                    row["gap_pct"] = None
+                else:
+                    row["gap"] = float(v) - base
+                    row["gap_pct"] = (
+                        100.0 * (float(v) - base) / base if base else None
+                    )
                 out.append(row)
         return ResultSet.from_rows(
             out,
             name=f"{self.name}:deviation_vs_{exact}",
             meta={**self.meta, "exact": exact, "metric": metric},
+            dtypes={metric: "float", f"{metric}_exact": "float",
+                    "gap": "float", "gap_pct": "float",
+                    "baseline_status": "str"},
         )
 
     def deviation_report(
@@ -368,6 +396,48 @@ class ResultSet:
             exact, metric=metric, technique_col=technique_col, within=within
         )
         return dev.aggregate("gap_pct", by=(technique_col,))
+
+    def constraint_report(
+        self, by: Sequence[str] = ("technique",)
+    ) -> "ResultSet":
+        """Constraint-satisfaction rate per group, next to mean makespan.
+
+        Counts only ``constrained`` rows (the inline runner marks them);
+        a row is *satisfied* when its solved schedule met every hard
+        constraint (``violations == 0``).  A failed or skipped constrained
+        cell counts as unsatisfied — the rate answers "how often did this
+        technique deliver a constraint-clean schedule", not "how often did
+        it succeed given that it produced one"."""
+        for col in ("constrained", "satisfied"):
+            if not self.has_column(col):
+                raise ValueError(
+                    f"no {col!r} column — constraint_report needs a "
+                    "ResultSet from a constraint-aware runner"
+                )
+        sub = self.select(constrained=True)
+        out: list[dict[str, Any]] = []
+        for kv, grp in sub.group_by(*by):
+            total = len(grp)
+            sat = sum(1 for r in grp if r.get("satisfied"))
+            mk = grp.array("makespan")
+            mk = mk[~np.isnan(mk)]
+            row: dict[str, Any] = dict(zip(by, kv))
+            row.update(
+                constrained_cells=total,
+                satisfied_cells=sat,
+                satisfaction_rate=(sat / total) if total else None,
+                makespan_mean=float(mk.mean()) if mk.size else None,
+                makespan_max=float(mk.max()) if mk.size else None,
+            )
+            out.append(row)
+        return ResultSet.from_rows(
+            out,
+            name=f"{self.name}:constraints",
+            meta=self.meta,
+            dtypes={"constrained_cells": "int", "satisfied_cells": "int",
+                    "satisfaction_rate": "float", "makespan_mean": "float",
+                    "makespan_max": "float"},
+        )
 
     # ---- serialization ------------------------------------------------------
     def to_json(self) -> dict[str, Any]:

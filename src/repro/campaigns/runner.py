@@ -156,6 +156,7 @@ class _Prep:
     error: str | None = None
     batched: bool = False
     group_size: int = 1
+    constrained: bool = False
     dedup_of: int | None = None
     wall_us: float | None = None
     observed_makespan: float | None = None
@@ -182,6 +183,14 @@ def _base_row(
         wall_us=prep.wall_us,
         batched=prep.batched,
         group_size=prep.group_size,
+        constrained=prep.constrained,
+        # None when the cell has no hard constraints — a satisfaction *rate*
+        # over a mixed grid must not count unconstrained cells as satisfied
+        satisfied=(
+            (int(sched.violations) == 0)
+            if prep.constrained and sched is not None
+            else None
+        ),
         dedup=prep.dedup_of is not None,
         dedup_of=prep.dedup_of,
         fingerprint=prep.key or None,
@@ -207,6 +216,8 @@ _ROW_DTYPES = {
     "observed_makespan": "float",
     "slowdown": "float",
     "batched": "bool",
+    "constrained": "bool",
+    "satisfied": "bool",
     "dedup": "bool",
 }
 
@@ -265,7 +276,11 @@ def run_inline(
             prep.status = f"skipped({cell.skipped})"
             continue
         prep.scenario = cell_scenario(campaign, cell)
-        prep.problem = build_problem(prep.scenario.system, prep.scenario.workload)
+        # cycling cells unroll here; constraints ride into the problem (and
+        # thereby its fingerprint, so the dedupe key sees them for free)
+        workload, constraints = prep.scenario.expanded()
+        prep.problem = build_problem(prep.scenario.system, workload, constraints)
+        prep.constrained = prep.problem.has_constraints
         prep.key = solve_identity(prep.problem, prep.scenario)
         if prep.key in reps:
             prep.dedup_of = reps[prep.key].cell.index
@@ -503,6 +518,11 @@ def run_service(
                 technique=sc.technique,
                 weights=sc.weights,
                 solver_options=effective_options(reg, sc.solver_options, sc.engine),
+                # cycling streams per-cycle instead of unrolling: the row
+                # reports the cycle-0 record; spawned cycles land in the
+                # summary's cycling counters
+                constraints=sc.constraints,
+                cycling=sc.cycling,
             )
         )
     trace = Trace(name=campaign.name, system=system, submissions=tuple(submissions))

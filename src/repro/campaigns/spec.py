@@ -59,11 +59,13 @@ from repro.core.api import (
     Policy,
     Scenario,
     _weights_from_json,
+    cycle_spec_from_json,
     reject_unknown_keys,
 )
 from repro.core.system_model import System, mri_system, synthetic_system
 from repro.core.workload_model import (
     Workload,
+    constraints_from_json,
     mri_w1,
     mri_w2,
     mri_workload,
@@ -460,7 +462,12 @@ def cell_system(coords: Mapping[str, Any]) -> System:
 
 
 def cell_scenario(campaign: Campaign, cell: CampaignCell) -> Scenario:
-    """Compile one cell into a runnable declarative Scenario."""
+    """Compile one cell into a runnable declarative Scenario.
+
+    ``constraints`` / ``cycling`` coordinates are the Scenario sections as
+    JSON dicts — a cell can sweep deadline tightness or cycle counts like
+    any other axis; :meth:`Scenario.expanded` then unrolls cycling into the
+    solver-visible workload."""
     c = cell.coords
     return Scenario(
         name=f"{campaign.name}/c{cell.index:04d}",
@@ -474,4 +481,6 @@ def cell_scenario(campaign: Campaign, cell: CampaignCell) -> Scenario:
         perturbation=Perturbation.from_json(dict(c.get("perturbation", {}))),
         orchestration=OrchestrationConfig.from_json(dict(c.get("orchestration", {}))),
         solver_options=dict(c.get("solver_options", {})),
+        constraints=constraints_from_json(c.get("constraints")),
+        cycling=cycle_spec_from_json(c.get("cycling")),
     )

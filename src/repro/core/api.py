@@ -58,12 +58,27 @@ from repro.core.simulator import ExecutionReport, execute
 from repro.core.snakemake_io import load_config
 from repro.core.system_model import System, system_to_json
 from repro.core.workload_model import (
+    Constraints,
     ScheduleProblem,
     Workload,
     build_problem,
     canonical_hash,
+    constraints_from_json,
     workload_to_json,
 )
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # runtime import is lazy: repro.cycling imports workload_model
+    from repro.cycling import CycleSpec
+
+
+def cycle_spec_from_json(obj: Any) -> "CycleSpec | None":
+    """Lazy wrapper around :func:`repro.cycling.cycle_spec_from_json` —
+    imported at call time because :mod:`repro.cycling` itself imports
+    :mod:`repro.core.workload_model`."""
+    from repro.cycling import cycle_spec_from_json as _parse
+
+    return _parse(obj)
 
 _LOG = obs.logger("core.api")
 
@@ -120,6 +135,11 @@ class SolverCapabilities:
     ``engine_aware`` marks techniques that take a ``backend=`` kwarg naming
     an evaluation engine from :data:`repro.engine.ENGINES` — a scenario's
     ``engine`` selection is forwarded only to these.
+    ``constraint_aware`` marks techniques that *enforce* hard constraints
+    (deadlines/budgets/placement, :class:`~repro.core.workload_model.Constraints`)
+    rather than merely having them scored as violations by the oracle —
+    MILP adds rows, HEFT/OLB filter candidates, the metaheuristics penalize
+    fitness in the batched engine path.
     """
 
     exact: bool = False
@@ -127,6 +147,7 @@ class SolverCapabilities:
     supports_batch: bool = False
     needs_time_limit: bool = False
     engine_aware: bool = False
+    constraint_aware: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,6 +179,7 @@ class SolverRegistry:
         supports_batch: bool = False,
         needs_time_limit: bool = False,
         engine_aware: bool = False,
+        constraint_aware: bool = False,
         batch_fn: BatchSolverFn | None = None,
         overwrite: bool = False,
     ):
@@ -172,6 +194,7 @@ class SolverRegistry:
             supports_batch=supports_batch or batch_fn is not None,
             needs_time_limit=needs_time_limit,
             engine_aware=engine_aware,
+            constraint_aware=constraint_aware,
         )
 
         def _add(f: SolverFn) -> SolverFn:
@@ -299,15 +322,16 @@ def _ga_batch(problems, weights=ObjectiveWeights(), **kw) -> list[SolveReport] |
 
 
 REGISTRY.register("milp", _milp_solver("event"), exact=True, max_tasks=60,
-                  needs_time_limit=True)
+                  needs_time_limit=True, constraint_aware=True)
 REGISTRY.register("milp-static", _milp_solver("static"), exact=True, max_tasks=60,
-                  needs_time_limit=True)
-REGISTRY.register("heft", _heuristic_solver(heuristics.heft))
-REGISTRY.register("olb", _heuristic_solver(heuristics.olb))
-REGISTRY.register("ga", _mh_solver("ga"), batch_fn=_ga_batch, engine_aware=True)
-REGISTRY.register("pso", _mh_solver("pso"), engine_aware=True)
-REGISTRY.register("sa", _mh_solver("sa"), engine_aware=True)
-REGISTRY.register("aco", _mh_solver("aco"), engine_aware=True)
+                  needs_time_limit=True, constraint_aware=True)
+REGISTRY.register("heft", _heuristic_solver(heuristics.heft), constraint_aware=True)
+REGISTRY.register("olb", _heuristic_solver(heuristics.olb), constraint_aware=True)
+REGISTRY.register("ga", _mh_solver("ga"), batch_fn=_ga_batch, engine_aware=True,
+                  constraint_aware=True)
+REGISTRY.register("pso", _mh_solver("pso"), engine_aware=True, constraint_aware=True)
+REGISTRY.register("sa", _mh_solver("sa"), engine_aware=True, constraint_aware=True)
+REGISTRY.register("aco", _mh_solver("aco"), engine_aware=True, constraint_aware=True)
 
 
 def __getattr__(name: str):
@@ -600,7 +624,14 @@ class Scenario:
 
     ``engine`` selects the schedule-evaluation backend
     (:data:`repro.engine.ENGINES`: ``"auto"``, ``"jax"``, ``"pallas"``,
-    ``"oracle"``, or a plugin); it reaches only engine-aware techniques."""
+    ``"oracle"``, or a plugin); it reaches only engine-aware techniques.
+
+    ``constraints`` layers hard deadlines/budgets/placement restrictions
+    over the workload (:class:`~repro.core.workload_model.Constraints`), and
+    ``cycling`` turns it into a recurring/converging workload
+    (:class:`~repro.cycling.CycleSpec`) — solved here as one unrolled DAG
+    over the bounded cycle window; the streaming expansion lives in
+    :mod:`repro.service`.  Both serialize as their own top-level sections."""
 
     name: str
     system: System
@@ -613,8 +644,12 @@ class Scenario:
     perturbation: Perturbation = Perturbation()
     orchestration: OrchestrationConfig = OrchestrationConfig()
     solver_options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    constraints: Constraints | None = None
+    cycling: CycleSpec | None = None
 
-    _RESERVED_SECTIONS = ("scenario", "nodes", "dtr_matrix", "topology")
+    _RESERVED_SECTIONS = (
+        "scenario", "nodes", "dtr_matrix", "topology", "constraints", "cycling"
+    )
 
     def to_json(self) -> dict:
         for wf in self.workload.workflows:
@@ -638,7 +673,26 @@ class Scenario:
         out: dict[str, Any] = {"scenario": header}
         out.update(system_to_json(self.system))
         out.update(workload_to_json(self.workload))
+        # own top-level sections, present only when set — pre-constraint
+        # scenario files (and their fingerprints) are byte-identical
+        if self.constraints is not None and self.constraints:
+            out["constraints"] = self.constraints.to_json()
+        if self.cycling is not None:
+            out["cycling"] = self.cycling.to_json()
         return out
+
+    def expanded(self) -> tuple[Workload, Constraints | None]:
+        """The workload/constraints a solver actually sees: cycling specs
+        unroll into one DAG over the bounded cycle window, with per-cycle
+        deadlines merged into the constraints."""
+        if self.cycling is None:
+            return self.workload, self.constraints
+        from repro.cycling import unroll_constraints, unroll_workload
+
+        return (
+            unroll_workload(self.workload, self.cycling),
+            unroll_constraints(self.workload, self.cycling, base=self.constraints),
+        )
 
     def save(self, path: str | Path) -> Path:
         path = Path(path)
@@ -720,6 +774,8 @@ def scenario_from_json(obj: Mapping[str, Any] | str) -> Scenario:
         perturbation=Perturbation.from_json(header.get("perturbation", {})),
         orchestration=OrchestrationConfig.from_json(header.get("orchestration", {})),
         solver_options=dict(header.get("solver_options", {})),
+        constraints=constraints_from_json(obj.get("constraints")),
+        cycling=cycle_spec_from_json(obj.get("cycling")),
     )
 
 
@@ -1039,9 +1095,10 @@ class Orchestrator:
 
         result = RunResult(scenario=sc.name, backend=sc.backend)
         system = sc.system
+        workload, constraints = sc.expanded()
         rounds = max(1, int(sc.orchestration.max_rounds))
         for rnd in range(rounds):
-            problem = build_problem(system, sc.workload)
+            problem = build_problem(system, workload, constraints)
             rep = self.solve(problem)
             result.schedules.append(rep.schedule)
 

@@ -107,6 +107,35 @@ def _usage_of(problem: ScheduleProblem, assignment: np.ndarray, weights: Objecti
     return float(problem.usage.sum())
 
 
+def constraint_violations(
+    problem: ScheduleProblem,
+    assignment: np.ndarray,
+    finish: np.ndarray,
+    *,
+    dtype=np.float64,
+) -> int:
+    """Hard-constraint violation count for a timed schedule.
+
+    Counts (a) tasks finishing past their deadline and (b) workflows whose
+    total cost exceeds their budget.  With ``dtype=np.float32`` the
+    comparisons use the same f32 quantities as the jax/pallas penalty terms
+    (deadline lateness inside the makespan kernel, budget overage in the
+    fitness objective), keeping the f32 backends' penalized objectives
+    bit-identical to this oracle."""
+    extra = 0
+    if problem.deadline is not None:
+        fin = np.asarray(finish, dtype=dtype)
+        extra += int(np.sum(fin > problem.deadline.astype(dtype)))
+    if problem.budget is not None:
+        cost = problem.cost_matrix().astype(dtype)
+        cost_t = cost[np.arange(problem.num_tasks), np.asarray(assignment, dtype=np.int64)]
+        w_count = len(problem.workflow_names)
+        mask = problem.workflow_of[None, :] == np.arange(w_count, dtype=np.int64)[:, None]
+        wf_cost = np.sum(np.where(mask, cost_t[None, :], dtype(0)), axis=1)
+        extra += int(np.sum(wf_cost > problem.budget.astype(dtype)))
+    return extra
+
+
 def evaluate_assignment(
     problem: ScheduleProblem,
     assignment: np.ndarray,
@@ -128,6 +157,10 @@ def evaluate_assignment(
     """
     assignment = np.asarray(assignment, dtype=np.int64)
     start, finish, violations = run_schedule(problem, assignment, dtype=dtype)
+    if problem.has_constraints:
+        violations = int(violations) + constraint_violations(
+            problem, assignment, finish, dtype=dtype
+        )
     makespan = float(finish.max(initial=0.0))
     usage = _usage_of(problem, assignment, weights)
     objective = weights.alpha * usage + weights.beta * makespan + BIG_PENALTY * violations

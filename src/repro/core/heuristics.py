@@ -57,6 +57,36 @@ def upward_ranks(problem: ScheduleProblem) -> np.ndarray:
     return rank
 
 
+def _constraint_mask(
+    problem: ScheduleProblem,
+    j: int,
+    score: np.ndarray,
+    finish_if: np.ndarray,
+    spent: np.ndarray | None,
+    cost: np.ndarray | None,
+) -> np.ndarray:
+    """Feasibility-filter a per-task candidate score vector for constraints.
+
+    Candidates whose finish time would exceed the task's deadline, or whose
+    cost would overrun the workflow's remaining budget, are masked to
+    ``_INF``.  If that would mask *every* candidate the original scores
+    stand — the greedy pick proceeds and the shared oracle flags the
+    violation, so the heuristics degrade gracefully instead of failing on
+    over-tight constraints (MILP is the technique that proves infeasibility).
+    """
+    masked = score
+    if problem.deadline is not None:
+        masked = np.where(finish_if > problem.deadline[j], _INF, masked)
+    if cost is not None and spent is not None:
+        w = int(problem.workflow_of[j])
+        bud = problem.budget[w]  # type: ignore[index]
+        if np.isfinite(bud):
+            masked = np.where(spent[w] + cost[j] > bud, _INF, masked)
+    if float(masked.min()) >= _INF:
+        return score
+    return masked
+
+
 def heft(
     problem: ScheduleProblem,
     weights: ObjectiveWeights = ObjectiveWeights(),
@@ -72,6 +102,8 @@ def heft(
     finish = np.zeros(T)
     state = CoreSim(problem)
     c_need = np.maximum(problem.cores.astype(np.int64), 1)
+    cost = problem.cost_matrix() if problem.budget is not None else None
+    spent = np.zeros(len(problem.workflow_names)) if cost is not None else None
 
     for j in order:
         ready = ready_times_all(problem, j, assignment, finish)
@@ -80,10 +112,14 @@ def heft(
         start = np.maximum(ready, kth)
         eft = start + problem.durations[j]
         eft = np.where(problem.feasible[j], eft, _INF)
+        if problem.has_constraints:
+            eft = _constraint_mask(problem, j, eft, eft, spent, cost)
         i = int(np.argmin(eft))
         assignment[j] = i
-        finish[j] = eft[i]
-        state.commit(i, int(c[i]), float(eft[i]))
+        finish[j] = start[i] + problem.durations[j, i]
+        if cost is not None:
+            spent[problem.workflow_of[j]] += cost[j, i]
+        state.commit(i, int(c[i]), float(finish[j]))
 
     sched = evaluate_assignment(problem, assignment, weights, technique="heft")
     sched.solve_time = time.perf_counter() - t0
@@ -102,6 +138,8 @@ def olb(
     finish = np.zeros(T)
     state = CoreSim(problem)
     c_need = np.maximum(problem.cores.astype(np.int64), 1)
+    cost = problem.cost_matrix() if problem.budget is not None else None
+    spent = np.zeros(len(problem.workflow_names)) if cost is not None else None
 
     for j in range(T):  # topo order
         ready = ready_times_all(problem, j, assignment, finish)
@@ -109,10 +147,16 @@ def olb(
         kth = state.kth_free_all(c)
         avail = np.maximum(ready, kth)
         avail = np.where(problem.feasible[j], avail, _INF)
+        if problem.has_constraints:
+            avail = _constraint_mask(
+                problem, j, avail, avail + problem.durations[j], spent, cost
+            )
         i = int(np.argmin(avail))
         assignment[j] = i
-        f = avail[i] + problem.durations[j, i]
+        f = max(ready[i], kth[i]) + problem.durations[j, i]
         finish[j] = f
+        if cost is not None:
+            spent[problem.workflow_of[j]] += cost[j, i]
         state.commit(i, int(c[i]), float(f))
 
     sched = evaluate_assignment(problem, assignment, weights, technique="olb")

@@ -169,15 +169,27 @@ def ga(
 
 
 def _ga_sweep_one(
-    usage_mode: str, pop_size: int, generations: int, tournament: int, elite: int
+    usage_mode: str,
+    pop_size: int,
+    generations: int,
+    tournament: int,
+    elite: int,
+    constrained: bool = False,
 ) -> Callable:
     """One instance's whole GA as a traceable function of its packed arrays
-    — the body both sweep cores (vmapped and sharded) map over."""
+    — the body both sweep cores (vmapped and sharded) map over.
+
+    ``constrained=True`` evaluates candidates with the deadline/budget
+    penalty terms inside this traced fitness (see
+    :func:`repro.engine.backends.population_fitness_from_arrays`) — the GA's
+    penalty-and-repair constraint handling runs entirely on device."""
     from repro.engine.backends import population_fitness_from_arrays
 
     def one(arrays, logits, key, alpha, beta, mutation_rate):
         def fitness(pop):
-            return population_fitness_from_arrays(pop, arrays, alpha, beta, usage_mode)
+            return population_fitness_from_arrays(
+                pop, arrays, alpha, beta, usage_mode, constrained
+            )
 
         return _ga_loop(
             fitness,
@@ -201,6 +213,7 @@ def _ga_sweep_core(
     tournament: int,
     elite: int,
     shards: int = 1,
+    constrained: bool = False,
 ) -> Callable:
     """Jitted ``vmap`` of the whole GA over a stacked instance axis — one XLA
     program per shape bucket evaluates an entire scenario family.
@@ -212,7 +225,7 @@ def _ga_sweep_core(
     single-device sweep at fixed seed."""
     import jax
 
-    one = _ga_sweep_one(usage_mode, pop_size, generations, tournament, elite)
+    one = _ga_sweep_one(usage_mode, pop_size, generations, tournament, elite, constrained)
     vmapped = jax.vmap(one, in_axes=(0, 0, 0, None, None, None))
     if shards <= 1:
         return jax.jit(vmapped)
@@ -284,8 +297,9 @@ def ga_sweep(
         logits[b, : problem.num_tasks, : problem.num_nodes][mask] = 0.0
         logits[b, problem.num_tasks :, 0] = 0.0  # padded tasks pin to node 0
     logits[B:] = logits[0]  # pad-to-shard-multiple rows replay instance 0
+    constrained = any(p.has_constraints for p in problems)
     run = _ga_sweep_core(
-        weights.usage_mode, pop_size, generations, tournament, elite, shards
+        weights.usage_mode, pop_size, generations, tournament, elite, shards, constrained
     )
     keys = np.asarray(jax.random.split(jax.random.PRNGKey(seed), B))
     keys = np.concatenate([keys, np.repeat(keys[:1], Bp - B, axis=0)])

@@ -203,6 +203,39 @@ def solve_milp(
                 row[x_index[(j, ij)]] = row.get(x_index[(j, ij)], 0.0) - M
                 add(row, tt - 2 * M, np.inf)
 
+    # hard constraints (arxiv 2511.07466): deadlines as finish-time rows and
+    # budgets as cost rows over the feasible pairs.  Placement restrictions
+    # need no rows — they are already folded into the feasible pair set by
+    # build_problem.  An unsatisfiable combination makes the LP infeasible
+    # (status "failed(2)"), which ResultSet.deviation_vs reports as an
+    # infeasible baseline rather than a silent drop.
+    if problem.deadline is not None:
+        for j in range(T):
+            dl = float(problem.deadline[j])
+            if not np.isfinite(dl):
+                continue
+            # f_j = s_j + Σ_i d_ij x_ij ≤ deadline_j
+            row = {s_off + j: 1.0}
+            for i in range(N):
+                if problem.feasible[j, i]:
+                    row[x_index[(j, i)]] = problem.durations[j, i]
+            add(row, -np.inf, dl)
+    if problem.budget is not None:
+        cost = problem.cost_matrix()
+        for w in range(len(problem.workflow_names)):
+            bud = float(problem.budget[w])
+            if not np.isfinite(bud):
+                continue
+            # Σ_{j ∈ w, i} cost_ij x_ij ≤ budget_w
+            row = {}
+            for j in np.nonzero(problem.workflow_of == w)[0]:
+                j = int(j)
+                for i in range(N):
+                    if problem.feasible[j, i]:
+                        row[x_index[(j, i)]] = float(cost[j, i])
+            if row:
+                add(row, -np.inf, bud)
+
     integrality = np.zeros(nvar)
     lo = np.zeros(nvar)
     hi = np.full(nvar, np.inf)

@@ -89,6 +89,75 @@ def _has_cycle(tasks: Sequence[Task]) -> bool:
     return order is None
 
 
+# -----------------------------------------------------------------------------
+# Hard scheduling constraints (arxiv 2511.07466: deadlines / budgets / placement)
+# -----------------------------------------------------------------------------
+
+_CONSTRAINT_KEYS = ("deadline", "budget", "cost_rate", "placement")
+
+
+@dataclasses.dataclass(frozen=True)
+class Constraints:
+    """Hard constraints layered onto a (System, Workload) pair.
+
+    * ``deadline`` — workflow name (all its tasks) or qualified task name
+      ``"Wf/Task"`` → latest allowed finish time (same clock as releases).
+    * ``budget`` — workflow name → maximum total cost, where a task's cost on
+      node i is ``duration * cores * cost_rate[i]`` (core-seconds by default).
+    * ``cost_rate`` — node name → cost per core-second (default 1.0).
+    * ``placement`` — workflow name → extra node features every task of that
+      workflow requires (tier restrictions come in as tier feature tags).
+
+    All constraints are *hard*: a schedule violating any of them counts the
+    violation into ``Schedule.violations`` (so caches and admission reject it)
+    and MILP encodes them as rows, HEFT/OLB as feasibility filters, and the
+    metaheuristics as a ``BIG_PENALTY`` fitness term.
+    """
+
+    deadline: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    budget: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    cost_rate: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    placement: Mapping[str, tuple[str, ...]] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        object.__setattr__(
+            self,
+            "placement",
+            {k: tuple(v) for k, v in self.placement.items()},
+        )
+
+    def __bool__(self) -> bool:
+        return bool(self.deadline or self.budget or self.cost_rate or self.placement)
+
+    def to_json(self) -> dict:
+        out: dict[str, Any] = {}
+        if self.deadline:
+            out["deadline"] = {k: float(v) for k, v in self.deadline.items()}
+        if self.budget:
+            out["budget"] = {k: float(v) for k, v in self.budget.items()}
+        if self.cost_rate:
+            out["cost_rate"] = {k: float(v) for k, v in self.cost_rate.items()}
+        if self.placement:
+            out["placement"] = {k: sorted(v) for k, v in self.placement.items()}
+        return out
+
+
+def constraints_from_json(obj: Mapping[str, Any] | None) -> Constraints | None:
+    if obj is None:
+        return None
+    unknown = set(obj) - set(_CONSTRAINT_KEYS)
+    if unknown:
+        raise ValueError(
+            f"constraints: unknown keys {sorted(unknown)} (known: {list(_CONSTRAINT_KEYS)})"
+        )
+    return Constraints(
+        deadline={k: float(v) for k, v in obj.get("deadline", {}).items()},
+        budget={k: float(v) for k, v in obj.get("budget", {}).items()},
+        cost_rate={k: float(v) for k, v in obj.get("cost_rate", {}).items()},
+        placement={k: tuple(v) for k, v in obj.get("placement", {}).items()},
+    )
+
+
 def topological_order(tasks: Sequence[Task]) -> list[int] | None:
     """Kahn's algorithm over intra-workflow dependency names.
 
@@ -146,10 +215,28 @@ class ScheduleProblem:
     task_names: list[str]
     workflow_of: np.ndarray  # [T] int
     workflow_names: list[str]
+    # hard constraints (None when the problem is unconstrained — the common
+    # case; keeping them absent keeps fingerprints/cache keys byte-stable)
+    deadline: np.ndarray | None = None  # [T] f64, +inf where unconstrained
+    cost_rate: np.ndarray | None = None  # [N] f64 cost per core-second
+    budget: np.ndarray | None = None  # [W] f64 per-workflow budget, +inf default
 
     @property
     def num_tasks(self) -> int:
         return int(self.durations.shape[0])
+
+    @property
+    def has_constraints(self) -> bool:
+        return self.deadline is not None or self.budget is not None
+
+    def cost_matrix(self) -> np.ndarray:
+        """[T, N] cost of running task j on node i: ``d_ij * cores_j * rate_i``."""
+        rate = (
+            self.cost_rate
+            if self.cost_rate is not None
+            else np.ones(self.num_nodes, dtype=np.float64)
+        )
+        return self.durations * self.cores[:, None] * rate[None, :]
 
     @property
     def num_nodes(self) -> int:
@@ -210,7 +297,11 @@ class ScheduleProblem:
         return np.outer(self.cores, share)
 
 
-def build_problem(system: System, workload: Workload) -> ScheduleProblem:
+def build_problem(
+    system: System,
+    workload: Workload,
+    constraints: Constraints | None = None,
+) -> ScheduleProblem:
     speeds = system.speed()
     node_names = [n.name for n in system.nodes]
     node_cores = system.cores()
@@ -244,9 +335,21 @@ def build_problem(system: System, workload: Workload) -> ScheduleProblem:
     preds: list[list[int]] = [[] for _ in range(t_count)]
     edges: list[tuple[int, int]] = []
 
+    wf_names = [w.name for w in workload.workflows]
+    placement: dict[int, frozenset[str]] = {}
+    if constraints is not None and constraints.placement:
+        unknown = set(constraints.placement) - set(wf_names)
+        if unknown:
+            raise ValueError(f"constraints.placement: unknown workflows {sorted(unknown)}")
+        for w_idx, wname in enumerate(wf_names):
+            extra = constraints.placement.get(wname)
+            if extra:
+                placement[w_idx] = frozenset(extra)
+
     for gi, (t, w_idx) in enumerate(zip(tasks, wf_of)):
         cores[gi] = t.cores
         data[gi] = t.data
+        required = t.features | placement.get(w_idx, frozenset())
         for i in range(n):
             if t.durations is not None:
                 # explicit durations are work measured at speed 1.0 (Eq. 4:
@@ -256,7 +359,7 @@ def build_problem(system: System, workload: Workload) -> ScheduleProblem:
                 ) / max(speeds[i], 1e-30)
             else:
                 durations[gi, i] = t.work / max(speeds[i], 1e-30)
-            ok_feat = system.nodes[i].provides(t.features)
+            ok_feat = system.nodes[i].provides(required)
             ok_cap = t.cores <= node_cores[i]
             ok_dur = math.isfinite(durations[gi, i])
             feasible[gi, i] = ok_feat and ok_cap and ok_dur
@@ -270,6 +373,38 @@ def build_problem(system: System, workload: Workload) -> ScheduleProblem:
     for gi, ps in enumerate(preds):
         pred_matrix[gi, : len(ps)] = ps
 
+    deadline = cost_rate = budget = None
+    if constraints is not None and (
+        constraints.deadline or constraints.budget or constraints.cost_rate
+    ):
+        if constraints.deadline:
+            deadline = np.full(t_count, np.inf, dtype=np.float64)
+            name_to_gi = {nm: gi for gi, nm in enumerate(name_of)}
+            wf_index = {nm: i for i, nm in enumerate(wf_names)}
+            for key, value in constraints.deadline.items():
+                if key in wf_index:
+                    deadline[np.asarray(wf_of) == wf_index[key]] = float(value)
+                elif key in name_to_gi:
+                    deadline[name_to_gi[key]] = float(value)
+                else:
+                    raise ValueError(
+                        f"constraints.deadline: unknown workflow/task {key!r}"
+                    )
+        if constraints.budget or constraints.cost_rate:
+            cost_rate = np.ones(n, dtype=np.float64)
+            unknown = set(constraints.cost_rate) - set(node_names)
+            if unknown:
+                raise ValueError(f"constraints.cost_rate: unknown nodes {sorted(unknown)}")
+            for nm, rate in constraints.cost_rate.items():
+                cost_rate[node_names.index(nm)] = float(rate)
+        if constraints.budget:
+            unknown = set(constraints.budget) - set(wf_names)
+            if unknown:
+                raise ValueError(f"constraints.budget: unknown workflows {sorted(unknown)}")
+            budget = np.full(len(wf_names), np.inf, dtype=np.float64)
+            for nm, value in constraints.budget.items():
+                budget[wf_names.index(nm)] = float(value)
+
     return ScheduleProblem(
         node_cores=node_cores,
         dtr=system.dtr,
@@ -282,7 +417,10 @@ def build_problem(system: System, workload: Workload) -> ScheduleProblem:
         edges=np.asarray(edges, dtype=np.int32).reshape(-1, 2),
         task_names=name_of,
         workflow_of=np.asarray(wf_of, dtype=np.int32),
-        workflow_names=[w.name for w in workload.workflows],
+        workflow_names=wf_names,
+        deadline=deadline,
+        cost_rate=cost_rate,
+        budget=budget,
     )
 
 
@@ -376,23 +514,31 @@ def problem_fingerprint(problem: "ScheduleProblem") -> str:
     Covers everything a technique can observe — durations (hence node speeds,
     including monitor-refreshed ones), feasibility (hence node failures),
     DTR, dependencies, releases, names — so any semantic change to the
-    problem changes the key and any byte-identical rebuild reuses it."""
-    return canonical_hash(
-        {
-            "node_cores": problem.node_cores,
-            "dtr": problem.dtr,
-            "durations": problem.durations,
-            "cores": problem.cores,
-            "data": problem.data,
-            "feasible": problem.feasible,
-            "release": problem.release,
-            "pred_matrix": problem.pred_matrix,
-            "edges": problem.edges,
-            "task_names": problem.task_names,
-            "workflow_of": problem.workflow_of,
-            "workflow_names": problem.workflow_names,
-        }
-    )
+    problem changes the key and any byte-identical rebuild reuses it.
+
+    Constraint arrays enter the hash only when present, so every
+    pre-constraint fingerprint (and any cache keyed on one) is unchanged."""
+    payload: dict[str, Any] = {
+        "node_cores": problem.node_cores,
+        "dtr": problem.dtr,
+        "durations": problem.durations,
+        "cores": problem.cores,
+        "data": problem.data,
+        "feasible": problem.feasible,
+        "release": problem.release,
+        "pred_matrix": problem.pred_matrix,
+        "edges": problem.edges,
+        "task_names": problem.task_names,
+        "workflow_of": problem.workflow_of,
+        "workflow_names": problem.workflow_names,
+    }
+    if problem.deadline is not None:
+        payload["deadline"] = problem.deadline
+    if problem.cost_rate is not None:
+        payload["cost_rate"] = problem.cost_rate
+    if problem.budget is not None:
+        payload["budget"] = problem.budget
+    return canonical_hash(payload)
 
 
 # -----------------------------------------------------------------------------

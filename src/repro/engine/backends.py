@@ -55,12 +55,40 @@ def _usage_term(arrays, assignments, usage_mode: str):
     return jnp.broadcast_to(arrays["usage_fixed"].sum(), assignments.shape[:1])
 
 
-def population_fitness_from_arrays(assignments, arrays: dict, alpha, beta, usage_mode: str):
+def _budget_overage(arrays, assignments):
+    """Per-candidate count of workflows whose assignment's total cost exceeds
+    their budget: ``(assignments [P, T]) -> overage [P] f32``.
+
+    Pure gather + masked row reduction over the packed ``cost``/``wf``/
+    ``wf_budget`` arrays — no host round-trip, no scatter (workflow sums are
+    masked reductions so the float association matches the numpy oracle in
+    :func:`repro.core.evaluator.constraint_violations`).  Shared verbatim by
+    the jax fitness core and the pallas objective so both stay bit-identical
+    in f32."""
+    import jax.numpy as jnp
+
+    T = arrays["cost"].shape[0]
+    cost_t = arrays["cost"][jnp.arange(T)[None, :], assignments]  # [P, T]
+    wf_rows = arrays["wf"][None, :] == jnp.arange(T)[:, None]  # [T(wf rows), T]
+    wf_cost = jnp.sum(jnp.where(wf_rows[None], cost_t[:, None, :], 0.0), axis=-1)
+    over = jnp.sum(wf_cost > arrays["wf_budget"][None, :], axis=-1)
+    return over.astype(jnp.float32)
+
+
+def population_fitness_from_arrays(
+    assignments, arrays: dict, alpha, beta, usage_mode: str, constrained: bool = False
+):
     """Unjitted fitness over packed problem arrays:
     ``(assignments [P, T]) -> (objective [P], makespan [P])``.
 
     The single implementation behind the jitted single-instance core, the
-    vmapped batched core, and the batched metaheuristic sweeps."""
+    vmapped batched core, and the batched metaheuristic sweeps.
+
+    ``constrained=True`` (a static trace-time switch — unconstrained
+    problems keep today's exact XLA program) threads packed deadlines into
+    the makespan scan's violation count and adds the budget-overage penalty,
+    so GA/PSO candidates are penalized inside the batched device path with
+    no per-candidate host round-trip."""
     from repro.kernels import ref
 
     makespan, violations = ref.population_makespan_ref(
@@ -74,14 +102,17 @@ def population_fitness_from_arrays(assignments, arrays: dict, alpha, beta, usage
         dtr=arrays["dtr"],
         init_free=arrays["init_free"],
         node_cores=arrays["node_cores"],
+        deadline=arrays["deadline"] if constrained else None,
     )
+    if constrained:
+        violations = violations + _budget_overage(arrays, assignments)
     usage = _usage_term(arrays, assignments, usage_mode)
     obj = alpha * usage + beta * makespan + BIG_PENALTY * violations
     return obj, makespan
 
 
 @functools.lru_cache(maxsize=None)
-def _population_core(usage_mode: str) -> Callable:
+def _population_core(usage_mode: str, constrained: bool = False) -> Callable:
     """Shared jitted ``(assignments, arrays, alpha, beta) -> (obj, mk)``.
 
     Problem arrays are *arguments*, not closure captures — XLA's jit cache
@@ -89,25 +120,33 @@ def _population_core(usage_mode: str) -> Callable:
     hits the same compiled executable (no per-instance re-jit)."""
     import jax
 
-    return jax.jit(functools.partial(population_fitness_from_arrays, usage_mode=usage_mode))
+    return jax.jit(
+        functools.partial(
+            population_fitness_from_arrays, usage_mode=usage_mode, constrained=constrained
+        )
+    )
 
 
 @functools.lru_cache(maxsize=None)
-def _batched_population_core(usage_mode: str) -> Callable:
+def _batched_population_core(usage_mode: str, constrained: bool = False) -> Callable:
     """Jitted ``vmap`` of the fitness core across a stacked instance axis:
     ``(assignments [B, P, T], arrays [B, ...], alpha, beta) -> ([B, P], [B, P])``."""
     import jax
 
     return jax.jit(
         jax.vmap(
-            functools.partial(population_fitness_from_arrays, usage_mode=usage_mode),
+            functools.partial(
+                population_fitness_from_arrays, usage_mode=usage_mode, constrained=constrained
+            ),
             in_axes=(0, 0, None, None),
         )
     )
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_batched_population_core(usage_mode: str, shards: int) -> Callable:
+def _sharded_batched_population_core(
+    usage_mode: str, shards: int, constrained: bool = False
+) -> Callable:
     """:func:`_batched_population_core` striped over the local device mesh.
 
     ``shard_map`` splits the leading (instance) axis into ``shards`` equal
@@ -117,7 +156,7 @@ def _sharded_batched_population_core(usage_mode: str, shards: int) -> Callable:
     outright (same jitted callable, same XLA program — the degenerate mesh
     IS today's path)."""
     if shards <= 1:
-        return _batched_population_core(usage_mode)
+        return _batched_population_core(usage_mode, constrained)
     import jax
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -125,7 +164,9 @@ def _sharded_batched_population_core(usage_mode: str, shards: int) -> Callable:
     from repro.engine.shard import AXIS, instance_mesh
 
     vmapped = jax.vmap(
-        functools.partial(population_fitness_from_arrays, usage_mode=usage_mode),
+        functools.partial(
+            population_fitness_from_arrays, usage_mode=usage_mode, constrained=constrained
+        ),
         in_axes=(0, 0, None, None),
     )
     return jax.jit(
@@ -368,7 +409,7 @@ class JaxEngine(ScheduleEngine):
             else pack(problem, core_cap=core_cap, pad=False)
         )
         arrays = packed.device_arrays()
-        core = _population_core(w.usage_mode)
+        core = _population_core(w.usage_mode, packed.constrained)
         tb = packed.bucket[0]
         bucket, mode = packed.bucket, w.usage_mode
 
@@ -408,7 +449,10 @@ class JaxEngine(ScheduleEngine):
         if shards > 1:
             return shard_mod.sharded_batched_fitness(problems, w, shards=shards)
         arrays, bucket = stack_packed(problems)
-        core = _batched_population_core(w.usage_mode)
+        constrained = any(getattr(p, "has_constraints", False) for p in problems) or any(
+            getattr(p, "constrained", False) for p in problems
+        )
+        core = _batched_population_core(w.usage_mode, constrained)
 
         def fitness(assignments):
             import jax.numpy as jnp
@@ -466,8 +510,13 @@ class PallasEngine(ScheduleEngine):
                 pred_matrix=arrays["pred_matrix"],
                 dtr=arrays["dtr"],
                 init_free=arrays["init_free"],
+                deadline=arrays["deadline"] if packed.constrained else None,
                 force=True,
             )
+            # identical penalty expression to population_fitness_from_arrays —
+            # the f32 cross-backend equivalence contract covers it
+            if packed.constrained:
+                violations = violations + _budget_overage(arrays, a)
             usage = _usage_term(arrays, a, w.usage_mode)
             obj = w.alpha * usage + w.beta * makespan + BIG_PENALTY * violations
             return obj, makespan

@@ -50,6 +50,12 @@ FITNESS_ARRAY_KEYS = (
     "node_cores",
     "usage_fixed",
     "usage_weighted",
+    # hard-constraint arrays (neutral when unconstrained: +INF deadlines and
+    # budgets, zero costs — the penalty terms evaluate to exactly 0.0)
+    "deadline",
+    "cost",
+    "wf",
+    "wf_budget",
 )
 
 Bucket = tuple[int, int, int, int]
@@ -116,12 +122,17 @@ class PackedProblem:
     node_cores: np.ndarray  # [Nb] i32
     usage_fixed: np.ndarray  # [Tb] f32
     usage_weighted: np.ndarray  # [Tb, Nb] f32
+    deadline: np.ndarray  # [Tb] f32 latest finish per task (+INF = none)
+    cost: np.ndarray  # [Tb, Nb] f32 cost of task j on node i (0 when unbudgeted)
+    wf: np.ndarray  # [Tb] i32 workflow id per task (pad rows → first pad id)
+    wf_budget: np.ndarray  # [Tb] f32 budget by workflow id row (+INF = none)
     bucket: Bucket
     num_tasks: int  # real tasks (≤ bucket[0])
     num_nodes: int  # real nodes (≤ bucket[1])
     cmax: int  # modeled core window (≤ bucket[2])
     dtype: str = "float32"
     fingerprint: str | None = None
+    constrained: bool = False  # any non-trivial deadline/budget packed
     _device: dict[str, Any] | None = dataclasses.field(
         default=None, repr=False, compare=False
     )
@@ -188,6 +199,19 @@ def _build(
     usage_fixed[:T] = problem.usage
     usage_weighted = np.zeros((Tb, Nb), np.float32)
     usage_weighted[:T, :N] = problem.weighted_usage()
+    deadline = np.full(Tb, _INF, np.float32)
+    if problem.deadline is not None:
+        deadline[:T] = np.minimum(problem.deadline, _INF)
+    cost = np.zeros((Tb, Nb), np.float32)
+    # workflow ids: pad rows join a phantom workflow (first free id) whose
+    # budget row is +INF and whose packed costs are 0 — penalty-neutral
+    w_count = len(problem.workflow_names)
+    wf = np.full(Tb, min(w_count, Tb - 1), np.int32)
+    wf[:T] = problem.workflow_of
+    wf_budget = np.full(Tb, _INF, np.float32)
+    if problem.budget is not None:
+        cost[:T, :N] = problem.cost_matrix()
+        wf_budget[:w_count] = np.minimum(problem.budget, _INF)
     arrays = {
         "durations": durations,
         "cores": cores,
@@ -200,6 +224,10 @@ def _build(
         "node_cores": node_cores,
         "usage_fixed": usage_fixed,
         "usage_weighted": usage_weighted,
+        "deadline": deadline,
+        "cost": cost,
+        "wf": wf,
+        "wf_budget": wf_budget,
     }
     for a in arrays.values():
         a.setflags(write=False)
@@ -209,6 +237,7 @@ def _build(
         num_nodes=N,
         cmax=min(_cmax_of(problem, core_cap), Cb),
         fingerprint=fingerprint,
+        constrained=problem.has_constraints,
         **arrays,
     )
 

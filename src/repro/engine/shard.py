@@ -252,7 +252,8 @@ def sharded_batched_fitness(
 
     w = weights or ObjectiveWeights()
     stack = stack_packed_sharded(problems, shards=shards)
-    core = _sharded_batched_population_core(w.usage_mode, stack.shards)
+    constrained = any(getattr(p, "has_constraints", False) for p in problems)
+    core = _sharded_batched_population_core(w.usage_mode, stack.shards, constrained)
     B, Bp = stack.instances, stack.padded
     bucket = stack.bucket
 

@@ -56,6 +56,7 @@ def _kernel(
     data_ref,  # [T, 1] f32
     feasible_ref,  # [T, N] f32 (1.0 = feasible; ANY/HBM when streaming)
     release_ref,  # [T, 1] f32
+    deadline_ref,  # [T, 1] f32 latest allowed finish (1e30 = unconstrained)
     preds_ref,  # [T, MAXP] int32
     dtr_ref,  # [N, N] f32
     init_free_ref,  # [N, CMAX] f32
@@ -154,7 +155,9 @@ def _kernel(
         finish[...] = jax.lax.dynamic_update_index_in_dim(fin_all, fin_j, j, axis=1)
 
         feas = jnp.sum(onehot_i * feas_row[None, :], axis=1)
-        viol_ref[...] += (1.0 - feas)[:, None]
+        dl_j = pl.load(deadline_ref, (pl.dslice(j, 1), slice(None)))[0, 0]
+        late = (fin_j > dl_j).astype(jnp.float32)
+        viol_ref[...] += ((1.0 - feas) + late)[:, None]
         return 0
 
     jax.lax.fori_loop(0, tasks, body, 0)
@@ -172,6 +175,7 @@ def population_makespan_pallas(
     pred_matrix: jax.Array,  # [T, MAXP] int32
     dtr: jax.Array,  # [N, N] f32
     init_free: jax.Array,  # [N, CMAX] f32
+    deadline: jax.Array | None = None,  # [T] f32 (1e30 = unconstrained)
     *,
     tile: int = DEFAULT_TILE,
     stream: bool = False,
@@ -185,6 +189,8 @@ def population_makespan_pallas(
     maxp = pred_matrix.shape[1]
     cmax = init_free.shape[1]
     assert P % tile == 0, (P, tile)
+    if deadline is None:
+        deadline = jnp.full((T,), 1e30, dtype=jnp.float32)
     # padding entries are "never free" (+1e30); real cores start ≤ horizon
     node_cores = jnp.sum(init_free < 1e29, axis=1).astype(jnp.float32)
     node_cores = jnp.maximum(node_cores, 1.0).reshape(1, N)
@@ -219,6 +225,7 @@ def population_makespan_pallas(
             static(T, 1),
             big or static(T, N),
             static(T, 1),
+            static(T, 1),
             static(T, maxp),
             static(N, N),
             static(N, cmax),
@@ -241,6 +248,7 @@ def population_makespan_pallas(
         data.astype(jnp.float32).reshape(T, 1),
         feasible.astype(jnp.float32),
         release.astype(jnp.float32).reshape(T, 1),
+        deadline.astype(jnp.float32).reshape(T, 1),
         pred_matrix.astype(jnp.int32),
         dtr.astype(jnp.float32),
         init_free.astype(jnp.float32),

@@ -62,7 +62,8 @@ _MAKESPAN_VMEM_WORDS = 3_000_000
 
 def _makespan_words(T: int, N: int, cmax: int, maxp: int, tile: int, stream: bool) -> int:
     """f32-word VMEM footprint of one grid step of the makespan kernel."""
-    words = N * N + N * cmax + tile * (N * cmax + 2 * T) + T * (3 + maxp)
+    # per-task columns: cores, data, release, deadline + maxp predecessor ids
+    words = N * N + N * cmax + tile * (N * cmax + 2 * T) + T * (4 + maxp)
     # the two big [T, N] task-static arrays: VMEM-resident, or 2×[2, N]
     # double-buffered rows when DMA-streamed from HBM
     words += 4 * N if stream else 2 * T * N
@@ -107,6 +108,7 @@ def population_makespan(
     pred_matrix: jax.Array,
     dtr: jax.Array,
     init_free: jax.Array,
+    deadline: jax.Array | None = None,
     tile: int | None = None,
     force: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
@@ -114,11 +116,14 @@ def population_makespan(
     and within the VMEM envelope, else the jnp oracle.  ``tile=None`` picks
     the widest tile that fits.  ``force=True`` routes through the kernel
     regardless of the global config (the ``pallas`` engine backend) — the
-    envelope fallback still applies."""
+    envelope fallback still applies.  ``deadline`` ([T] latest finish, 1e30 =
+    unconstrained) folds late tasks into the violation count."""
     P, T = assignments.shape
     N = durations.shape[1]
     cmax = init_free.shape[1]
     maxp = pred_matrix.shape[1]
+    if deadline is None:
+        deadline = jnp.full((T,), 1e30, dtype=jnp.float32)
     use = force or _CONFIG.use_pallas
     choice = _autotune_makespan(P, T, N, cmax, maxp, tile) if use else None
     if choice is not None:
@@ -139,6 +144,7 @@ def population_makespan(
             pred_matrix,
             dtr,
             init_free,
+            deadline,
             tile=tile,
             stream=stream,
             interpret=_CONFIG.resolve_interpret(),
@@ -157,6 +163,7 @@ def population_makespan(
         pred_matrix=pred_matrix,
         dtr=dtr,
         init_free=init_free,
+        deadline=deadline,
     )
 
 

@@ -34,10 +34,15 @@ def population_makespan_ref(
     dtr: jax.Array,  # [N, N] f32 (large finite instead of inf on diag)
     init_free: jax.Array,  # [N, Cmax] f32 (inf-padded beyond node cores)
     node_cores: jax.Array | None = None,  # [N] int32
+    deadline: jax.Array | None = None,  # [T] f32 latest finish (1e30 = none)
 ) -> tuple[jax.Array, jax.Array]:
     """Capacity-aware core-granular list scheduling (see
     ``repro.core.evaluator`` for the semantics).  Returns
-    ``(makespan[P], violations[P])``."""
+    ``(makespan[P], violations[P])``.
+
+    ``deadline`` (when given) adds one violation per task finishing past its
+    deadline — deadlines are checked here because finish times only exist
+    inside the scheduling scan."""
     T = durations.shape[0]
     if node_cores is None:
         # padding entries are "never free" (+1e30); real cores start ≤ horizon
@@ -74,6 +79,8 @@ def population_makespan_ref(
         makespan = jnp.max(fin, initial=0.0)
         feas = feasible[jnp.arange(T), assignment]
         violations = jnp.sum(~feas).astype(jnp.float32)
+        if deadline is not None:
+            violations = violations + jnp.sum(fin > deadline).astype(jnp.float32)
         return makespan, violations
 
     return jax.vmap(eval_one)(assignments)

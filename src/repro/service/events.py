@@ -30,6 +30,10 @@ Event kinds (the ``kind`` field):
 ``requeue``         a preempted submission re-enters the admission queue
                     after its virtual-time backoff
 ``failed``          a submission exhausted its retry budget (terminal)
+``deadline-miss``   a submission completed past its deadline / cycle deadline
+``cycle-spawned``   a cycling stream's completion spawned its next cycle
+``converged``       a cycling stream ended (fixed count reached, or the
+                    seeded convergence predicate fired)
 ==================  ========================================================
 
 Scheduled events are *cancellable*: ``push`` returns the :class:`Event` as a

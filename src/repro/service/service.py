@@ -57,7 +57,7 @@ from repro import obs
 from repro.core.api import REGISTRY, SolverRegistry
 from repro.core.simulator import ExecutionReport, execute
 from repro.core.system_model import System
-from repro.core.workload_model import Workflow, Workload, build_problem
+from repro.core.workload_model import Constraints, Workflow, Workload, build_problem
 from repro.engine.packed import pack_cache
 from repro.service.admission import AdmissionBatcher, PreparedSubmission
 from repro.service.cache import SolveCache, solve_cache_key
@@ -158,6 +158,9 @@ class SubmissionRecord:
     lost_work_seconds: float = 0.0  # busy-seconds burned on cancelled windows
     reason: str | None = None  # terminal reason for rejected / failed
     fallbacks: list[str] = dataclasses.field(default_factory=list)
+    constrained: bool = False  # submission carried hard constraints
+    deadline_miss: bool = False  # completed past its deadline / cycle deadline
+    cycle: int = 0  # cycle index for cycling streams (0 otherwise)
     status: str = "queued"  # queued | running | completed | rejected | failed
 
     def to_json(self) -> dict[str, Any]:
@@ -189,6 +192,8 @@ class ServiceResult:
     clock_end: float
     wall_seconds: float
     nodes: list[dict[str, Any]]
+    #: cycling stream accounting (zeros on traces without cycling specs)
+    cycling: dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def makespans(self) -> dict[str, float | None]:
         """id → observed makespan (None when rejected/unfinished) — the
@@ -269,6 +274,13 @@ class ServiceResult:
                 "max": float(np.max(stretch)),
             }
         out["robustness"] = robustness
+        # constraint / cycling accounting (new keys only; all-zero on
+        # traces without constraints or cycling specs)
+        out["constrained_submissions"] = sum(
+            1 for r in self.records if r.constrained
+        )
+        out["deadline_misses"] = sum(1 for r in self.records if r.deadline_miss)
+        out["cycling"] = dict(self.cycling)
         return out
 
 
@@ -287,6 +299,42 @@ def _reduced_workflow(wf: Workflow, done: set[str], attempt: int) -> Workflow:
         if t.name not in done
     )
     return dataclasses.replace(wf, name=f"{base}~r{attempt}", tasks=tasks)
+
+
+def _parse_cycle_id(sid: str) -> tuple[str, int]:
+    """``"s003@c2"`` → ``("s003", 2)``; plain ids are cycle 0 of themselves."""
+    base, sep, suffix = sid.rpartition("@c")
+    if sep and suffix.isdigit():
+        return base, int(suffix)
+    return sid, 0
+
+
+def _retarget_constraints(cons: Constraints, wf: Workflow) -> Constraints:
+    """Rekey a submission's constraints onto its current workflow.
+
+    A submission carries exactly one workflow, so every workflow-level key
+    refers to it — but the workflow's *name* moves under the service's feet
+    (retry remainders are renamed ``~r<n>`` and lose their finished tasks).
+    Workflow-level keys follow the current name; task-qualified deadline
+    keys keep only still-present tasks (a salvaged task's deadline is moot).
+    """
+    names = {t.name for t in wf.tasks}
+    deadline: dict[str, float] = {}
+    for key, value in cons.deadline.items():
+        if "/" in key:
+            task = key.split("/", 1)[1]
+            if task in names:
+                deadline[f"{wf.name}/{task}"] = float(value)
+        else:
+            deadline[wf.name] = float(value)
+    budget = {wf.name: float(v) for v in cons.budget.values()}
+    placement = {wf.name: tuple(v) for v in cons.placement.values()}
+    return Constraints(
+        deadline=deadline,
+        budget=budget,
+        cost_rate=dict(cons.cost_rate),
+        placement=placement,
+    )
 
 
 @dataclasses.dataclass
@@ -326,16 +374,47 @@ class SchedulingService:
         self.batched_groups = 0
         self.batched_submissions = 0
         self._submissions: dict[str, Submission] = {}
+        #: as-registered workflows — preemption retries swap a reduced
+        #: remainder into ``_submissions``, but a spawned next cycle must
+        #: run the full original DAG
+        self._originals: dict[str, Workflow] = {}
         self._queue: list[str] = []  # submission ids awaiting admission
         self._admit_scheduled = False
         self._inflight: dict[str, _InFlight] = {}
+        # cross-submission dependency gating (``Submission.after``)
+        self._waiting: dict[str, set[str]] = {}  # sid → unmet dep ids
+        self._dependents: dict[str, list[str]] = {}  # dep id → gated sids
+        self._gated = 0  # submissions that were held at least once
+        self._spawned = 0  # cycle submissions synthesized at completion
+        self._converged = 0  # converging streams ended by their predicate
 
     # ---- event handlers -----------------------------------------------------
-    def _on_submission(self, ev: Event) -> None:
-        self._queue.append(ev.payload["id"])
+    def _enqueue(self, sid: str) -> None:
+        self._queue.append(sid)
         if not self._admit_scheduled:
             self.loop.push(self.loop.now + self.config.batch_window, "admit")
             self._admit_scheduled = True
+
+    def _on_submission(self, ev: Event) -> None:
+        sid = ev.payload["id"]
+        sub = self._submissions[sid]
+        unmet: set[str] = set()
+        for dep in sub.after:
+            status = self.records[dep].status
+            if status == "completed":
+                continue
+            if status in ("rejected", "failed"):
+                self._reject_for_dep(sid, dep)
+                return
+            unmet.add(dep)
+        if unmet:
+            self._waiting[sid] = unmet
+            for dep in unmet:
+                self._dependents.setdefault(dep, []).append(sid)
+            self._gated += 1
+            obs.METRICS.counter("service.gated").inc()
+            return
+        self._enqueue(sid)
 
     def _on_admit(self, _ev: Event) -> None:
         self._admit_scheduled = False
@@ -374,6 +453,22 @@ class SchedulingService:
             rec.observed_makespan = float(fl.report.makespan)
         rec.turnaround = rec.finished - rec.arrival
         rec.status = "completed"
+        sub = self._submissions[sid]
+        deadline = sub.deadline
+        if sub.cycling is not None and sub.cycling.cycle_deadline is not None:
+            cd = sub.cycling.cycle_deadline
+            deadline = cd if deadline is None else min(deadline, cd)
+        if deadline is not None and rec.observed_makespan > deadline:
+            rec.deadline_miss = True
+            obs.METRICS.counter("service.deadline_miss").inc()
+            self.loop.emit(
+                "deadline-miss",
+                id=sid,
+                deadline=float(deadline),
+                observed=float(rec.observed_makespan),
+            )
+        self._release_dependents(sid)
+        self._maybe_spawn_cycle(sid)
 
     def _on_node_drift(self, ev: Event) -> None:
         self.state.set_drift(ev.payload["node"], ev.payload["factor"])
@@ -398,10 +493,86 @@ class SchedulingService:
         self.state.recover(ev.payload["node"])
 
     def _on_requeue(self, ev: Event) -> None:
-        self._queue.append(ev.payload["id"])
-        if not self._admit_scheduled:
-            self.loop.push(self.loop.now + self.config.batch_window, "admit")
-            self._admit_scheduled = True
+        self._enqueue(ev.payload["id"])
+
+    # ---- dependency gating + cycling ----------------------------------------
+    def _release_dependents(self, dep: str) -> None:
+        """``dep`` completed: admit every gated submission whose last unmet
+        dependency it was (at the completion instant — never before)."""
+        for sid in self._dependents.pop(dep, ()):
+            unmet = self._waiting.get(sid)
+            if unmet is None:
+                continue
+            unmet.discard(dep)
+            if not unmet:
+                del self._waiting[sid]
+                self._enqueue(sid)
+
+    def _reject_for_dep(self, sid: str, dep: str) -> None:
+        rec = self.records[sid]
+        rec.status = "rejected"
+        rec.finished = self.loop.now
+        rec.turnaround = rec.finished - rec.arrival
+        rec.reason = f"dependency-failed: {dep}"
+        obs.METRICS.counter("service.rejected").inc()
+        _LOG.info("rejected %s: %s", sid, rec.reason)
+        self.loop.emit("rejected", id=sid, reason=rec.reason)
+        self._cascade_terminal(sid)
+
+    def _cascade_terminal(self, sid: str) -> None:
+        """``sid`` ended without completing (rejected/failed): every gated
+        submission waiting on it can never run — reject them, transitively."""
+        for dsid in self._dependents.pop(sid, ()):
+            if self._waiting.pop(dsid, None) is not None:
+                self._reject_for_dep(dsid, sid)
+
+    def _register_spawned(self, sub: Submission, *, cycle: int) -> None:
+        self._submissions[sub.id] = sub
+        self._originals[sub.id] = sub.workflow
+        self.records[sub.id] = SubmissionRecord(
+            id=sub.id,
+            tenant=sub.tenant,
+            family=sub.family,
+            technique=sub.technique,
+            arrival=sub.time,
+            constrained=bool(sub.constraints),
+            cycle=cycle,
+        )
+
+    def _maybe_spawn_cycle(self, sid: str) -> None:
+        """A cycling submission completed cycle ``k``: spawn cycle ``k+1``
+        one period out, unless the fixed count is reached or the seeded
+        convergence predicate fires.  The predicate keys on the *base*
+        submission id, so each stream converges independently and replays
+        bit-identically."""
+        sub = self._submissions[sid]
+        spec = sub.cycling
+        if spec is None:
+            return
+        base, cycle = _parse_cycle_id(sid)
+        if spec.converging:
+            done = spec.converge.converged(base, cycle)
+        else:
+            done = cycle + 1 >= (spec.cycles or 1)
+        if done:
+            if spec.converging:
+                self._converged += 1
+            self.loop.emit("converged", id=sid, base=base, cycles=cycle + 1)
+            return
+        nxt = dataclasses.replace(
+            sub,
+            id=f"{base}@c{cycle + 1}",
+            time=self.loop.now + spec.period,
+            workflow=self._originals[sid],
+            after=(sid,),
+        )
+        self._register_spawned(nxt, cycle=cycle + 1)
+        self._spawned += 1
+        obs.METRICS.counter("service.cycles_spawned").inc()
+        self.loop.emit("cycle-spawned", id=nxt.id, base=base, cycle=cycle + 1)
+        self.loop.push(
+            nxt.time, "submission", id=nxt.id, tenant=nxt.tenant, family=nxt.family
+        )
 
     # ---- fault tolerance ------------------------------------------------------
     def _preempt(self, sid: str, node: str) -> None:
@@ -455,6 +626,7 @@ class SchedulingService:
             obs.METRICS.counter("service.failed").inc()
             _LOG.warning("failed %s: %s", sid, rec.reason)
             self.loop.emit("failed", id=sid, reason=rec.reason)
+            self._cascade_terminal(sid)
             return
         obs.METRICS.counter("service.requeues").inc()
         rec.retries += 1
@@ -482,8 +654,11 @@ class SchedulingService:
         baked = self.state.baked_factors()
         for sid in batch_ids:
             sub = self._submissions[sid]
+            cons = None
+            if sub.constraints is not None and sub.constraints:
+                cons = _retarget_constraints(sub.constraints, sub.workflow)
             problem = self.state.apply_health(
-                build_problem(effective, Workload((sub.workflow,)))
+                build_problem(effective, Workload((sub.workflow,)), cons)
             )
             prepared.append(
                 PreparedSubmission(
@@ -535,6 +710,7 @@ class SchedulingService:
                 obs.METRICS.counter("service.rejected").inc()
                 _LOG.info("rejected %s: %s", prep.submission.id, reason)
                 self.loop.emit("rejected", id=prep.submission.id, reason=reason)
+                self._cascade_terminal(prep.submission.id)
                 continue
             rec.technique_used = sched.technique
             self._dispatch(prep)
@@ -619,17 +795,31 @@ class SchedulingService:
                 # surfaces later as a KeyError on the twin's completion
                 raise ValueError(f"duplicate submission id {sub.id!r} in trace")
             self._submissions[sub.id] = sub
+            self._originals[sub.id] = sub.workflow
+            _base, cycle = _parse_cycle_id(sub.id)
             self.records[sub.id] = SubmissionRecord(
                 id=sub.id,
                 tenant=sub.tenant,
                 family=sub.family,
                 technique=sub.technique,
                 arrival=sub.time,
+                constrained=bool(sub.constraints),
+                cycle=cycle,
             )
             self.loop.push(
                 sub.time, "submission",
                 id=sub.id, tenant=sub.tenant, family=sub.family,
             )
+        for sub in trace.submissions:
+            for dep in sub.after:
+                if dep not in self._submissions:
+                    # same fail-fast-at-source rationale as unknown nodes
+                    raise ValueError(
+                        f"submission {sub.id!r} waits on unknown submission "
+                        f"{dep!r}"
+                    )
+                if dep == sub.id:
+                    raise ValueError(f"submission {sub.id!r} waits on itself")
         known = set(self.state.node_names)
         for nev in trace.events:
             if nev.node not in known:
@@ -679,7 +869,9 @@ class SchedulingService:
         return ServiceResult(
             trace=trace.name,
             config=self.config,
-            records=[self.records[s.id] for s in trace.submissions],
+            # insertion order: trace submissions first (in trace order),
+            # then service-spawned cycles as they appeared
+            records=list(self.records.values()),
             event_log=list(self.loop.log),
             cache=self.cache.stats.to_json(),
             pack_cache=delta.to_json(),
@@ -689,6 +881,16 @@ class SchedulingService:
             clock_end=self.loop.now,
             wall_seconds=time.perf_counter() - wall0,
             nodes=[s.to_json() for s in self.state.status()],
+            cycling={
+                "streams": sum(
+                    1
+                    for s in trace.submissions
+                    if s.cycling is not None
+                ),
+                "spawned_cycles": self._spawned,
+                "converged_streams": self._converged,
+                "gated_submissions": self._gated,
+            },
         )
 
 

@@ -38,8 +38,10 @@ import numpy as np
 from repro.core.evaluator import ObjectiveWeights
 from repro.core.system_model import Node, System, make_system, system_from_json, system_to_json
 from repro.core.workload_model import (
+    Constraints,
     Workflow,
     Workload,
+    constraints_from_json,
     mri_w1,
     mri_w2,
     random_layered_workflow,
@@ -47,6 +49,7 @@ from repro.core.workload_model import (
     workload_from_json,
     workload_to_json,
 )
+from repro.cycling import CycleSpec, cycle_spec_from_json
 
 FAMILIES = ("mri", "stgs", "random", "tpu")
 
@@ -75,7 +78,16 @@ def continuum_system() -> System:
 
 @dataclasses.dataclass(frozen=True)
 class Submission:
-    """One tenant request: a workflow plus how to solve it."""
+    """One tenant request: a workflow plus how to solve it.
+
+    ``after`` gates admission on the listed submission ids completing (a
+    dep's rejection/failure cascade-rejects this one); ``deadline`` is an
+    observed-makespan SLO checked at completion; ``constraints`` are hard
+    scheduling constraints threaded into the solve
+    (:class:`~repro.core.workload_model.Constraints`); ``cycling`` makes the
+    submission a recurring/converging stream — the service spawns cycle
+    ``k+1`` (id ``{base}@c{k+1}``) when cycle ``k`` completes, until the
+    fixed count or the seeded convergence predicate ends it."""
 
     id: str
     tenant: str
@@ -85,9 +97,13 @@ class Submission:
     technique: str = "auto"
     weights: ObjectiveWeights = dataclasses.field(default_factory=ObjectiveWeights)
     solver_options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    after: tuple[str, ...] = ()
+    deadline: float | None = None
+    constraints: Constraints | None = None
+    cycling: CycleSpec | None = None
 
     def to_json(self) -> dict[str, Any]:
-        return {
+        out: dict[str, Any] = {
             "id": self.id,
             "tenant": self.tenant,
             "time": float(self.time),
@@ -101,6 +117,17 @@ class Submission:
             "solver_options": dict(self.solver_options),
             "workflow": workload_to_json(Workload((self.workflow,))),
         }
+        # optional sections are emitted only when set — pre-cycling trace
+        # files serialize byte-identically
+        if self.after:
+            out["after"] = list(self.after)
+        if self.deadline is not None:
+            out["deadline"] = float(self.deadline)
+        if self.constraints is not None and self.constraints:
+            out["constraints"] = self.constraints.to_json()
+        if self.cycling is not None:
+            out["cycling"] = self.cycling.to_json()
+        return out
 
     @classmethod
     def from_json(cls, obj: Mapping[str, Any]) -> "Submission":
@@ -110,6 +137,7 @@ class Submission:
             raise ValueError(
                 f"submission {obj.get('id')!r} must carry exactly one workflow"
             )
+        deadline = obj.get("deadline")
         return cls(
             id=obj["id"],
             tenant=obj.get("tenant", "t0"),
@@ -123,6 +151,10 @@ class Submission:
                 usage_mode=w.get("usage_mode", "fixed"),
             ),
             solver_options=dict(obj.get("solver_options", {})),
+            after=tuple(obj.get("after", ())),
+            deadline=float(deadline) if deadline is not None else None,
+            constraints=constraints_from_json(obj.get("constraints")),
+            cycling=cycle_spec_from_json(obj.get("cycling")),
         )
 
 
@@ -356,6 +388,7 @@ def generate_trace(
     tenants: int = 8,
     node_events: bool = False,
     chaos: Mapping[str, Any] | None = None,
+    cycling: Mapping[str, Any] | None = None,
     system: System | None = None,
     topology: Any = None,
     name: str = "trace",
@@ -379,7 +412,15 @@ def generate_trace(
     topology (:mod:`repro.topology`): a preset name, spec dict, or
     :class:`~repro.topology.TopologySpec`.  Note the ``"tpu"`` family
     requires F9 nodes, which tiered topologies do not provide — pick
-    ``families`` accordingly."""
+    ``families`` accordingly.
+
+    ``cycling`` turns a seeded fraction of submissions into recurring /
+    converging streams: ``{"fraction": 0.25, **cycle_spec_json}`` — the
+    non-``fraction`` keys are a :class:`~repro.cycling.CycleSpec` JSON
+    object (e.g. ``{"cycles": 3, "period": 5.0}`` or ``{"converge":
+    {"prob": 0.5}, "period": 5.0}``).  Selection draws from its own
+    derived Generator (``seed + 3``), so traces without ``cycling`` are
+    byte-identical to pre-cycling output."""
     rng = np.random.default_rng(seed)
     topology_spec = None
     if topology is not None:
@@ -409,6 +450,19 @@ def generate_trace(
                 solver_options=options,
             )
         )
+    if cycling is not None:
+        ckw = dict(cycling)
+        fraction = float(ckw.pop("fraction", 0.25))
+        if not 0.0 <= fraction <= 1.0:
+            raise ValueError(f"cycling.fraction must be in [0, 1], got {fraction}")
+        spec = cycle_spec_from_json(ckw)
+        crng = np.random.default_rng(seed + 3)
+        subs = [
+            dataclasses.replace(s, cycling=spec)
+            if float(crng.random()) < fraction
+            else s
+            for s in subs
+        ]
     events: tuple[NodeEvent, ...] = ()
     span = times[-1] if times else 1.0
     if chaos is not None:
@@ -438,6 +492,11 @@ def generate_trace(
         meta["chaos"] = {
             k: list(v) if isinstance(v, tuple) else v
             for k, v in dict(chaos).items()
+        }
+    if cycling is not None:
+        meta["cycling"] = {
+            k: list(v) if isinstance(v, tuple) else v
+            for k, v in dict(cycling).items()
         }
     if topology_spec is not None:
         meta["topology"] = {

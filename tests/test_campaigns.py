@@ -378,16 +378,20 @@ def test_deviation_vs_exact_baseline():
             {"technique": "heft", "size": size, "makespan": exact_ms * 1.10},
             {"technique": "olb", "size": size, "makespan": exact_ms * 1.50},
         ]
-    # a group with no exact baseline must be dropped, not crash
+    # a group with no exact baseline is kept, flagged "skipped" (a MILP
+    # cell filtered by the size ceiling is the paper's '-' entry)
     rows.append({"technique": "heft", "size": 50, "makespan": 99.0})
     rs = ResultSet.from_rows(rows, meta={"coords": ["technique", "size"]})
     dev = rs.deviation_vs("milp")
-    assert len(dev) == 6  # the size-50 group is gone
+    assert len(dev) == 7
     by_tech = {
-        (r["technique"], r["size"]): r["gap_pct"] for r in dev
+        (r["technique"], r["size"]): r for r in dev
     }
-    assert by_tech[("heft", 5)] == pytest.approx(10.0)
-    assert by_tech[("olb", 10)] == pytest.approx(50.0)
+    assert by_tech[("heft", 5)]["gap_pct"] == pytest.approx(10.0)
+    assert by_tech[("heft", 5)]["baseline_status"] == "ok"
+    assert by_tech[("olb", 10)]["gap_pct"] == pytest.approx(50.0)
+    assert by_tech[("heft", 50)]["baseline_status"] == "skipped"
+    assert by_tech[("heft", 50)]["gap_pct"] is None
     rep = rs.deviation_report("milp")
     rep_rows = {r["technique"]: r for r in rep}
     assert rep_rows["milp"]["gap_pct_mean"] == pytest.approx(0.0)
